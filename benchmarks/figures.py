@@ -1,0 +1,312 @@
+"""Paper-figure benchmarks (one function per table/figure of §5).
+
+Each returns a dict of measurements; run.py prints CSV.  Comparator
+baselines are honest analogs implemented on our own runtime:
+
+* "subprocess"          — fig 7a's Linux vfork+exec comparator.
+* "client-driven"       — fig 7b/9's Ray-like mode: the client performs a
+  round trip per dependency resolution (dependencies coupled to the client).
+* "blocking-style"      — fig 9: one coarse invocation that faults in every
+  node's full data level by level (Ray blocking-get analog).
+* "internal I/O"        — fig 8a/8b ablation: worker slots are bound before
+  dependencies arrive (status-quo serverless).
+* "no locality"         — fig 8b ablation: random placement.
+"""
+from __future__ import annotations
+
+import struct
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+from repro.core import Evaluator, Handle, Repository
+from repro.core.stdlib import combination
+from repro.runtime import Cluster, Link, Network
+
+
+def _i(v: int) -> Handle:
+    return Handle.blob(v.to_bytes(8, "little", signed=True))
+
+
+def _int_of(repo, h) -> int:
+    return int.from_bytes(repo.get_blob(h), "little", signed=True)
+
+
+# ------------------------------------------------------------------ fig 7a
+def fig7a_invocation(n: int = 4096) -> dict:
+    """Invocation overhead of add(i8, i8): static call / Fix / subprocess."""
+    # static python call
+    f = lambda a, b: a + b
+    t0 = time.perf_counter_ns()
+    acc = 0
+    for i in range(n):
+        acc = f(acc & 0xFF, i & 0xFF)
+    static_ns = (time.perf_counter_ns() - t0) / n
+
+    # Fix evaluation (fresh thunk each time: full reduction path)
+    repo = Repository()
+    ev = Evaluator(repo)
+    ev.evaluate(combination(repo, "add", _i(1), _i(2)).strict())  # warm
+    t0 = time.perf_counter_ns()
+    for i in range(n):
+        ev.evaluate(combination(repo, "add", _i(i), _i(i + 1)).strict())
+    fix_ns = (time.perf_counter_ns() - t0) / n
+
+    # memo-hit path (pay-for-results: repeated work is free)
+    th = combination(repo, "add", _i(7), _i(8)).strict()
+    ev.evaluate(th)
+    t0 = time.perf_counter_ns()
+    for _ in range(n):
+        ev.evaluate(th)
+    memo_ns = (time.perf_counter_ns() - t0) / n
+
+    # subprocess (vfork+exec analog) — fewer reps, it's slow
+    reps = 64
+    t0 = time.perf_counter_ns()
+    for i in range(reps):
+        subprocess.run([sys.executable, "-c", "import sys;sys.exit(0)"],
+                       check=True, capture_output=True)
+    proc_ns = (time.perf_counter_ns() - t0) / reps
+
+    return {
+        "static_us": static_ns / 1e3,
+        "fix_us": fix_ns / 1e3,
+        "fix_memo_us": memo_ns / 1e3,
+        "subprocess_us": proc_ns / 1e3,
+        "slowdown_subprocess_vs_fix": proc_ns / fix_ns,
+    }
+
+
+# ------------------------------------------------------------------ fig 7b
+def fig7b_chain(length: int = 500) -> dict:
+    """500-deep chain: one self-describing submission vs a client round
+    trip per call, near (0.2 ms) and far (5 ms) client."""
+    out = {}
+    for label, lat in (("near", 0.0002), ("far", 0.005)):
+        net = Network(Link(latency_s=0.0002, gbps=10),
+                      overrides={("client", f"n{i}"): Link(lat, 10) for i in range(2)}
+                      | {(f"n{i}", "client"): Link(lat, 10) for i in range(2)})
+        c = Cluster(n_nodes=2, workers_per_node=2, network=net)
+        try:
+            # Fix: the whole chain is one thunk (tail calls stay server-side)
+            th = combination(c.client_repo, "inc_chain", _i(0), _i(length))
+            t0 = time.perf_counter()
+            r = c.evaluate(th.strict(), timeout=120)
+            fix_s = time.perf_counter() - t0
+            assert _int_of(c.fetch_result(r), r) == length
+            # client-driven: one submission per step, client latency each way
+            t0 = time.perf_counter()
+            v = 0
+            for _ in range(length):
+                time.sleep(lat)  # request leaves the client
+                step = combination(c.client_repo, "add", _i(v), _i(1))
+                rr = c.evaluate(step.strict(), timeout=120)
+                v = _int_of(c.fetch_result(rr), rr)
+            client_s = time.perf_counter() - t0
+            assert v == length
+            out[f"fix_{label}_s"] = fix_s
+            out[f"client_driven_{label}_s"] = client_s
+            out[f"speedup_{label}"] = client_s / fix_s
+        finally:
+            c.shutdown()
+    return out
+
+
+# ------------------------------------------------------------------ fig 8a
+def fig8a_late_binding(n_jobs: int = 256, storage_latency: float = 0.15,
+                       workers: int = 16) -> dict:
+    """Jobs depend on remote-storage inputs (150 ms).  Externalized I/O
+    fetches before binding a slot; internal I/O holds the slot while
+    fetching (CPU-starved, like status-quo serverless)."""
+    out = {}
+    for mode, oversub in (("external", 1), ("internal", 2)):
+        net = Network(Link(latency_s=0.0002, gbps=10),
+                      overrides={("s0", "n0"): Link(storage_latency, 10)})
+        c = Cluster(n_nodes=1, workers_per_node=workers, io_mode=mode,
+                    oversubscribe=oversub, storage_nodes=("s0",), network=net)
+        try:
+            inputs = []
+            for i in range(n_jobs):
+                payload = i.to_bytes(8, "little", signed=True) + b"\x00" * 56
+                h = c.nodes["s0"].repo.put_blob(payload)
+                inputs.append(h)
+            c.reset_accounting()
+            t0 = time.perf_counter()
+            futs = [c.submit(combination(c.client_repo, "count_string",
+                                         h, Handle.blob(b"\x00")).strict())
+                    for h in inputs]
+            for f in futs:
+                f.result(timeout=300)
+            dt = time.perf_counter() - t0
+            util = c.utilization(dt)
+            out[f"{mode}_s"] = dt
+            out[f"{mode}_idle_iowait_frac"] = round(util["idle_iowait_frac"], 3)
+        finally:
+            c.shutdown()
+    out["speedup"] = out["internal_s"] / out["external_s"]
+    return out
+
+
+# ------------------------------------------------------------------ fig 8b
+def fig8b_wordcount(n_shards: int = 48, shard_mb: float = 16.0,
+                    n_nodes: int = 10, workers: int = 4) -> dict:
+    """Count a 3-char needle over shards scattered across the cluster, then
+    binary-reduce.  locality vs no-locality vs no-locality+internal-I/O."""
+    rng = np.random.default_rng(0)
+    shard_bytes = [rng.integers(97, 123, int(shard_mb * 1e6)).astype(np.uint8).tobytes()
+                   for _ in range(n_shards)]
+    needle = b"abc"
+    expected = sum(s.count(needle) for s in shard_bytes)
+
+    results = {}
+    cases = [("fix", "locality", "external"),
+             ("no_locality", "random", "external"),
+             ("internal_io", "random", "internal")]
+    for label, placement, io_mode in cases:
+        net = Network(Link(latency_s=0.001, gbps=0.5))  # 0.5 Gb/s: moving a
+        # shard costs ~128 ms — locality matters, like the paper's cluster
+        c = Cluster(n_nodes=n_nodes, workers_per_node=workers,
+                    placement=placement, io_mode=io_mode,
+                    oversubscribe=2 if io_mode == "internal" else 1,
+                    network=net, seed=1)
+        try:
+            handles = []
+            for i, sb in enumerate(shard_bytes):  # scatter round-robin
+                node = c.nodes[f"n{i % n_nodes}"]
+                handles.append(node.repo.put_blob(sb))
+            c.reset_accounting()
+            t0 = time.perf_counter()
+            counts = [combination(c.client_repo, "count_string", h,
+                                  Handle.blob(needle)) for h in handles]
+            # binary reduction tree of merge_counts thunks
+            level = [t.strict() for t in counts]
+            while len(level) > 1:
+                nxt = []
+                for i in range(0, len(level) - 1, 2):
+                    m = combination(c.client_repo, "merge_counts",
+                                    level[i], level[i + 1])
+                    nxt.append(m.strict())
+                if len(level) % 2:
+                    nxt.append(level[-1])
+                level = nxt
+            r = c.evaluate(level[0], timeout=600)
+            dt = time.perf_counter() - t0
+            got = _int_of(c.fetch_result(r), r)
+            assert got == expected, (got, expected)
+            util = c.utilization(dt)
+            results[f"{label}_s"] = dt
+            results[f"{label}_idle_iowait_frac"] = round(util["idle_iowait_frac"], 3)
+            results[f"{label}_bytes_moved_mb"] = round(c.bytes_moved / 1e6, 1)
+        finally:
+            c.shutdown()
+    results["locality_speedup"] = results["no_locality_s"] / results["fix_s"]
+    return results
+
+
+# ------------------------------------------------------------------- fig 9
+def fig9_btree(n_keys: int = 20_000, lookups: int = 50) -> dict:
+    """B+-tree traversal granularity: Fix selections vs blocking-style
+    (fetch whole node data per level) vs client-driven fine-grained."""
+    import bisect
+
+    sys.path.insert(0, "examples")
+    from btree_kv import build_btree, fix_lookup
+
+    keys = [f"key{i:08d}".encode() for i in range(n_keys)]
+    values = [f"value-{i}".encode() * 3 for i in range(n_keys)]
+    out = {}
+    for arity in (64, 256):
+        repo = Repository()
+        ev = Evaluator(repo)
+        root, depth = build_btree(repo, keys, values, arity)
+
+        t0 = time.perf_counter()
+        for i in range(0, n_keys, max(n_keys // lookups, 1)):
+            val, _steps = fix_lookup(repo, ev, root, keys[i])
+            assert val == values[i]
+        fix_us = (time.perf_counter() - t0) / lookups * 1e6
+
+        # blocking-style: materialize every child's data at each level
+        def blocking_lookup(root, key):
+            node = root
+            while True:
+                kids = repo.get_tree(node)
+                _ = [repo.raw_payload(k) for k in kids]  # fetch ALL children
+                ks = repo.get_blob(kids[0]).split(b"\x00")
+                idx = max(bisect.bisect_right(ks, key) - 1, 0)
+                child = kids[idx + 1]
+                if child.content_type == 0:
+                    return repo.get_blob(child)
+                node = child
+
+        t0 = time.perf_counter()
+        for i in range(0, n_keys, max(n_keys // lookups, 1)):
+            assert blocking_lookup(root, keys[i]) == values[i]
+        blocking_us = (time.perf_counter() - t0) / lookups * 1e6
+
+        out[f"arity{arity}_fix_us"] = round(fix_us, 1)
+        out[f"arity{arity}_blocking_us"] = round(blocking_us, 1)
+        out[f"arity{arity}_depth"] = depth
+    return out
+
+
+# ------------------------------------------------------------------ fig 10
+def fig10_burst_compile(n_units: int = 24, fetch_latency: float = 0.1) -> dict:
+    """Burst-parallel compilation analog: every unit depends on a source
+    blob behind a 100 ms storage link (paper: C files + headers), plus a
+    small local codegen step.  The container has ONE core, so the contrast
+    under test is I/O orchestration (the paper's, too):
+
+    * fix           — externalized I/O: the platform prefetches all inputs
+                      before binding slots; latencies fully overlap.
+    * internal_io   — slots are held during each fetch (status-quo FaaS).
+    * client_serial — one submission at a time (no platform visibility).
+    """
+    from repro.core import register
+    from repro.core.api import FixAPI
+
+    if "compile_unit" not in __import__("repro.core.procedures", fromlist=["x"])._NAMES.values():
+        @register("compile_unit")
+        def _compile_unit(api: FixAPI, comb: Handle) -> Handle:
+            kids = api.read_tree(comb)
+            src = api.read_blob(kids[2])  # the "source file"
+            a = np.frombuffer(src[:4096], dtype=np.uint8).astype(np.float64)
+            a = np.tanh(a.reshape(64, 64) @ a.reshape(64, 64).T / 500.0)
+            return api.create_int(int(a.sum() * 1000) & 0x7FFFFFFF)
+
+    def make_cluster(io_mode):
+        net = Network(Link(latency_s=0.001, gbps=10),
+                      overrides={("s0", f"n{i}"): Link(fetch_latency, 10)
+                                 for i in range(4)})
+        return Cluster(n_nodes=4, workers_per_node=2, io_mode=io_mode,
+                       oversubscribe=2 if io_mode == "internal" else 1,
+                       storage_nodes=("s0",), network=net)
+
+    rng = np.random.default_rng(0)
+    out = {}
+    for label, io_mode, serial in (("fix", "external", False),
+                                   ("internal_io", "internal", False),
+                                   ("client_serial", "external", True)):
+        c = make_cluster(io_mode)
+        try:
+            srcs = [c.nodes["s0"].repo.put_blob(
+                rng.integers(0, 255, 8192).astype(np.uint8).tobytes())
+                for _ in range(n_units)]
+            t0 = time.perf_counter()
+            if serial:
+                for h in srcs:
+                    c.evaluate(combination(c.client_repo, "compile_unit",
+                                           h).strict(), timeout=600)
+            else:
+                futs = [c.submit(combination(c.client_repo, "compile_unit",
+                                             h).strict()) for h in srcs]
+                for f in futs:
+                    f.result(timeout=600)
+            out[f"{label}_s"] = time.perf_counter() - t0
+        finally:
+            c.shutdown()
+    out["speedup_vs_internal"] = out["internal_io_s"] / out["fix_s"]
+    out["speedup_vs_client_serial"] = out["client_serial_s"] / out["fix_s"]
+    return out

@@ -1,0 +1,75 @@
+"""Benchmark harness: one entry per paper table/figure + roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run            # all paper figures
+  PYTHONPATH=src python -m benchmarks.run --fig 8b   # one figure
+  PYTHONPATH=src python -m benchmarks.run --roofline results/dryrun_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from benchmarks import figures  # noqa: E402
+
+FIGS = {
+    "7a": figures.fig7a_invocation,
+    "7b": figures.fig7b_chain,
+    "8a": figures.fig8a_late_binding,
+    "8b": figures.fig8b_wordcount,
+    "9": figures.fig9_btree,
+    "10": figures.fig10_burst_compile,
+}
+
+
+def print_csv(name: str, result: dict) -> None:
+    for k, v in result.items():
+        val = f"{v:.4g}" if isinstance(v, float) else v
+        print(f"{name},{k},{val}")
+
+
+def roofline_table(path: str) -> None:
+    rows = json.load(open(path))
+    print(f"{'arch':20s} {'shape':12s} {'mesh':8s} {'dom':10s} "
+          f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+          f"{'useful':>7s} {'rooffrac':>8s} {'GiB':>7s} fits")
+    for r in rows:
+        if not r["ok"]:
+            print(f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} FAILED: "
+                  f"{r['error'][:80]}")
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        print(f"{r['arch']:20s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{rf['dominant']:10s} {rf['compute_s']:10.3g} "
+              f"{rf['memory_s']:10.3g} {rf['collective_s']:10.3g} "
+              f"{rf['useful_fraction']:7.3f} {rf['roofline_fraction']:8.4f} "
+              f"{m['peak_estimate_bytes']/2**30:7.2f} "
+              f"{'Y' if m['fits_16GiB'] else 'N'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig", action="append", default=None, choices=list(FIGS))
+    ap.add_argument("--roofline", default=None,
+                    help="print the roofline table from a dry-run json")
+    args = ap.parse_args()
+
+    if args.roofline:
+        roofline_table(args.roofline)
+        return
+
+    figs = args.fig or list(FIGS)
+    print("figure,metric,value")
+    for name in figs:
+        t0 = time.time()
+        result = FIGS[name]()
+        print_csv(f"fig{name}", result)
+        print(f"# fig{name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

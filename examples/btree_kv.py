@@ -1,0 +1,77 @@
+"""B+-tree key-value store on Fix (paper §5.4, fig 9).
+
+The tree is a nest of Fix Trees; a lookup descends node-by-node with
+Selection Thunks, so each step's minimum repository is ONE node (32 bytes
+per child handle) + ONE key array — never the siblings' data.  Compare the
+"blocking" style (fetch whole subtree data at every level).
+
+Run:  PYTHONPATH=src python examples/btree_kv.py
+"""
+import bisect
+import struct
+import time
+
+from repro.core import Evaluator, Handle, Repository
+
+
+def build_btree(repo: Repository, keys, values, arity: int):
+    """Returns (root handle, depth).  Node = Tree [keys_blob, child...]."""
+    leaves = []
+    for i in range(0, len(keys), arity):
+        ks = keys[i : i + arity]
+        vs = values[i : i + arity]
+        kb = repo.put_blob(b"\x00".join(ks))
+        leaves.append((ks[0], repo.put_tree(
+            [kb] + [repo.put_blob(v) for v in vs])))
+    depth = 1
+    level = leaves
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level), arity):
+            grp = level[i : i + arity]
+            kb = repo.put_blob(b"\x00".join(g[0] for g in grp))
+            nxt.append((grp[0][0], repo.put_tree([kb] + [g[1] for g in grp])))
+        level = nxt
+        depth += 1
+    return level[0][1], depth
+
+
+def fix_lookup(repo: Repository, ev: Evaluator, root: Handle, key: bytes):
+    """Descend with Selections: per level, read ONLY the keys blob; the
+    child handles travel as a 32-byte-each tree node."""
+    node = root
+    steps = 0
+    while True:
+        kids = repo.get_tree(node)
+        keys = repo.get_blob(kids[0]).split(b"\x00")
+        idx = max(bisect.bisect_right(keys, key) - 1, 0)
+        pair = repo.put_tree([node, repo.put_blob(struct.pack("<q", idx + 1))])
+        child = ev.evaluate(pair.selection_of().shallow())
+        steps += 1
+        if child.content_type == 0:  # blob leaf => value
+            return repo.get_blob(child.as_object()), steps
+        node = child.as_object()
+
+
+def main() -> None:
+    repo = Repository()
+    ev = Evaluator(repo)
+    n = 50_000
+    keys = [f"key{i:08d}".encode() for i in range(n)]
+    values = [f"value-{i}".encode() * 3 for i in range(n)]
+
+    for arity in (16, 64, 256):
+        root, depth = build_btree(repo, keys, values, arity)
+        t0 = time.perf_counter()
+        hits = 0
+        for i in range(0, n, n // 200):  # 200 random-ish lookups
+            val, steps = fix_lookup(repo, ev, root, keys[i])
+            assert val == values[i]
+            hits += 1
+        dt = (time.perf_counter() - t0) / hits
+        print(f"arity {arity:4d}  depth {depth}  {dt*1e6:8.1f} us/lookup "
+              f"({hits} lookups ok)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: the Fix computation model + Fixpoint runtime + a TPU-pod-scale
+ML framework built on its principles.  See README.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .store import dedup_stats, load_step, load_tree, save_step, save_tree
+__all__ = ["save_tree", "load_tree", "save_step", "load_step", "dedup_stats"]

@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines CONFIG (the exact assigned full-scale config) and
+SMOKE (a reduced same-family config for CPU tests).  SHAPES defines the
+assigned input-shape cells and per-arch applicability (long_500k is
+skipped for pure full-attention archs — quadratic 500k-history work their
+papers don't define; see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from ..models import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    mode: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+ARCHS = [
+    "qwen3_8b", "deepseek_67b", "internlm2_20b", "qwen3_4b",
+    "deepseek_v3_671b", "arctic_480b", "seamless_m4t_medium",
+    "mamba2_780m", "internvl2_26b", "zamba2_7b",
+]
+
+# families with sub-quadratic history handling run the 500k cell
+_SUBQUADRATIC = {"mamba2", "hybrid"}
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f".{arch.replace('-', '_')}", __package__)
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cells_for(arch: str) -> list[ShapeCell]:
+    cfg = get_config(arch)
+    out = []
+    for cell in SHAPES.values():
+        if cell.name == "long_500k" and cfg.family not in _SUBQUADRATIC:
+            continue  # full-attention archs skip 500k decode (documented)
+        out.append(cell)
+    return out
+
+
+def all_cells() -> list[tuple[str, ShapeCell]]:
+    return [(a, c) for a in ARCHS for c in cells_for(a)]

@@ -1,0 +1,22 @@
+"""Snowflake Arctic 480B [hf:Snowflake/snowflake-arctic-base]: 35L d7168
+56H GQA(kv=8) + dense residual MLP in parallel with a 128-expert top-2 MoE
+(expert ff 4864), v32000."""
+import jax.numpy as jnp
+
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe", n_layers=35, d_model=7168, n_heads=56,
+    n_kv_heads=8, d_ff=4864, vocab=32000, n_experts=128, top_k=2,
+    d_ff_expert=4864, dense_residual=True, rope_theta=1e4,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="arctic-smoke", family="moe", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=96, vocab=512, n_experts=8, top_k=2, d_ff_expert=48,
+    dense_residual=True,
+)
+
+# dry-run step configuration for the full-scale cells
+DRYRUN = dict(microbatches=8, remat="full", optimizer="adafactor")

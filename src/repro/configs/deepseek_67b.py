@@ -1,0 +1,16 @@
+"""DeepSeek-67B [arXiv:2401.02954]: llama-arch 95L d8192 64H GQA(kv=8)
+ff22016 v102400."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b", family="dense", n_layers=95, d_model=8192, n_heads=64,
+    n_kv_heads=8, d_ff=22016, vocab=102400, rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-67b-smoke", family="dense", n_layers=3, d_model=128,
+    n_heads=4, n_kv_heads=2, d_ff=320, vocab=512,
+)
+
+# dry-run step configuration for the full-scale cells
+DRYRUN = dict(microbatches=8, remat="dots")

@@ -1,0 +1,28 @@
+"""DeepSeek-V3-671B [arXiv:2412.19437]: 61L d7168 128H MLA, 1 shared + 256
+routed top-8 experts (moe d_ff 2048), v129280, MTP head available.
+
+Deviations (documented in DESIGN.md): all 61 layers are MoE (the real model
+keeps the first 3 dense) so the layer stack scans uniformly; router is
+softmax-top-k (V3 uses sigmoid + bias-corrected grouping)."""
+import jax.numpy as jnp
+
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe", n_layers=61, d_model=7168,
+    n_heads=128, n_kv_heads=128, d_ff=2048, vocab=129280,
+    n_experts=256, top_k=8, d_ff_expert=2048, n_shared_experts=1,
+    mla=True, q_lora_rank=1536, kv_lora_rank=512, rope_head_dim=64,
+    nope_head_dim=128, v_head_dim=128, rope_theta=1e4, mtp=False,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v3-smoke", family="moe", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=64, vocab=512, n_experts=8, top_k=2, d_ff_expert=64,
+    n_shared_experts=1, mla=True, q_lora_rank=32, kv_lora_rank=16,
+    rope_head_dim=8, nope_head_dim=16, v_head_dim=16, mtp=True,
+)
+
+# dry-run step configuration for the full-scale cells
+DRYRUN = dict(microbatches=16, remat="full", optimizer="adafactor")

@@ -1,0 +1,12 @@
+"""InternLM2-20B [arXiv:2403.17297]: 48L d6144 48H GQA(kv=8) ff16384 v92544."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b", family="dense", n_layers=48, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=16384, vocab=92544, rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="internlm2-20b-smoke", family="dense", n_layers=2, d_model=96,
+    n_heads=6, n_kv_heads=2, d_ff=256, vocab=512,
+)

@@ -1,0 +1,14 @@
+"""InternVL2-26B [arXiv:2404.16821]: InternViT-6B frontend (stub: 1024
+patch embeddings at 3200d) + InternLM2-20B text backbone: 48L d6144 48H
+GQA(kv=8) ff16384 v92553."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b", family="vlm", n_layers=48, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=16384, vocab=92553, n_patches=1024, rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke", family="vlm", n_layers=2, d_model=96, n_heads=6,
+    n_kv_heads=2, d_ff=256, vocab=512, n_patches=8,
+)

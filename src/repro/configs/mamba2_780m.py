@@ -1,0 +1,15 @@
+"""Mamba2-780m [arXiv:2405.21060]: 48L d1536 attn-free, ssm_state=128,
+d_inner=3072, 48 SSD heads (headdim 64), v50280."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="mamba2", n_layers=48, d_model=1536, n_heads=1,
+    n_kv_heads=1, d_ff=0, vocab=50280, ssm_state=128, ssm_headdim=64,
+    expand=2, conv_width=4, ssm_chunk=256,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke", family="mamba2", n_layers=2, d_model=64, n_heads=1,
+    n_kv_heads=1, d_ff=0, vocab=512, ssm_state=16, ssm_headdim=16,
+    ssm_chunk=8,
+)

@@ -1,0 +1,13 @@
+"""Qwen3-4B [hf]: 36L d2560 32H GQA(kv=8) ff9728 v151936, qk-norm."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense", n_layers=36, d_model=2560, n_heads=32,
+    n_kv_heads=8, d_ff=9728, vocab=151936, head_dim=128, qk_norm=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-4b-smoke", family="dense", n_layers=2, d_model=96, n_heads=4,
+    n_kv_heads=2, d_ff=192, vocab=512, head_dim=24, qk_norm=True,
+)

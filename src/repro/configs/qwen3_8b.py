@@ -1,0 +1,14 @@
+"""Qwen3-8B [hf:Qwen/Qwen3-8B]: 36L d4096 32H GQA(kv=8) ff12288 v151936,
+qk-norm.  head_dim=128 (Qwen3 uses 128 explicitly)."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", family="dense", n_layers=36, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=12288, vocab=151936, head_dim=128, qk_norm=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-8b-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=2, d_ff=256, vocab=512, head_dim=32, qk_norm=True,
+)

@@ -1,0 +1,16 @@
+"""SeamlessM4T-medium [arXiv:2308.11596] backbone: 12L enc + 12L dec,
+d1024 16H MHA ff4096 v256206.  Audio frontend is a stub (precomputed
+fbank-frame features)."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec", n_layers=0, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=4096, vocab=256206, n_enc_layers=12,
+    n_dec_layers=12, cross_len=4096, rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="seamless-smoke", family="encdec", n_layers=0, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab=512, n_enc_layers=2, n_dec_layers=2,
+    cross_len=16,
+)

@@ -1,0 +1,19 @@
+"""Zamba2-7B [arXiv:2411.15242]: 81 Mamba2 layers d3584 (ssm_state=64,
+d_inner 7168, 112 SSD heads) + ONE shared attention/MLP block (32H MHA,
+head_dim 112, ff14336) applied every 6 SSM layers (13 applications + 3
+tail SSM layers).  long_500k decode uses a 32k KV window for the shared
+blocks; SSM state is O(1)."""
+from ..models import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584, n_heads=32,
+    n_kv_heads=32, d_ff=14336, vocab=32000, ssm_state=64, ssm_headdim=64,
+    expand=2, conv_width=4, ssm_chunk=256, attn_every=6, attn_window=32768,
+    rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid", n_layers=7, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab=512, ssm_state=16, ssm_headdim=16,
+    ssm_chunk=8, attn_every=3, attn_window=0,
+)

@@ -1,0 +1,40 @@
+"""Fix core: the paper's computation model.
+
+Handles (packed 32-byte ABI), content-addressed Repositories with memo
+tables, the Table-1 API as a sealed capability, the codelet registry, and
+the Evaluator implementing Thunk/Encode reduction semantics.
+"""
+from .api import AccessViolation, FixAPI
+from .evaluator import Evaluator, FixError
+from .handle import (
+    APPLICATION,
+    BLOB,
+    Handle,
+    IDENTIFICATION,
+    OBJECT,
+    REF,
+    SELECTION,
+    SHALLOW,
+    STRICT,
+    TREE,
+)
+from .procedures import (
+    handle_for,
+    make_limits,
+    name_of,
+    parse_limits,
+    procedure_blob,
+    register,
+    registered_names,
+    resolve,
+)
+from .repository import Footprint, MissingData, Repository
+
+__all__ = [
+    "AccessViolation", "FixAPI", "Evaluator", "FixError", "Handle",
+    "BLOB", "TREE", "OBJECT", "REF", "APPLICATION", "IDENTIFICATION",
+    "SELECTION", "STRICT", "SHALLOW",
+    "Footprint", "MissingData", "Repository",
+    "register", "resolve", "handle_for", "name_of", "procedure_blob",
+    "registered_names", "make_limits", "parse_limits",
+]

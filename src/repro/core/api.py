@@ -1,0 +1,139 @@
+"""The Table-1 Fix API, as a sealed capability handed to codelets.
+
+A running invocation may only read data reachable as *Objects* from its
+definition Tree — the sealed container.  Refs may be inspected (type/size)
+but not read.  Creating Blobs/Trees and minting Thunks/Encodes is always
+allowed: those are the invocation's outputs and cannot enlarge its own
+footprint (paper §3.3 — a function may create children with different
+minimum repositories but can't change its own).
+
+This enforcement is what the paper gets from Wasm memory-safety; we get it
+from capability discipline at the API boundary, which our property tests
+exercise directly.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Iterable, Sequence
+
+from .handle import BLOB, TREE, Handle
+from .repository import MissingData, Repository
+
+
+class AccessViolation(PermissionError):
+    """A codelet tried to read data outside its sealed container."""
+
+
+class FixAPI:
+    """Capability object passed to codelets as their only I/O surface."""
+
+    __slots__ = ("_repo", "_accessible", "_reads", "_writes")
+
+    def __init__(self, repo: Repository, accessible: set):
+        self._repo = repo
+        self._accessible = accessible  # content keys readable by this codelet
+        self._reads = 0
+        self._writes = 0
+
+    # ------------------------------------------------------------- checks
+    def _check_readable(self, handle: Handle) -> None:
+        if handle.is_literal:
+            return
+        if not handle.is_object():
+            raise AccessViolation(f"not an accessible Object: {handle!r}")
+        if handle.content_key() not in self._accessible:
+            raise AccessViolation(f"outside minimum repository: {handle!r}")
+
+    def _grant(self, handle: Handle) -> None:
+        """Data created by the codelet itself becomes readable to it."""
+        if not handle.is_literal:
+            self._accessible.add(handle.content_key())
+
+    # ------------------------------------------------------------- Table 1
+    def read_blob(self, handle: Handle) -> bytes:
+        if handle.content_type != BLOB:
+            raise AccessViolation("read_blob on a non-blob")
+        self._check_readable(handle)
+        self._reads += 1
+        return self._repo.get_blob(handle)
+
+    def read_tree(self, handle: Handle) -> tuple[Handle, ...]:
+        if handle.content_type != TREE:
+            raise AccessViolation("read_tree on a non-tree")
+        self._check_readable(handle)
+        self._reads += 1
+        return self._repo.get_tree(handle)
+
+    def create_blob(self, payload: bytes) -> Handle:
+        self._writes += 1
+        h = self._repo.put_blob(payload)
+        self._grant(h)
+        return h
+
+    def create_tree(self, children: Sequence[Handle]) -> Handle:
+        self._writes += 1
+        h = self._repo.put_tree(children)
+        self._grant(h)
+        return h
+
+    @staticmethod
+    def application(tree: Handle) -> Handle:
+        return tree.application()
+
+    @staticmethod
+    def identification(value: Handle) -> Handle:
+        return value.identification()
+
+    def selection(self, value: Handle, index: int) -> Handle:
+        """Selection Thunk: pair-tree [target, index] reinterpreted."""
+        pair = self.create_tree([value, self.create_blob(struct.pack("<q", index))])
+        return pair.selection_of()
+
+    @staticmethod
+    def strict(thunk: Handle) -> Handle:
+        return thunk.strict()
+
+    @staticmethod
+    def shallow(thunk: Handle) -> Handle:
+        return thunk.shallow()
+
+    # ------------------------------------------------- metadata inspection
+    @staticmethod
+    def is_blob(h: Handle) -> bool:
+        return h.content_type == BLOB and h.is_data()
+
+    @staticmethod
+    def is_tree(h: Handle) -> bool:
+        return h.content_type == TREE and h.is_data()
+
+    @staticmethod
+    def is_ref(h: Handle) -> bool:
+        return h.is_ref()
+
+    @staticmethod
+    def is_thunk(h: Handle) -> bool:
+        return h.is_thunk()
+
+    @staticmethod
+    def is_encode(h: Handle) -> bool:
+        return h.is_encode()
+
+    @staticmethod
+    def get_size(h: Handle) -> int:
+        """Size is metadata: visible even for Refs (but not Thunks)."""
+        if h.is_thunk() or h.is_encode():
+            raise AccessViolation("thunks are opaque")
+        return h.size
+
+    # -------------------------------------------------------- conveniences
+    # (thin sugar used by our codelets; all expressed via the Table-1 core)
+    def read_int(self, handle: Handle) -> int:
+        data = self.read_blob(handle)
+        return int.from_bytes(data, "little", signed=True)
+
+    def create_int(self, value: int, width: int = 8) -> Handle:
+        return self.create_blob(value.to_bytes(width, "little", signed=True))
+
+    @property
+    def io_counts(self) -> tuple[int, int]:
+        return (self._reads, self._writes)

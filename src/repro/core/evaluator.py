@@ -1,0 +1,217 @@
+"""Fix graph reduction: the semantics of Thunks and Encodes.
+
+The evaluator implements the paper's §3 semantics:
+
+* ``think``   — one reduction step of a Thunk (identification / selection /
+  application).  Application resolves the Encodes inside the definition Tree,
+  seals the container (accessible set = Objects reachable from the resolved
+  definition), and jumps to the codelet.  The codelet may return another
+  Thunk — a tail call — which ``reduce`` trampolines, so 500-deep chains run
+  in constant Python stack.
+* ``reduce``  — Thunk → WHNF (first non-Thunk result).
+* Encodes: ``shallow`` reduces to WHNF and returns a *Ref* (minimum work to
+  make progress); ``strict`` reduces and then recursively descends Trees,
+  evaluating every Thunk and turning every Ref into an accessible Object
+  (maximum work).
+
+Two invariants the runtime relies on (and our tests check):
+
+1. **Non-blocking**: the evaluator never performs I/O.  If data is missing it
+   raises :class:`MissingData`; pre-staging is the scheduler's job (late
+   binding).  A codelet, once entered, always runs to completion.
+2. **Determinism + memoization**: every (Thunk → result) and (Encode →
+   result) pair is recorded first-write-wins in the repository's memo table,
+   so duplicated (straggler/speculative) execution is free of side effects.
+"""
+from __future__ import annotations
+
+import struct
+import time
+from typing import Optional
+
+from .api import FixAPI
+from .handle import (
+    APPLICATION,
+    BLOB,
+    Handle,
+    IDENTIFICATION,
+    SELECTION,
+    SHALLOW,
+    STRICT,
+    TREE,
+)
+from .procedures import resolve, name_of
+from .repository import MissingData, Repository
+
+
+class FixError(RuntimeError):
+    pass
+
+
+class Evaluator:
+    __slots__ = ("repo", "applications", "reductions", "codelet_seconds")
+
+    def __init__(self, repo: Repository):
+        self.repo = repo
+        self.applications = 0  # codelet invocations
+        self.reductions = 0  # total thunk reduction steps
+        self.codelet_seconds = 0.0
+
+    # ----------------------------------------------------------- evaluate
+    def evaluate(self, handle: Handle) -> Handle:
+        """Fully (strictly) evaluate any handle — the top-level entry."""
+        if handle.is_encode():
+            return self.eval_encode(handle)
+        if handle.is_thunk():
+            return self.strictify(self.reduce(handle))
+        return self.strictify(handle)
+
+    # ------------------------------------------------------------- encode
+    def eval_encode(self, encode: Handle) -> Handle:
+        memo = self.repo.memo_get(encode)
+        if memo is not None:
+            return memo
+        thunk = encode.unwrap_encode()
+        whnf = self.reduce(thunk)
+        if encode.interp == STRICT:
+            result = self.strictify(whnf)
+        else:  # SHALLOW: minimum progress; hand back a Ref, not the bytes
+            result = whnf.as_ref() if whnf.is_data() else whnf
+        self.repo.memo_put(encode, result)
+        return result
+
+    # ------------------------------------------------------------- reduce
+    def reduce(self, thunk: Handle) -> Handle:
+        """Trampoline a Thunk to WHNF (tail calls don't grow the stack)."""
+        current = thunk
+        trail: list[Handle] = []
+        while current.is_thunk():
+            memo = self.repo.memo_get(current)
+            if memo is not None:
+                current = memo
+                continue
+            trail.append(current)
+            self.reductions += 1
+            current = self._think(current)
+        for t in trail:  # every intermediate thunk memoizes the final WHNF
+            self.repo.memo_put(t, current)
+        return current
+
+    # -------------------------------------------------------------- think
+    def _think(self, thunk: Handle) -> Handle:
+        interp = thunk.interp
+        if interp == IDENTIFICATION:
+            return thunk.unwrap_thunk().as_object()
+        if interp == SELECTION:
+            return self._select(thunk)
+        if interp == APPLICATION:
+            return self._apply(thunk)
+        raise FixError(f"not a thunk: {thunk!r}")
+
+    def _select(self, thunk: Handle) -> Handle:
+        pair = self.repo.get_tree(thunk.unwrap_thunk())
+        if len(pair) != 2:
+            raise FixError("selection thunks take a [target, index] pair")
+        target, idx_h = pair
+        idx_raw = self.repo.get_blob(idx_h)
+        if target.is_encode():
+            target = self.eval_encode(target)
+        if target.is_thunk():
+            target = self.reduce(target)
+        if len(idx_raw) == 8:  # single-element selection
+            (i,) = struct.unpack("<q", idx_raw)
+            if target.content_type == TREE:
+                kids = self.repo.get_tree(target)
+                if not (0 <= i < len(kids)):
+                    raise FixError(f"selection index {i} out of range {len(kids)}")
+                return kids[i]
+            payload = self.repo.get_blob(target)
+            return Handle.blob(payload[i : i + 1])
+        if len(idx_raw) == 16:  # subrange selection [start, count)
+            start, count = struct.unpack("<qq", idx_raw)
+            if target.content_type == TREE:
+                kids = self.repo.get_tree(target)
+                return self.repo.put_tree(kids[start : start + count])
+            payload = self.repo.get_blob(target)
+            return self.repo.put_blob(payload[start : start + count])
+        raise FixError("selection index must be 8 (index) or 16 (range) bytes")
+
+    def _apply(self, thunk: Handle) -> Handle:
+        definition = thunk.unwrap_thunk()
+        resolved = self._resolve_encodes(definition)
+        kids = self.repo.get_tree(resolved)
+        if len(kids) < 2:
+            raise FixError("combination needs [limits, procedure, ...]")
+        proc = kids[1]
+        if proc.content_type != BLOB:
+            raise FixError("procedure must be a blob")
+        fn = resolve(proc)
+        if fn is None:
+            raise FixError(f"unknown procedure {proc!r}")
+        # Seal the container: everything reachable as Objects from the
+        # resolved definition — and nothing else — is readable.
+        fp = self.repo.footprint(resolved)
+        api = FixAPI(self.repo, set(fp.data))
+        self.applications += 1
+        t0 = time.perf_counter_ns()
+        try:
+            out = fn(api, resolved)
+        except (MissingData, FixError):
+            raise
+        except Exception as e:  # noqa: BLE001 — codelet fault, not runtime fault
+            raise FixError(f"codelet {name_of(proc)!r} failed: {e!r}") from e
+        self.codelet_seconds += (time.perf_counter_ns() - t0) * 1e-9
+        if not isinstance(out, Handle):
+            raise FixError(f"codelet {name_of(proc)!r} returned {type(out)}")
+        return out
+
+    def _resolve_encodes(self, tree_handle: Handle) -> Handle:
+        """Replace every Encode inside the definition Tree with its result."""
+        kids = self.repo.get_tree(tree_handle)
+        changed = False
+        new_kids = []
+        for k in kids:
+            if k.is_encode():
+                nk = self.eval_encode(k)
+            elif k.content_type == TREE and k.is_object():
+                nk = self._resolve_encodes(k)
+            else:
+                nk = k
+            changed |= nk.raw != k.raw
+            new_kids.append(nk)
+        if not changed:
+            return tree_handle
+        return self.repo.put_tree(new_kids)
+
+    # ---------------------------------------------------------- strictify
+    def strictify(self, handle: Handle) -> Handle:
+        """Strict evaluation of data: Trees descended, Thunks run, Refs
+        promoted to Objects (their bytes must be / become resident)."""
+        if handle.is_encode():
+            return self.strictify(self.eval_encode(handle))
+        if handle.is_thunk():
+            return self.strictify(self.reduce(handle))
+        if handle.content_type == BLOB:
+            if not self.repo.contains(handle):
+                raise MissingData(handle)
+            return handle.as_object()
+        memo_key = b"S" + handle.raw
+        cached = self.repo._memo.get(memo_key)
+        if cached is not None:
+            return cached
+        kids = self.repo.get_tree(handle)
+        new_kids = [self.strictify(k) for k in kids]
+        if all(nk.raw == k.raw for nk, k in zip(new_kids, kids)):
+            out = handle.as_object()
+        else:
+            out = self.repo.put_tree(new_kids)
+        self.repo._memo.setdefault(memo_key, out)
+        return out
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "applications": self.applications,
+            "reductions": self.reductions,
+            "codelet_seconds": self.codelet_seconds,
+        }

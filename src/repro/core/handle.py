@@ -1,0 +1,266 @@
+"""Fix Handle ABI: the packed 32-byte representation of every Fix value.
+
+This is the paper's binary representation (sec 3.2): a truncated 192-bit
+hash of the referent's canonical bytes, a 48-bit size field, and 16 bits of
+type/metadata.  Blobs of 30 bytes or fewer are stored as *literals*, with the
+payload placed directly inside the handle.
+
+Layout (32 bytes, little-endian fields)::
+
+    non-literal:  [ 0:24] blake2b-192 digest of canonical content
+                  [24:30] size (uint48)   blob: byte length / tree: child count
+                  [30:32] metadata (uint16)
+    literal:      [ 0:30] payload, zero padded
+                  [30:32] metadata (uint16, literal bit set, length in meta)
+
+Metadata bits::
+
+    bits  0-1   content type        0=BLOB  1=TREE
+    bits  2-4   interpretation      0=OBJECT 1=REF 2=APPLICATION
+                                    3=IDENTIFICATION 4=SELECTION
+                                    5=STRICT 6=SHALLOW
+    bits  5-6   encode sub-kind     (underlying thunk interp - 2;
+                                     valid when interpretation is an Encode)
+    bit   7     literal flag
+    bits  8-12  literal length (0..30)
+
+A Handle is a *value*: equality and hashing are over the full 32 bytes, so a
+Tree's canonical bytes are simply the concatenation of its children's
+handles, and an Application Thunk over a Tree is the Tree's digest with
+different metadata — creating a Thunk or an Encode is a metadata bit-flip,
+never a hash or a copy.  This is what lets Fix ship dependency information
+*with* the data defining a function ("parsed anywhere, no round-trips").
+
+The real Fix uses BLAKE3; we use ``hashlib.blake2b(digest_size=24)`` which is
+the same construction family, keyed availability in the stdlib, and the same
+truncated-192-bit strength.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Iterable
+
+HANDLE_SIZE = 32
+DIGEST_SIZE = 24
+LITERAL_MAX = 30
+
+# content types
+BLOB = 0
+TREE = 1
+
+# interpretations
+OBJECT = 0
+REF = 1
+APPLICATION = 2
+IDENTIFICATION = 3
+SELECTION = 4
+STRICT = 5
+SHALLOW = 6
+
+_THUNK_INTERPS = (APPLICATION, IDENTIFICATION, SELECTION)
+_ENCODE_INTERPS = (STRICT, SHALLOW)
+
+_INTERP_NAMES = {
+    OBJECT: "object", REF: "ref", APPLICATION: "application",
+    IDENTIFICATION: "identification", SELECTION: "selection",
+    STRICT: "strict", SHALLOW: "shallow",
+}
+
+
+def _hash(data: bytes) -> bytes:
+    return hashlib.blake2b(data, digest_size=DIGEST_SIZE).digest()
+
+
+class Handle:
+    """An immutable 32-byte Fix handle."""
+
+    __slots__ = ("raw",)
+
+    def __init__(self, raw: bytes):
+        if len(raw) != HANDLE_SIZE:
+            raise ValueError(f"handle must be {HANDLE_SIZE} bytes, got {len(raw)}")
+        object.__setattr__(self, "raw", bytes(raw))
+
+    # -- construction -----------------------------------------------------
+    @staticmethod
+    def _pack(digest: bytes, size: int, meta: int) -> "Handle":
+        if size >= 1 << 48:
+            raise ValueError("size exceeds 48 bits")
+        return Handle(digest + size.to_bytes(6, "little") + meta.to_bytes(2, "little"))
+
+    @staticmethod
+    def literal_blob(payload: bytes) -> "Handle":
+        if len(payload) > LITERAL_MAX:
+            raise ValueError("literal blobs hold at most 30 bytes")
+        meta = (BLOB) | (OBJECT << 2) | (1 << 7) | (len(payload) << 8)
+        body = payload + b"\x00" * (LITERAL_MAX - len(payload))
+        return Handle(body + meta.to_bytes(2, "little"))
+
+    @staticmethod
+    def blob(payload: bytes) -> "Handle":
+        """Canonical handle for a blob (literal if small enough)."""
+        if len(payload) <= LITERAL_MAX:
+            return Handle.literal_blob(payload)
+        meta = (BLOB) | (OBJECT << 2)
+        return Handle._pack(_hash(payload), len(payload), meta)
+
+    @staticmethod
+    def tree(children: Iterable["Handle"]) -> "Handle":
+        kids = list(children)
+        canon = b"".join(k.raw for k in kids)
+        meta = (TREE) | (OBJECT << 2)
+        return Handle._pack(_hash(canon), len(kids), meta)
+
+    # -- metadata accessors ------------------------------------------------
+    @property
+    def meta(self) -> int:
+        return int.from_bytes(self.raw[30:32], "little")
+
+    @property
+    def content_type(self) -> int:
+        return self.meta & 0b11
+
+    @property
+    def interp(self) -> int:
+        return (self.meta >> 2) & 0b111
+
+    @property
+    def encode_subkind(self) -> int:
+        """Underlying thunk interpretation for an Encode handle."""
+        return ((self.meta >> 5) & 0b11) + 2
+
+    @property
+    def is_literal(self) -> bool:
+        return bool(self.meta & (1 << 7))
+
+    @property
+    def size(self) -> int:
+        """Blob: byte length.  Tree: number of children."""
+        if self.is_literal:
+            return (self.meta >> 8) & 0b11111
+        return int.from_bytes(self.raw[24:30], "little")
+
+    @property
+    def digest(self) -> bytes:
+        if self.is_literal:
+            raise ValueError("literal handles have no digest")
+        return self.raw[0:24]
+
+    def literal_payload(self) -> bytes:
+        if not self.is_literal:
+            raise ValueError("not a literal handle")
+        return self.raw[0 : self.size]
+
+    # -- type predicates ----------------------------------------------------
+    def is_blob(self) -> bool:
+        return self.content_type == BLOB and self.interp in (OBJECT, REF)
+
+    def is_tree(self) -> bool:
+        return self.content_type == TREE and self.interp in (OBJECT, REF)
+
+    def is_object(self) -> bool:
+        return self.interp == OBJECT
+
+    def is_ref(self) -> bool:
+        return self.interp == REF
+
+    def is_thunk(self) -> bool:
+        return self.interp in _THUNK_INTERPS
+
+    def is_encode(self) -> bool:
+        return self.interp in _ENCODE_INTERPS
+
+    def is_data(self) -> bool:
+        return self.interp in (OBJECT, REF)
+
+    # -- metadata bit-flips (the cheap Fix constructors) --------------------
+    def _with_meta(self, meta: int) -> "Handle":
+        return Handle(self.raw[:30] + meta.to_bytes(2, "little"))
+
+    def _base_meta(self) -> int:
+        """Metadata minus interpretation/subkind bits (keeps literal bits)."""
+        return self.meta & ~((0b111 << 2) | (0b11 << 5))
+
+    def as_object(self) -> "Handle":
+        """Reinterpret data as accessible (used by the runtime, not users)."""
+        if not self.is_data():
+            raise ValueError("only data handles have object/ref forms")
+        return self._with_meta(self._base_meta() | (OBJECT << 2))
+
+    def as_ref(self) -> "Handle":
+        if not self.is_data():
+            raise ValueError("only data handles have object/ref forms")
+        return self._with_meta(self._base_meta() | (REF << 2))
+
+    def identification(self) -> "Handle":
+        """Thunk applying the identity function to this data handle."""
+        if not self.is_data():
+            raise ValueError("identification target must be data")
+        return self._with_meta(self._base_meta() | (IDENTIFICATION << 2))
+
+    def application(self) -> "Handle":
+        """Thunk applying the combination described by this Tree.
+
+        The tree is the thunk's *definition*: by convention
+        ``[resource_limits, procedure, arg...]``.
+        """
+        if self.content_type != TREE or not self.is_data():
+            raise ValueError("application target must be a tree")
+        return self._with_meta(self._base_meta() | (APPLICATION << 2))
+
+    def selection_of(self) -> "Handle":
+        """Thunk selecting from the pair-tree ``[target, index]`` (see api.py)."""
+        if self.content_type != TREE or not self.is_data():
+            raise ValueError("selection target must be a pair tree")
+        return self._with_meta(self._base_meta() | (SELECTION << 2))
+
+    def strict(self) -> "Handle":
+        if not self.is_thunk():
+            raise ValueError("encodes may only refer to thunks")
+        sub = self.interp - 2
+        return self._with_meta(self._base_meta() | (STRICT << 2) | (sub << 5))
+
+    def shallow(self) -> "Handle":
+        if not self.is_thunk():
+            raise ValueError("encodes may only refer to thunks")
+        sub = self.interp - 2
+        return self._with_meta(self._base_meta() | (SHALLOW << 2) | (sub << 5))
+
+    def unwrap_encode(self) -> "Handle":
+        """Encode -> the Thunk it requests evaluation of."""
+        if not self.is_encode():
+            raise ValueError("not an encode")
+        sub = self.encode_subkind
+        return self._with_meta(self._base_meta() | (sub << 2))
+
+    def unwrap_thunk(self) -> "Handle":
+        """Thunk -> its target data handle (definition tree / identified value)."""
+        if not self.is_thunk():
+            raise ValueError("not a thunk")
+        return self._with_meta(self._base_meta() | (OBJECT << 2))
+
+    # -- identity ------------------------------------------------------------
+    def content_key(self) -> bytes:
+        """Key identifying the underlying *content* (ignores interpretation).
+
+        Used by repositories: an Object and a Ref to the same bytes share
+        storage; a Thunk shares storage with its definition Tree.
+        """
+        if self.is_literal:
+            return self.raw[0:30] + bytes([self.meta & 0b11, 1])
+        return self.raw[0:24] + bytes([self.meta & 0b11, 0])
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, Handle) and self.raw == other.raw
+
+    def __hash__(self) -> int:
+        return hash(self.raw)
+
+    def __repr__(self) -> str:
+        kind = "blob" if self.content_type == BLOB else "tree"
+        interp = _INTERP_NAMES[self.interp]
+        if self.is_encode:
+            pass
+        if self.is_literal:
+            return f"<{interp} literal-{kind} {self.literal_payload()!r}>"
+        return f"<{interp} {kind} size={self.size} {self.raw[:6].hex()}>"

@@ -1,0 +1,83 @@
+"""Procedure (codelet) registry.
+
+In the paper, procedures are machine codelets: Wasm modules AOT-compiled by a
+trusted toolchain into sandboxed x86-64 ELF objects, invoked through
+``_fix_apply``.  Our codelets are deterministic Python callables (usually
+wrapping ``jax.jit``-compiled XLA programs — *our* trusted toolchain).  A
+procedure is named by a content-addressed Blob; the registry maps that blob's
+content to the callable, mirroring Fixpoint's in-memory ELF linker: resolving
+a procedure handle to an entrypoint is a dict lookup, off the critical path.
+
+Codelets receive ``(api, combination)`` where ``api`` is a sealed
+:class:`~repro.core.api.FixAPI` capability and ``combination`` is the Handle
+of the Thunk's definition Tree ``[resource_limits, procedure, arg...]``.
+They return a Handle — data, or another Thunk (tail call).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from .handle import Handle
+
+# content_key of the procedure blob -> callable(api, tree_handle) -> Handle
+_REGISTRY: dict[bytes, Callable] = {}
+_NAMES: dict[bytes, str] = {}
+
+
+def procedure_blob(name: str) -> bytes:
+    """Canonical bytes identifying a registered procedure."""
+    return b"fix/proc/" + name.encode()
+
+
+def register(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register ``fn`` as the codelet for procedure ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        payload = procedure_blob(name)
+        key = Handle.blob(payload).content_key()
+        if key in _REGISTRY and _REGISTRY[key] is not fn:
+            raise ValueError(f"procedure {name!r} already registered")
+        _REGISTRY[key] = fn
+        _NAMES[key] = name
+        fn.fix_procedure_name = name
+        return fn
+
+    return deco
+
+
+def handle_for(repo, name: str) -> Handle:
+    """Store the procedure blob in ``repo`` and return its Handle."""
+    return repo.put_blob(procedure_blob(name))
+
+
+def resolve(handle: Handle) -> Optional[Callable]:
+    return _REGISTRY.get(handle.content_key())
+
+
+def name_of(handle: Handle) -> Optional[str]:
+    return _NAMES.get(handle.content_key())
+
+
+def registered_names() -> list[str]:
+    return sorted(_NAMES.values())
+
+
+# --------------------------------------------------------------------------
+# Resource limits: the first element of every Application combination.
+# A 16-byte blob: uint64 RAM bytes, uint32 cpu slots, uint32 flags.
+# The runtime uses this for late binding — a worker slot plus this much
+# memory is claimed only once the minimum repository is resident.
+# --------------------------------------------------------------------------
+
+def make_limits(ram_bytes: int = 1 << 20, cpu_slots: int = 1, flags: int = 0) -> bytes:
+    return ram_bytes.to_bytes(8, "little") + cpu_slots.to_bytes(4, "little") + flags.to_bytes(4, "little")
+
+
+def parse_limits(payload: bytes) -> dict:
+    if len(payload) != 16:
+        raise ValueError("resource-limit blobs are 16 bytes")
+    return {
+        "ram_bytes": int.from_bytes(payload[0:8], "little"),
+        "cpu_slots": int.from_bytes(payload[8:12], "little"),
+        "flags": int.from_bytes(payload[12:16], "little"),
+    }

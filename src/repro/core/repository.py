@@ -1,0 +1,299 @@
+"""Content-addressed repository: Fix's storage substrate.
+
+A Repository holds Blobs (bytes) and Trees (tuples of Handles), keyed by
+``Handle.content_key()`` so an Object, a Ref, and a Thunk over the same bytes
+share storage.  It also holds the *memo table* — the map from Thunks/Encodes
+to their evaluation results — which is what makes Fix's deterministic
+computations memoizable ("pay-for-results": a result computed anywhere is a
+result computed everywhere).
+
+The reachability analysis here is the paper's "minimum repository" (§3.3):
+the complete set of data an invocation may touch, computable from the handle
+alone before the task runs.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+from .handle import (
+    BLOB,
+    TREE,
+    Handle,
+    OBJECT,
+    REF,
+)
+
+
+@dataclass
+class Footprint:
+    """The statically-computable data needs of evaluating a handle.
+
+    ``data`` — content keys of Blobs/Trees that must be resident (Objects
+    reachable through the definition).  ``refs`` — content keys referenced
+    only as Refs (metadata visible, bytes not needed here).  ``encodes`` —
+    Encode handles whose referent Thunks must be *evaluated* before the
+    enclosing Application can run; their own footprints become visible once
+    the runtime descends into them.
+    """
+
+    data: set = field(default_factory=set)
+    refs: set = field(default_factory=set)
+    encodes: list = field(default_factory=list)
+
+    def merge(self, other: "Footprint") -> None:
+        self.data |= other.data
+        self.refs |= other.refs
+        self.encodes.extend(other.encodes)
+
+
+class MissingData(KeyError):
+    """Raised when data for a handle is not resident in this repository."""
+
+    def __init__(self, handle: Handle):
+        super().__init__(repr(handle))
+        self.handle = handle
+
+
+class Repository:
+    """A thread-safe content-addressed store plus memo table."""
+
+    def __init__(self, name: str = "repo"):
+        self.name = name
+        self._blobs: dict[bytes, bytes] = {}
+        self._trees: dict[bytes, tuple[Handle, ...]] = {}
+        # memo: raw handle bytes of a Thunk or Encode -> result Handle
+        self._memo: dict[bytes, Handle] = {}
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------------ put
+    def put_blob(self, payload: bytes) -> Handle:
+        h = Handle.blob(payload)
+        if not h.is_literal:
+            with self._lock:
+                self._blobs[h.content_key()] = bytes(payload)
+        return h
+
+    def put_tree(self, children: Iterable[Handle]) -> Handle:
+        kids = tuple(children)
+        h = Handle.tree(kids)
+        with self._lock:
+            self._trees[h.content_key()] = kids
+        return h
+
+    def put_handle_data(self, handle: Handle, payload) -> None:
+        """Install data received from elsewhere (network worker path)."""
+        if handle.is_literal:
+            return
+        key = handle.content_key()
+        with self._lock:
+            if handle.content_type == BLOB:
+                assert isinstance(payload, (bytes, bytearray))
+                self._blobs[key] = bytes(payload)
+            else:
+                self._trees[key] = tuple(payload)
+
+    # ------------------------------------------------------------------ get
+    def get_blob(self, handle: Handle) -> bytes:
+        if handle.content_type != BLOB:
+            raise ValueError(f"not a blob handle: {handle!r}")
+        if handle.is_literal:
+            return handle.literal_payload()
+        try:
+            return self._blobs[handle.content_key()]
+        except KeyError:
+            raise MissingData(handle) from None
+
+    def get_tree(self, handle: Handle) -> tuple[Handle, ...]:
+        if handle.content_type != TREE:
+            raise ValueError(f"not a tree handle: {handle!r}")
+        try:
+            return self._trees[handle.content_key()]
+        except KeyError:
+            raise MissingData(handle) from None
+
+    def raw_payload(self, handle: Handle):
+        """Blob bytes or Tree children — whatever this handle's content is."""
+        return self.get_blob(handle) if handle.content_type == BLOB else self.get_tree(handle)
+
+    # ----------------------------------------------------------------- memo
+    def memo_get(self, handle: Handle) -> Optional[Handle]:
+        return self._memo.get(handle.raw)
+
+    def memo_put(self, handle: Handle, result: Handle) -> None:
+        # first-write-wins: determinism makes duplicate writes identical, so
+        # speculative/straggler duplicate execution is harmless.
+        with self._lock:
+            self._memo.setdefault(handle.raw, result)
+
+    # ----------------------------------------------------------- membership
+    def contains(self, handle: Handle) -> bool:
+        """Is this handle's own content resident (not transitively)?"""
+        if handle.is_literal:
+            return True
+        key = handle.content_key()
+        if handle.content_type == BLOB:
+            return key in self._blobs
+        return key in self._trees
+
+    def contains_deep(self, handle: Handle) -> bool:
+        """Is every Object reachable from this handle resident?"""
+        return not self.missing(handle)
+
+    # --------------------------------------------------------- reachability
+    def footprint(self, handle: Handle, *, follow_memo: bool = True) -> Footprint:
+        """Minimum repository of ``handle`` (paper §3.3).
+
+        Objects are descended recursively (their bytes are accessible to the
+        invocation); Refs contribute metadata only; Thunks inside trees stay
+        lazy; Encodes are dependencies that must be evaluated first.  If an
+        Encode already has a memoized result and ``follow_memo``, its result's
+        footprint is folded in instead (the runtime sees through finished
+        work).
+        """
+        fp = Footprint()
+        stack = [handle]
+        seen: set[bytes] = set()
+        while stack:
+            h = stack.pop()
+            if h.raw in seen:
+                continue
+            seen.add(h.raw)
+            if h.is_encode():
+                if follow_memo:
+                    res = self.memo_get(h)
+                    if res is not None:
+                        stack.append(res)
+                        continue
+                fp.encodes.append(h)
+                continue
+            if h.is_thunk():
+                # Fully lazy (paper fig. 2: the `if` codelet's minimum
+                # repository *excludes* the branch thunks' definitions and
+                # results).  A bare Thunk is an opaque 32-byte name; its
+                # definition is staged only if/when the runtime reduces it.
+                continue
+            if h.is_ref():
+                if not h.is_literal:
+                    fp.refs.add(h.content_key())
+                continue
+            # Object
+            if h.is_literal:
+                continue
+            fp.data.add(h.content_key())
+            if h.content_type == TREE:
+                try:
+                    stack.extend(self.get_tree(h))
+                except MissingData:
+                    # Tree node itself not resident: its key is already in
+                    # fp.data; children unknown until it arrives.
+                    pass
+        return fp
+
+    def missing(self, handle: Handle) -> list[Handle]:
+        """Handles reachable as Objects whose content is not resident."""
+        out: list[Handle] = []
+        stack = [handle]
+        seen: set[bytes] = set()
+        while stack:
+            h = stack.pop()
+            if h.raw in seen:
+                continue
+            seen.add(h.raw)
+            if h.is_encode():
+                res = self.memo_get(h)
+                if res is not None:
+                    stack.append(res)
+                continue  # unevaluated encode: not a *data* gap
+            if h.is_thunk():
+                continue  # lazy — see footprint()
+            if h.is_ref() or h.is_literal:
+                continue
+            if not self.contains(h):
+                out.append(h)
+                continue
+            if h.content_type == TREE:
+                stack.extend(self.get_tree(h))
+        return out
+
+    def transitive_size(self, handle: Handle) -> int:
+        """Bytes of resident data reachable as Objects from ``handle``.
+
+        This is the scheduler's data-movement cost for shipping the minimum
+        repository of a task to another node.
+        """
+        total = 0
+        stack = [handle]
+        seen: set[bytes] = set()
+        while stack:
+            h = stack.pop()
+            if h.raw in seen:
+                continue
+            seen.add(h.raw)
+            if h.is_encode():
+                res = self.memo_get(h)
+                if res is not None:
+                    stack.append(res)
+                continue
+            if h.is_thunk():
+                continue  # lazy — see footprint()
+            if h.is_ref():
+                continue
+            if h.is_literal:
+                total += h.size
+                continue
+            if h.content_type == BLOB:
+                if self.contains(h):
+                    total += h.size
+            else:
+                total += 32 * h.size  # the tree node itself
+                if self.contains(h):
+                    stack.extend(self.get_tree(h))
+        return total
+
+    # -------------------------------------------------------------- export
+    def export(self, handle: Handle, sink: "Repository") -> int:
+        """Copy everything reachable from ``handle`` into ``sink``.
+
+        Returns bytes copied.  Used by the simulated network worker; real
+        deployments would serialize over RPC — the wire format is exactly
+        (handle, payload) pairs because handles are self-describing.
+        """
+        moved = 0
+        stack = [handle]
+        seen: set[bytes] = set()
+        while stack:
+            h = stack.pop()
+            if h.raw in seen:
+                continue
+            seen.add(h.raw)
+            if h.is_encode():
+                res = self.memo_get(h)
+                if res is not None:
+                    sink.memo_put(h, res)
+                    stack.append(res)
+                continue
+            if h.is_thunk():
+                stack.append(h.unwrap_thunk())
+                continue
+            if h.is_ref() or h.is_literal:
+                continue
+            if not self.contains(h):
+                continue
+            if not sink.contains(h):
+                payload = self.raw_payload(h)
+                sink.put_handle_data(h, payload)
+                moved += h.size if h.content_type == BLOB else 32 * h.size
+            if h.content_type == TREE:
+                stack.extend(self.get_tree(h))
+        return moved
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        return {
+            "blobs": len(self._blobs),
+            "trees": len(self._trees),
+            "memos": len(self._memo),
+            "blob_bytes": sum(len(b) for b in self._blobs.values()),
+        }

@@ -1,0 +1,106 @@
+"""Codelets used across tests and benchmarks — the paper's running examples.
+
+``add`` (fig 7a's trivial function), ``inc_chain`` (fig 7b's 500-deep chain),
+``fix_if`` (Fig 2's lazy conditional), ``fib`` (Fig 3's recursion via Thunks),
+``btree_get`` lives in examples/btree_kv.py, ``count_string`` / ``merge_counts``
+(fig 8b's map-reduce) live here too since the runtime benchmarks share them.
+
+Combination convention (paper §4.1): ``[limits, procedure, arg...]``.
+"""
+from __future__ import annotations
+
+import struct
+
+from .api import FixAPI
+from .handle import Handle
+from .procedures import handle_for, make_limits, register
+from .repository import Repository
+
+LIMITS_SMALL = make_limits(ram_bytes=1 << 16)
+
+
+def combination(repo: Repository, proc_name: str, *args: Handle,
+                limits: bytes = LIMITS_SMALL) -> Handle:
+    """Build an Application Thunk for ``proc_name(*args)``."""
+    tree = repo.put_tree([repo.put_blob(limits), handle_for(repo, proc_name), *args])
+    return tree.application()
+
+
+# --------------------------------------------------------------------- add
+@register("add")
+def _add(api: FixAPI, comb: Handle) -> Handle:
+    _, _, a, b = api.read_tree(comb)
+    return api.create_int(api.read_int(a) + api.read_int(b))
+
+
+# ----------------------------------------------------------------- fig 7b
+@register("inc_chain")
+def _inc_chain(api: FixAPI, comb: Handle) -> Handle:
+    """Increment; if steps remain, tail-call self (one submission, no client
+    round-trips — the whole chain is described by the initial thunk)."""
+    kids = api.read_tree(comb)
+    limits, proc, value, remaining = kids
+    v = api.read_int(value)
+    r = api.read_int(remaining)
+    if r <= 0:
+        return api.create_int(v)
+    nxt = api.create_tree([limits, proc, api.create_int(v + 1), api.create_int(r - 1)])
+    return api.application(nxt)
+
+
+# ------------------------------------------------------------------ fig 2
+@register("fix_if")
+def _fix_if(api: FixAPI, comb: Handle) -> Handle:
+    """Lazy conditional: the untaken branch's thunk is never evaluated and
+    its minimum repository is never fetched."""
+    _, _, pred, then_t, else_t = api.read_tree(comb)
+    take = api.read_int(pred) != 0
+    return then_t if take else else_t
+
+
+# ------------------------------------------------------------------ fig 3
+@register("fib")
+def _fib(api: FixAPI, comb: Handle) -> Handle:
+    limits, proc, n_h = api.read_tree(comb)
+    n = api.read_int(n_h)
+    if n < 2:
+        return api.create_int(n)
+    f1 = api.application(api.create_tree([limits, proc, api.create_int(n - 1)]))
+    f2 = api.application(api.create_tree([limits, proc, api.create_int(n - 2)]))
+    add_comb = api.create_tree(
+        [limits, api.create_blob(b"fix/proc/add"), api.strict(f1), api.strict(f2)]
+    )
+    return api.application(add_comb)
+
+
+# ------------------------------------------------------------------ fig 8b
+@register("count_string")
+def _count_string(api: FixAPI, comb: Handle) -> Handle:
+    """Count non-overlapping occurrences of a needle in one corpus shard."""
+    _, _, shard, needle = api.read_tree(comb)
+    hay = api.read_blob(shard)
+    ndl = api.read_blob(needle)
+    return api.create_int(hay.count(ndl))
+
+
+@register("merge_counts")
+def _merge_counts(api: FixAPI, comb: Handle) -> Handle:
+    _, _, a, b = api.read_tree(comb)
+    return api.create_int(api.read_int(a) + api.read_int(b))
+
+
+# ------------------------------------------------- data-pipeline codelets
+@register("slice_blob")
+def _slice_blob(api: FixAPI, comb: Handle) -> Handle:
+    """Deterministic re-derivation of a shard from (corpus, start, len) —
+    the paper's recompute-instead-of-transfer strategy needs shards to be
+    products of pure functions."""
+    _, _, corpus, start_h, len_h = api.read_tree(comb)
+    start, ln = api.read_int(start_h), api.read_int(len_h)
+    return api.create_blob(api.read_blob(corpus)[start : start + ln])
+
+
+@register("identity")
+def _identity(api: FixAPI, comb: Handle) -> Handle:
+    kids = api.read_tree(comb)
+    return kids[2]

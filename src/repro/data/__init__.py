@@ -1,0 +1,2 @@
+from .pipeline import TokenPipeline, corpus_handle, synth_corpus
+__all__ = ["TokenPipeline", "corpus_handle", "synth_corpus"]

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the compute hot-spots (flash attention, decode
+attention, fused rmsnorm, Mamba2 SSD scan) with jnp oracles in ref.py and
+platform dispatch in ops.py.  Validated in interpret mode on CPU."""

@@ -1,0 +1,92 @@
+"""Single-query (decode) attention Pallas kernel.
+
+Decode is memory-bound: one query row attends over a long KV history.  The
+kernel streams KV blocks through VMEM with an online-softmax carry, so the
+[T, hd] cache is read exactly once per step — the roofline for decode —
+and masked slots (beyond ``length``) never contribute.  This is the
+fine-grained "selection thunk" view of a KV cache: the step's minimum
+repository is the valid prefix, fetched block by block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int, kv_blocks: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                     # [1, hd] single query row
+    k = k_ref[0]                                     # [block_k, hd]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, length, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: [B,1,H,hd]  k,v: [B,T,H,hd]  length: [] int32 (valid prefix)."""
+    B, _, H, hd = q.shape
+    T = k.shape[1]
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+    kv_blocks = T // block_k
+    scale = 1.0 / np.sqrt(hd)
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, 1, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                          kv_blocks=kv_blocks),
+        grid=(B * H, kv_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, qt, kt, vt)
+    return out.reshape(B, H, 1, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode sweeps assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: [B,S,H,hd]  k,v: [B,T,H,hd] -> [B,S,H,hd] (f32 softmax)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        S, T = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def decode_attention_ref(q, k, v, length):
+    """Single-query attention.  q: [B,1,H,hd]  k,v: [B,T,H,hd],
+    length: valid prefix (static or traced scalar)."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) * scale
+    mask = (jnp.arange(k.shape[1]) < length)[None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * inv * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B_, C_):
+    """Sequential SSD recurrence (the exact semantics the chunked kernel
+    must match).  x: [B,S,H,P]  dt: [B,S,H]  A: [H]  B_,C_: [B,S,N].
+    Returns (y [B,S,H,P], final state [B,H,P,N])."""
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dt_t * A[None, :])[..., None, None]       # [B,H,1,1]
+        upd = jnp.einsum("bhp,bn->bhpn", dt_t[..., None] * x_t.astype(jnp.float32),
+                         b_t.astype(jnp.float32))
+        h = h * decay + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", h, c_t.astype(jnp.float32))
+        return h, y_t
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C_, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final

@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory/cost/collective analysis — the proof that the distribution
+config is coherent on the production mesh without real hardware.
+
+The two lines above MUST stay first: jax locks the device count on first
+backend init, and this module (only) needs 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, cells_for, get_config
+from ..models import input_specs
+from ..parallel.steps import RunConfig, build_serve_step, build_train_step, make_sharder
+from ..roofline.analysis import from_compiled, model_flops_per_step
+from .mesh import make_production_mesh
+
+
+def default_runconfig(arch: str, shape_name: str, **overrides) -> RunConfig:
+    import importlib
+
+    kw = dict(microbatches=8, remat="dots", rules="baseline")
+    try:
+        mod = importlib.import_module(f"..configs.{arch.replace('-', '_')}", __package__)
+        kw.update(getattr(mod, "DRYRUN", {}))
+    except ModuleNotFoundError:
+        pass
+    if shape_name != "train_4k":
+        kw.update(microbatches=1, remat="none")
+    kw.update(overrides)
+    return RunConfig(**kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               runcfg: RunConfig | None = None):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    runcfg = runcfg or default_runconfig(arch, shape_name)
+    n_dev = mesh.devices.size
+
+    if cell.mode == "train":
+        step, state_sh, batch_sh, abstract = build_train_step(cfg, runcfg, mesh)
+        bspecs = input_specs(cfg, "train", cell.batch, cell.seq)
+        lowered = step.lower(abstract, bspecs)
+    elif cell.mode == "prefill":
+        step, p_sh, abstract_p, _ = build_serve_step(
+            cfg, runcfg, mesh, cell.batch, cell.seq, mode="prefill")
+        bspecs = input_specs(cfg, "prefill", cell.batch, cell.seq)
+        lowered = step.lower(abstract_p, bspecs)
+    else:  # decode
+        step, p_sh, abstract_p, (c_sh, abstract_c) = build_serve_step(
+            cfg, runcfg, mesh, cell.batch, cell.seq, mode="decode")
+        tspecs = input_specs(cfg, "decode", cell.batch, cell.seq)
+        lowered = step.lower(abstract_p, abstract_c, tspecs["tokens"])
+    compiled = lowered.compile()
+    mf = model_flops_per_step(cfg, cell.mode, cell.batch, cell.seq, n_dev)
+    return lowered, compiled, {"model_flops_per_device": mf, "n_devices": n_dev,
+                               "runcfg": runcfg}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             runcfg: RunConfig | None = None) -> dict:
+    t0 = time.time()
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod, runcfg)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to report
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+    ma = compiled.memory_analysis()
+    rf = from_compiled(compiled, meta["model_flops_per_device"])
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "ok": True,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes - ma.alias_size_in_bytes,
+        },
+        "roofline": rf.to_dict(),
+    }
+    # HBM check: v5e has 16 GiB
+    out["memory"]["fits_16GiB"] = out["memory"]["peak_estimate_bytes"] < 16 * 2**30
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None, choices=ARCHS + [None])
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--dp-sync", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = args.arch or (ARCHS if args.all else [ARCHS[0]])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for cell in cells_for(arch):
+            if args.shape and cell.name not in args.shape:
+                continue
+            for mp in meshes:
+                over = {}
+                if args.microbatches is not None:
+                    over["microbatches"] = args.microbatches
+                if args.remat:
+                    over["remat"] = args.remat
+                if args.rules:
+                    over["rules"] = args.rules
+                if args.dp_sync:
+                    over["dp_sync"] = args.dp_sync
+                rc = default_runconfig(arch, cell.name, **over) if over else None
+                res = run_cell(arch, cell.name, mp, rc)
+                results.append(res)
+                status = "OK " if res["ok"] else "FAIL"
+                extra = ""
+                if res["ok"]:
+                    r = res["roofline"]
+                    extra = (f"dom={r['dominant']:10s} "
+                             f"c/m/x={r['compute_s']:.3g}/{r['memory_s']:.3g}/"
+                             f"{r['collective_s']:.3g}s "
+                             f"mem={res['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                             f"compile={res['compile_s']}s")
+                else:
+                    extra = res["error"][:160]
+                print(f"[{status}] {arch:20s} {cell.name:12s} {res['mesh']:8s} {extra}",
+                      flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells OK")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

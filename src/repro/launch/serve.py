@@ -1,0 +1,82 @@
+"""Serving driver: prefill + continuous-batched decode on a real model.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_8b --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_config
+from ..models import init_params, ops_for
+from ..parallel.sharding import Sharder
+from ..serving import PrefixCache, Request, ServeEngine
+
+
+def build_model_fns(cfg, max_seq: int):
+    """Per-row prefill/greedy-decode callables over the family ops."""
+    ops = ops_for(cfg)
+    params = init_params(ops.specs(cfg), cfg)
+    sh = Sharder(None)
+
+    @jax.jit
+    def prefill_one(tokens):
+        _logits, cache = ops.prefill(params, {"tokens": tokens[None]}, cfg, sh)
+        return cache
+
+    @jax.jit
+    def decode_one(cache, token):
+        logits, cache = ops.decode_step(params, cache,
+                                        jnp.asarray([[token]], jnp.int32), cfg, sh)
+        return jnp.argmax(logits[0, -1]), cache
+
+    def prefill_fn(prompt_np):
+        return prefill_one(jnp.asarray(prompt_np, jnp.int32))
+
+    def decode_fn(cache, last_token):
+        tok, cache = decode_one(cache, last_token)
+        return int(tok), cache
+
+    return prefill_fn, decode_fn
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_8b", choices=ARCHS)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    prefill_fn, decode_fn = build_model_fns(cfg, args.prompt_len + args.max_new)
+    engine = ServeEngine(prefill_fn, decode_fn, batch=args.batch, eos=-1,
+                         prefix_cache=PrefixCache(capacity=8))
+    rng = np.random.default_rng(0)
+    shared_prefix = rng.integers(1, cfg.vocab, 16)  # one full prefix block
+    reqs = []
+    for i in range(args.requests):
+        tail = rng.integers(1, cfg.vocab, args.prompt_len - len(shared_prefix))
+        prompt = np.concatenate([shared_prefix, tail]).astype(np.int32)
+        req = Request(rid=i, prompt=prompt, max_new=args.max_new)
+        reqs.append(req)
+        engine.submit(req)
+
+    t0 = time.time()
+    engine.run()
+    dt = time.time() - t0
+    total_new = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s), {engine.steps} engine steps")
+    print(f"prefix cache: {engine.cache.hits} hits / {engine.cache.misses} misses")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

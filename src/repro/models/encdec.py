@@ -1,0 +1,175 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium's text/speech transformer,
+arXiv:2308.11596).  The audio frontend is a stub per the assignment:
+``input_specs`` provides precomputed fbank-frame features [B, S, 160] which
+a learned projection lifts to d_model.
+
+Decoder layers carry self-attention (causal, cached at decode) plus
+cross-attention over the encoder memory (cached once at prefill).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import (
+    apply_remat,
+    ModelConfig,
+    attend,
+    causal_mask,
+    embed_tokens,
+    ps,
+    repeat_kv,
+    rmsnorm,
+    rope,
+    swiglu,
+    unembed,
+)
+from .transformer import attn_block, dense_layer_specs, mlp_block
+
+FRAME_DIM = 160  # stacked fbank features (stub frontend)
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    Vp, D = cfg.vocab_padded, cfg.d_model
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_eff
+    Ld = cfg.n_dec_layers
+    dec = dense_layer_specs(cfg, Ld)
+    dec.update({
+        "xattn_norm": ps((Ld, D), ("p_layers", "p_none"), init="ones"),
+        "xq": ps((Ld, D, H, hd), ("p_layers", "p_embed", "p_heads", "p_none")),
+        "xk": ps((Ld, D, Kv, hd), ("p_layers", "p_embed", "p_kv_heads", "p_none")),
+        "xv": ps((Ld, D, Kv, hd), ("p_layers", "p_embed", "p_kv_heads", "p_none")),
+        "xo": ps((Ld, H, hd, D), ("p_layers", "p_heads", "p_none", "p_embed")),
+    })
+    return {
+        "frame_proj": ps((FRAME_DIM, D), ("p_none", "p_embed")),
+        "embed": ps((Vp, D), ("p_vocab", "p_embed"), init="embed", scale=0.02),
+        "enc_layers": dense_layer_specs(cfg, cfg.n_enc_layers),
+        "enc_norm": ps((D,), ("p_none",), init="ones"),
+        "dec_layers": dec,
+        "final_norm": ps((D,), ("p_none",), init="ones"),
+        "unembed": ps((D, Vp), ("p_embed", "p_vocab")),
+    }
+
+
+def _bidir_attn_layer(x, lp, cfg, sh, positions):
+    """Encoder layer: full (non-causal) self-attention + MLP."""
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = rope(jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(h.dtype)), positions,
+             cfg.rope_theta)
+    k = rope(jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(h.dtype)), positions,
+             cfg.rope_theta)
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(h.dtype))
+    q = sh(q, "batch", "seq", "heads", None)
+    o = attend(q, repeat_kv(k, cfg.n_heads), repeat_kv(v, cfg.n_heads), None, sh,
+               pattern="full")
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(o.dtype))
+    return mlp_block(x, lp, cfg, sh)
+
+
+def _cross_attn(x, lp, cfg, sh, memory=None, mem_kv=None):
+    """Cross-attention over encoder memory (or its cached K/V)."""
+    h = rmsnorm(x, lp["xattn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["xq"].astype(h.dtype))
+    if mem_kv is None:
+        k = jnp.einsum("btd,dhk->bthk", memory, lp["xk"].astype(h.dtype))
+        v = jnp.einsum("btd,dhk->bthk", memory, lp["xv"].astype(h.dtype))
+    else:
+        k, v = mem_kv
+    q = sh(q, "batch", "seq", "heads", None)
+    o = attend(q, repeat_kv(k.astype(q.dtype), cfg.n_heads),
+               repeat_kv(v.astype(q.dtype), cfg.n_heads), None, sh,
+               pattern="full")
+    out = jnp.einsum("bshk,hkd->bsd", o, lp["xo"].astype(o.dtype))
+    return x + sh(out, "batch", "seq", "embed"), (k, v)
+
+
+def encode(params, frames, cfg: ModelConfig, sh):
+    x = jnp.einsum("bsf,fd->bsd", frames.astype(cfg.compute_dtype),
+                   params["frame_proj"].astype(cfg.compute_dtype))
+    x = sh(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        return _bidir_attn_layer(x, lp, cfg, sh, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def encdec_forward(params, batch, cfg: ModelConfig, sh, remat_policy=None):
+    """Training: encode frames, causal-decode tokens, logits over decoder."""
+    memory = encode(params, batch["frames"], cfg, sh)
+    x = embed_tokens(params["embed"].astype(cfg.compute_dtype), batch["tokens"], sh)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        x, _ = attn_block(x, lp, cfg, sh, positions)
+        x, _ = _cross_attn(x, lp, cfg, sh, memory=memory)
+        x = mlp_block(x, lp, cfg, sh)
+        return x, None
+
+    body = apply_remat(body, remat_policy)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["unembed"].astype(x.dtype), sh)
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    L, Kv, hd = cfg.n_dec_layers, cfg.n_kv_heads, cfg.head_dim_eff
+    Tm = cfg.cross_len
+    kv = ps((L, batch, max_seq, Kv, hd),
+            ("p_layers", "batch", "kv_seq", "kv_heads", "p_none"), init="zeros",
+            dtype=cfg.compute_dtype)
+    xkv = ps((L, batch, Tm, Kv, hd),
+             ("p_layers", "batch", "kv_seq", "kv_heads", "p_none"), init="zeros",
+             dtype=cfg.compute_dtype)
+    return {"k": kv, "v": kv, "xk": xkv, "xv": xkv,
+            "pos": ps((), (), init="zeros", dtype=jnp.int32)}
+
+
+def encdec_decode_step(params, cache, tokens, cfg: ModelConfig, sh):
+    """One decoder token against self-KV (len max_seq) + cross-KV (cross_len)."""
+    x = embed_tokens(params["embed"].astype(cfg.compute_dtype), tokens, sh)
+    pos = cache["pos"]
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+
+    def body(x, layer):
+        lp, k_all, v_all, xk, xv = layer
+        x, (k2, v2) = attn_block(x, lp, cfg, sh, positions, kv_cache=(k_all, v_all, pos))
+        x, _ = _cross_attn(x, lp, cfg, sh, mem_kv=(xk, xv))
+        x = mlp_block(x, lp, cfg, sh)
+        return x, (k2, v2)
+
+    x, (k_s, v_s) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["unembed"].astype(x.dtype), sh)
+    return logits, {"k": k_s, "v": v_s, "xk": cache["xk"], "xv": cache["xv"],
+                    "pos": pos + 1}
+
+
+def encdec_prefill(params, batch, cfg: ModelConfig, sh):
+    """Prefill = encode the source; prime decoder caches with BOS."""
+    memory = encode(params, batch["frames"], cfg, sh)
+    B = memory.shape[0]
+    bos = jnp.zeros((B, 1), jnp.int32)
+    x = embed_tokens(params["embed"].astype(cfg.compute_dtype), bos, sh)
+    positions = jnp.zeros((B, 1), jnp.int32)
+
+    def body(x, lp):
+        x, (k, v) = attn_block(x, lp, cfg, sh, positions)
+        x, (xk, xv) = _cross_attn(x, lp, cfg, sh, memory=memory)
+        x = mlp_block(x, lp, cfg, sh)
+        return x, (k, v, xk, xv)
+
+    x, (k_s, v_s, xk_s, xv_s) = jax.lax.scan(body, x, params["dec_layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["unembed"].astype(x.dtype), sh)
+    xk_s = sh(xk_s, None, "batch", "kv_seq", "kv_heads", None)
+    xv_s = sh(xv_s, None, "batch", "kv_seq", "kv_heads", None)
+    cache = {"k": k_s, "v": v_s, "xk": xk_s, "xv": xv_s,
+             "pos": jnp.asarray(1, jnp.int32)}
+    return logits, cache

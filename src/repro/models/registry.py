@@ -1,0 +1,112 @@
+"""Model-family registry: one dispatch point for specs / forward / prefill /
+decode across all assigned architectures, plus ``input_specs`` — the
+ShapeDtypeStruct stand-ins every dry-run cell lowers against (the Fix
+"minimum repository" of a step, declared before any byte is allocated).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, mamba2, moe, transformer
+from .base import ModelConfig
+
+
+@dataclass(frozen=True)
+class FamilyOps:
+    specs: Callable              # cfg -> param ParamSpec tree
+    forward: Callable            # (params, batch, cfg, sh, remat_policy) -> logits
+    prefill: Optional[Callable]  # (params, batch, cfg, sh) -> (logits, cache)
+    decode_step: Optional[Callable]
+    cache_specs: Optional[Callable]  # (cfg, batch, max_seq) -> ParamSpec tree
+
+
+FAMILIES: dict[str, FamilyOps] = {
+    "dense": FamilyOps(transformer.dense_specs, transformer.dense_forward,
+                       transformer.dense_prefill, transformer.dense_decode_step,
+                       transformer.dense_cache_specs),
+    "vlm": FamilyOps(transformer.dense_specs, transformer.dense_forward,
+                     transformer.dense_prefill, transformer.dense_decode_step,
+                     transformer.dense_cache_specs),
+    "moe": FamilyOps(moe.moe_specs, moe.moe_forward, moe.moe_prefill,
+                     moe.moe_decode_step, moe.moe_cache_specs),
+    "mamba2": FamilyOps(mamba2.mamba_specs, mamba2.mamba_forward,
+                        mamba2.mamba_prefill, mamba2.mamba_decode_step,
+                        mamba2.mamba_cache_specs),
+    "hybrid": FamilyOps(hybrid.hybrid_specs, hybrid.hybrid_forward,
+                        hybrid.hybrid_prefill, hybrid.hybrid_decode_step,
+                        hybrid.hybrid_cache_specs),
+    "encdec": FamilyOps(encdec.encdec_specs, encdec.encdec_forward,
+                        encdec.encdec_prefill, encdec.encdec_decode_step,
+                        encdec.encdec_cache_specs),
+}
+
+
+def ops_for(cfg: ModelConfig) -> FamilyOps:
+    return FAMILIES[cfg.family]
+
+
+# ------------------------------------------------------------- input specs
+VIT_DIM = 3200  # InternViT-6B hidden size (frontend stub provides embeddings)
+
+
+def input_specs(cfg: ModelConfig, mode: str, batch: int, seq: int) -> dict:
+    """Abstract batch for (arch, shape) — ShapeDtypeStructs, no allocation.
+
+    Modes: 'train' (tokens+labels), 'prefill' (prompt), 'decode' (one token).
+    """
+    i32, f = jnp.int32, cfg.compute_dtype
+    sd = jax.ShapeDtypeStruct
+    if mode == "decode":
+        return {"tokens": sd((batch, 1), i32)}
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        out = {"tokens": sd((batch, seq - P), i32),
+               "patch_embeds": sd((batch, P, VIT_DIM), f)}
+        if mode == "train":
+            out["labels"] = sd((batch, seq), i32)
+        return out
+    if cfg.family == "encdec":
+        out = {"frames": sd((batch, seq, encdec.FRAME_DIM), f)}
+        if mode == "train":
+            out["tokens"] = sd((batch, seq), i32)
+            out["labels"] = sd((batch, seq), i32)
+        return out
+    out = {"tokens": sd((batch, seq), i32)}
+    if mode == "train":
+        out["labels"] = sd((batch, seq), i32)
+    return out
+
+
+def input_shardings(cfg: ModelConfig, mode: str, batch_specs: dict, sharder) -> dict:
+    """NamedShardings matching input_specs' structure."""
+    out = {}
+    for name, s in batch_specs.items():
+        axes = ["batch", "seq"] + [None] * (len(s.shape) - 2)
+        out[name] = sharder.named(tuple(axes), s.shape)
+    return out
+
+
+def concrete_batch(cfg: ModelConfig, mode: str, batch: int, seq: int, seed: int = 0):
+    """Small concrete batch for smoke tests (same structure as input_specs)."""
+    key = jax.random.PRNGKey(seed)
+    specs = input_specs(cfg, mode, batch, seq)
+    out = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab, jnp.int32)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out
+
+
+def loss_mask(cfg: ModelConfig, labels) -> Optional[object]:
+    """VLM: no loss on the patch prefix.  Others: all positions."""
+    if cfg.family == "vlm" and cfg.n_patches:
+        mask = jnp.ones(labels.shape, jnp.float32)
+        return mask.at[:, : cfg.n_patches].set(0.0)
+    return None

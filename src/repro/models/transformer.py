@@ -1,0 +1,199 @@
+"""Dense decoder-only transformer (GQA, RoPE, optional qk-norm, SwiGLU).
+
+Covers qwen3-8b / qwen3-4b (qk_norm), deepseek-67b, internlm2-20b, and is
+the text backbone for internvl2-26b.  Layers are stacked [L, ...] and run
+under ``jax.lax.scan`` so the HLO (and compile time) is O(1) in depth.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import (
+    apply_remat,
+    scan_layers,
+    ModelConfig,
+    ParamSpec,
+    attend,
+    causal_mask,
+    embed_tokens,
+    ps,
+    repeat_kv,
+    rmsnorm,
+    rope,
+    swiglu,
+    unembed,
+)
+
+# ------------------------------------------------------------------- specs
+def dense_layer_specs(cfg: ModelConfig, n_layers: Optional[int] = None) -> dict:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    D, H, Kv, hd, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_eff, cfg.d_ff
+    specs = {
+        "attn_norm": ps((L, D), ("p_layers", "p_none"), init="ones"),
+        "wq": ps((L, D, H, hd), ("p_layers", "p_embed", "p_heads", "p_none")),
+        "wk": ps((L, D, Kv, hd), ("p_layers", "p_embed", "p_kv_heads", "p_none")),
+        "wv": ps((L, D, Kv, hd), ("p_layers", "p_embed", "p_kv_heads", "p_none")),
+        "wo": ps((L, H, hd, D), ("p_layers", "p_heads", "p_none", "p_embed")),
+        "mlp_norm": ps((L, D), ("p_layers", "p_none"), init="ones"),
+        "w_gate": ps((L, D, F), ("p_layers", "p_embed", "p_mlp")),
+        "w_up": ps((L, D, F), ("p_layers", "p_embed", "p_mlp")),
+        "w_down": ps((L, F, D), ("p_layers", "p_mlp", "p_embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ps((L, hd), ("p_layers", "p_none"), init="ones")
+        specs["k_norm"] = ps((L, hd), ("p_layers", "p_none"), init="ones")
+    return specs
+
+
+def dense_specs(cfg: ModelConfig) -> dict:
+    Vp, D = cfg.vocab_padded, cfg.d_model
+    specs = {
+        "embed": ps((Vp, D), ("p_vocab", "p_embed"), init="embed", scale=0.02),
+        "layers": dense_layer_specs(cfg),
+        "final_norm": ps((D,), ("p_none",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ps((D, Vp), ("p_embed", "p_vocab"))
+    if cfg.n_patches:  # VLM backbone: ViT-embedding projection (frontend stub)
+        specs["patch_proj"] = ps((3200, D), ("p_none", "p_embed"))
+    return specs
+
+
+# ----------------------------------------------------------------- blocks
+def attn_block(x, lp, cfg: ModelConfig, sh, positions, kv_cache=None):
+    """Pre-norm GQA attention.  Returns (residual output, (k, v)).
+
+    Train/prefill: kv_cache None, full causal over x itself.
+    Decode: kv_cache = (k_all [B,T,Kv,hd], v_all, write_pos scalar); x is the
+    single new token's hidden state.
+    """
+    h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(h.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(q, lp["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, lp["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = sh(q, "batch", "seq", "heads", None)
+
+    if kv_cache is None:
+        k_full, v_full = k, v
+        mask = None
+        pattern = "causal"
+        k_sh, v_sh = ("batch", "seq", "kv_heads", None), ("batch", "seq", "kv_heads", None)
+    else:
+        k_all, v_all, pos = kv_cache
+        k_full = jax.lax.dynamic_update_slice(k_all, k.astype(k_all.dtype), (0, pos, 0, 0))
+        v_full = jax.lax.dynamic_update_slice(v_all, v.astype(v_all.dtype), (0, pos, 0, 0))
+        mask = (jnp.arange(k_full.shape[1]) <= pos)[None, None, None, :]
+        pattern = None
+        k_sh, v_sh = ("batch", "kv_seq", "kv_heads", None), ("batch", "kv_seq", "kv_heads", None)
+    k_full = sh(k_full, *k_sh)
+    v_full = sh(v_full, *v_sh)
+
+    kr = repeat_kv(k_full.astype(q.dtype), cfg.n_heads)
+    vr = repeat_kv(v_full.astype(q.dtype), cfg.n_heads)
+    o = attend(q, kr, vr, mask, sh, pattern=pattern)
+    o = sh(o, "batch", "seq", "heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(o.dtype))
+    return x + sh(out, "batch", "res_seq", "embed"), (k_full, v_full)
+
+
+def mlp_block(x, lp, cfg: ModelConfig, sh):
+    h = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    out = swiglu(h, lp["w_gate"].astype(h.dtype), lp["w_up"].astype(h.dtype),
+                 lp["w_down"].astype(h.dtype), sh)
+    return x + sh(out, "batch", "res_seq", "embed")
+
+
+def dense_layer(x, lp, cfg: ModelConfig, sh, positions, kv_cache=None):
+    x, kv = attn_block(x, lp, cfg, sh, positions, kv_cache)
+    x = mlp_block(x, lp, cfg, sh)
+    return x, kv
+
+
+# ---------------------------------------------------------------- forward
+def _embed_input(params, batch, cfg: ModelConfig, sh):
+    """Tokens -> embeddings; VLM prepends projected patch embeddings."""
+    emb = params["embed"].astype(cfg.compute_dtype)
+    x = embed_tokens(emb, batch["tokens"], sh)
+    x = sh(x, "batch", "res_seq", "embed")
+    if cfg.n_patches and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.compute_dtype)
+        pe = jnp.einsum("bpe,ed->bpd", pe, params["patch_proj"].astype(pe.dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+        x = sh(x, "batch", "seq", "embed")
+    return x
+
+
+def dense_forward(params, batch, cfg: ModelConfig, sh, remat_policy=None,
+                  remat_group: int = 1):
+    """Full-sequence causal forward -> logits [B, S, Vp]."""
+    x = _embed_input(params, batch, cfg, sh)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        x, _ = dense_layer(x, lp, cfg, sh, positions)
+        return x, None
+
+    x, _ = scan_layers(body, x, params["layers"], remat_policy, remat_group)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w_un = params.get("unembed", params["embed"].T if cfg.tie_embeddings else None)
+    return unembed(x, w_un.astype(x.dtype), sh)
+
+
+# ------------------------------------------------------------------ cache
+def dense_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    L, Kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_eff
+    kv = ps((L, batch, max_seq, Kv, hd),
+            ("p_layers", "batch", "kv_seq", "kv_heads", "p_none"), init="zeros",
+            dtype=cfg.compute_dtype)
+    return {"k": kv, "v": kv,
+            "pos": ps((), (), init="zeros", dtype=jnp.int32)}
+
+
+def dense_decode_step(params, cache, tokens, cfg: ModelConfig, sh):
+    """One new token against a KV cache of length cache['k'].shape[2]."""
+    x = embed_tokens(params["embed"].astype(cfg.compute_dtype), tokens, sh)
+    pos = cache["pos"]
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+
+    def body(x, layer):
+        lp, k_all, v_all = layer
+        x, (k_new, v_new) = dense_layer(x, lp, cfg, sh, positions,
+                                        kv_cache=(k_all, v_all, pos))
+        return x, (k_new, v_new)
+
+    x, (k_stack, v_stack) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w_un = params.get("unembed", params["embed"].T if cfg.tie_embeddings else None)
+    logits = unembed(x, w_un.astype(x.dtype), sh)
+    new_cache = {"k": k_stack, "v": v_stack, "pos": pos + 1}
+    return logits, new_cache
+
+
+def dense_prefill(params, batch, cfg: ModelConfig, sh):
+    """Prefill: forward + emit the KV cache (length = prompt length)."""
+    x = _embed_input(params, batch, cfg, sh)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        x, kv = dense_layer(x, lp, cfg, sh, positions)
+        return x, kv
+
+    x, (k_stack, v_stack) = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w_un = params.get("unembed", params["embed"].T if cfg.tie_embeddings else None)
+    logits = unembed(x[:, -1:], w_un.astype(x.dtype), sh)
+    # hand the cache off in decode layout (context-parallel over kv_seq)
+    k_stack = sh(k_stack, None, "batch", "kv_seq", "kv_heads", None)
+    v_stack = sh(v_stack, None, "batch", "kv_seq", "kv_heads", None)
+    cache = {"k": k_stack, "v": v_stack, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache

@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, apply_updates, lr_at, state_specs
+from .compress import ef_int8_allreduce, ef_state_specs
+
+__all__ = ["AdamWConfig", "apply_updates", "lr_at", "state_specs",
+           "ef_int8_allreduce", "ef_state_specs"]

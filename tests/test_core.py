@@ -1,0 +1,251 @@
+"""Unit tests for the Fix core: handles, repository, evaluator semantics."""
+import struct
+
+import pytest
+
+from repro.core import (
+    AccessViolation,
+    Evaluator,
+    FixError,
+    Handle,
+    MissingData,
+    Repository,
+    make_limits,
+    parse_limits,
+    register,
+)
+from repro.core.stdlib import LIMITS_SMALL, combination
+from repro.core.api import FixAPI
+
+
+# ----------------------------------------------------------------- handles
+class TestHandle:
+    def test_literal_roundtrip(self):
+        h = Handle.blob(b"hello")
+        assert h.is_literal and h.is_blob() and h.size == 5
+        assert h.literal_payload() == b"hello"
+
+    def test_literal_threshold(self):
+        assert Handle.blob(b"x" * 30).is_literal
+        assert not Handle.blob(b"x" * 31).is_literal
+
+    def test_blob_content_addressing(self):
+        a, b = Handle.blob(b"y" * 100), Handle.blob(b"y" * 100)
+        assert a == b and hash(a) == hash(b)
+        assert a != Handle.blob(b"z" * 100)
+
+    def test_size_field(self):
+        assert Handle.blob(b"q" * 1000).size == 1000
+
+    def test_metadata_bitflips_preserve_digest(self):
+        repo = Repository()
+        t = repo.put_tree([Handle.blob(b"a"), Handle.blob(b"b")])
+        app = t.application()
+        assert app.is_thunk() and app.raw[:30] == t.raw[:30]
+        enc = app.strict()
+        assert enc.is_encode() and enc.unwrap_encode() == app
+        assert app.unwrap_thunk() == t
+
+    def test_encode_subkind_roundtrip(self):
+        repo = Repository()
+        t = repo.put_tree([])
+        for mk in (Handle.application, Handle.selection_of):
+            th = mk(t)
+            for enc in (th.strict(), th.shallow()):
+                assert enc.unwrap_encode() == th
+
+    def test_identification_of_blob(self):
+        b = Handle.blob(b"x" * 64)
+        idt = b.identification()
+        assert idt.is_thunk() and idt.unwrap_thunk() == b
+
+    def test_ref_object_share_content_key(self):
+        b = Handle.blob(b"w" * 64)
+        assert b.content_key() == b.as_ref().content_key()
+        assert b.as_ref().as_object() == b
+
+    def test_invalid_constructions(self):
+        b = Handle.blob(b"small")
+        with pytest.raises(ValueError):
+            b.application()  # blobs aren't combinations
+        with pytest.raises(ValueError):
+            b.strict()  # encodes wrap thunks only
+
+
+# -------------------------------------------------------------- repository
+class TestRepository:
+    def test_blob_tree_roundtrip(self):
+        repo = Repository()
+        b = repo.put_blob(b"n" * 99)
+        t = repo.put_tree([b, Handle.blob(b"lit")])
+        assert repo.get_blob(b) == b"n" * 99
+        assert repo.get_tree(t)[0] == b
+
+    def test_missing_data(self):
+        repo = Repository()
+        ghost = Handle.blob(b"g" * 77)
+        with pytest.raises(MissingData):
+            repo.get_blob(ghost)
+        assert not repo.contains(ghost)
+        assert repo.contains(Handle.blob(b"tiny"))  # literals always resident
+
+    def test_footprint_objects_vs_refs(self):
+        repo = Repository()
+        big = repo.put_blob(b"d" * 1000)
+        t = repo.put_tree([big, big.as_ref()])
+        fp = repo.footprint(t)
+        assert big.content_key() in fp.data
+        assert big.content_key() in fp.refs
+        # refs do not force data residency
+        assert repo.missing(t.as_ref()) == []
+
+    def test_footprint_lazy_thunks(self):
+        repo = Repository()
+        inner = combination(repo, "add", Handle.blob(b"\x01"), Handle.blob(b"\x02"))
+        outer = repo.put_tree([inner])  # bare thunk: stays lazy
+        fp = repo.footprint(outer)
+        assert fp.encodes == []
+        outer2 = repo.put_tree([inner.strict()])  # encode: must evaluate
+        fp2 = repo.footprint(outer2)
+        assert len(fp2.encodes) == 1
+
+    def test_transitive_size_and_export(self):
+        a = Repository("a")
+        blob = a.put_blob(b"z" * 500)
+        tree = a.put_tree([blob, blob])  # dedup: shared child counts once
+        assert a.transitive_size(tree) == 500 + 32 * 2
+        b = Repository("b")
+        moved = a.export(tree, b)
+        assert moved == 500 + 64
+        assert b.get_blob(blob) == b"z" * 500
+        # second export is free — content addressing dedups
+        assert a.export(tree, b) == 0
+
+    def test_limits_roundtrip(self):
+        raw = make_limits(ram_bytes=123456, cpu_slots=3)
+        parsed = parse_limits(raw)
+        assert parsed["ram_bytes"] == 123456 and parsed["cpu_slots"] == 3
+
+
+# --------------------------------------------------------------- evaluator
+class TestEvaluator:
+    def test_add(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        th = combination(repo, "add", Handle.blob((3).to_bytes(8, "little")),
+                         Handle.blob((4).to_bytes(8, "little")))
+        out = ev.evaluate(th.strict())
+        assert int.from_bytes(repo.get_blob(out), "little") == 7
+
+    def test_memoization(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        th = combination(repo, "add", Handle.blob((5).to_bytes(8, "little", signed=True)),
+                         Handle.blob((6).to_bytes(8, "little", signed=True)))
+        r1 = ev.evaluate(th.strict())
+        n = ev.applications
+        r2 = ev.evaluate(th.strict())
+        assert r1 == r2 and ev.applications == n  # cache hit, no re-run
+
+    def test_chain_constant_stack(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        th = combination(
+            repo, "inc_chain",
+            Handle.blob((0).to_bytes(8, "little", signed=True)),
+            Handle.blob((5000).to_bytes(8, "little", signed=True)),
+        )
+        out = ev.evaluate(th.strict())
+        assert int.from_bytes(repo.get_blob(out), "little", signed=True) == 5000
+        assert ev.applications == 5001
+
+    def test_fib(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        th = combination(repo, "fib", Handle.blob((10).to_bytes(8, "little", signed=True)))
+        out = ev.evaluate(th.strict())
+        assert int.from_bytes(repo.get_blob(out), "little", signed=True) == 55
+
+    def test_fib_memoizes_subproblems(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        th = combination(repo, "fib", Handle.blob((15).to_bytes(8, "little", signed=True)))
+        ev.evaluate(th.strict())
+        # naive fib(15) needs 1219 calls; memoized needs O(n) fib + adds
+        assert ev.applications < 50
+
+    def test_lazy_if_untaken_branch_never_runs(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        bomb = combination(repo, "add", Handle.blob(b"bad"), Handle.blob(b"bad"))
+        good = combination(repo, "add", Handle.blob((1).to_bytes(8, "little", signed=True)),
+                           Handle.blob((2).to_bytes(8, "little", signed=True)))
+        th = combination(repo, "fix_if",
+                         Handle.blob((1).to_bytes(8, "little", signed=True)), good, bomb)
+        out = ev.evaluate(th.strict())
+        assert int.from_bytes(repo.get_blob(out), "little", signed=True) == 3
+
+    def test_selection_on_tree(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        kids = [repo.put_blob(bytes([i]) * 40) for i in range(5)]
+        t = repo.put_tree(kids)
+        pair = repo.put_tree([t, repo.put_blob(struct.pack("<q", 3))])
+        sel = pair.selection_of()
+        out = ev.evaluate(sel.strict())
+        assert repo.get_blob(out) == bytes([3]) * 40
+
+    def test_selection_subrange_blob(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        b = repo.put_blob(bytes(range(100)))
+        pair = repo.put_tree([b, repo.put_blob(struct.pack("<qq", 10, 5))])
+        out = ev.evaluate(pair.selection_of().strict())
+        assert repo.get_blob(out) == bytes(range(10, 15))
+
+    def test_shallow_returns_ref(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        payload = b"r" * 200
+        th = combination(repo, "identity", repo.put_blob(payload))
+        out = ev.eval_encode(th.shallow())
+        assert out.is_ref() and out.size == 200
+
+    def test_strict_promotes_nested(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        inner = combination(repo, "add", Handle.blob((1).to_bytes(8, "little", signed=True)),
+                            Handle.blob((1).to_bytes(8, "little", signed=True)))
+        t = repo.put_tree([inner, repo.put_blob(b"k" * 50).as_ref()])
+        out = ev.strictify(t)
+        kids = repo.get_tree(out)
+        assert kids[0].is_data() and kids[1].is_object()
+
+    def test_sealed_container_enforced(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        secret = repo.put_blob(b"s" * 100)  # resident but NOT in the container
+
+        @register("leaky")
+        def _leaky(api: FixAPI, comb: Handle) -> Handle:
+            api.read_blob(secret)  # must be denied
+            return api.create_int(0)
+
+        th = combination(repo, "leaky", Handle.blob(b"x"))
+        with pytest.raises(FixError, match="AccessViolation|outside"):
+            ev.evaluate(th.strict())
+
+    def test_evaluator_never_fetches(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        ghost = Handle.blob(b"gg" * 40)  # content never stored
+        th = combination(repo, "add", ghost, Handle.blob((1).to_bytes(8, "little", signed=True)))
+        with pytest.raises(MissingData):
+            ev.evaluate(th.strict())
+
+    def test_unknown_procedure(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        tree = repo.put_tree([repo.put_blob(LIMITS_SMALL), repo.put_blob(b"fix/proc/nope")])
+        with pytest.raises(FixError, match="unknown procedure"):
+            ev.evaluate(tree.application().strict())

@@ -1,0 +1,74 @@
+"""Dry-run machinery tests: run in a subprocess so the 512-device XLA flag
+never leaks into the other tests' single-device environment."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(code: str) -> str:
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                         timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_single_cell_lowers_and_analyzes():
+    code = """
+from repro.launch.dryrun import run_cell
+import json
+r = run_cell("qwen3_4b", "decode_32k", False)
+assert r["ok"], r.get("error")
+rf = r["roofline"]
+assert rf["flops_per_device"] > 0
+assert rf["hbm_bytes_per_device"] > 0
+assert rf["dominant"] in ("compute", "memory", "collective")
+assert r["memory"]["fits_16GiB"]
+print(json.dumps({"dom": rf["dominant"]}))
+"""
+    out = _run(code)
+    assert "dom" in out
+
+
+@pytest.mark.slow
+def test_multi_pod_mesh_shards_pod_axis():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.mesh import make_production_mesh
+import jax
+m = make_production_mesh(multi_pod=True)
+assert m.devices.size == 512 and m.axis_names == ("pod", "data", "model")
+m1 = make_production_mesh()
+assert m1.devices.size == 256 and m1.axis_names == ("data", "model")
+print("ok")
+"""
+    assert "ok" in _run(code)
+
+
+def test_rollup_matches_unrolled_reference():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp
+from repro.roofline.hlo_cost import HloModuleCost
+def body(x, w):
+    return jnp.tanh(x @ w), None
+def scanned(x, ws):
+    x, _ = jax.lax.scan(body, x, ws)
+    return x
+def unrolled(x, ws):
+    for i in range(8):
+        x, _ = body(x, ws[i])
+    return x
+x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+fs = HloModuleCost(jax.jit(scanned).lower(x, ws).compile().as_text()).flops()
+fu = HloModuleCost(jax.jit(unrolled).lower(x, ws).compile().as_text()).flops()
+assert abs(fs - fu) / fu < 0.05, (fs, fu)
+print("ok")
+"""
+    assert "ok" in _run(code)

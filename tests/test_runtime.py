@@ -1,0 +1,207 @@
+"""Integration tests for the Fixpoint cluster runtime."""
+import struct
+import time
+
+import pytest
+
+from repro.core import Handle, Repository
+from repro.core.stdlib import combination
+from repro.runtime import Cluster, Link, Network
+
+
+def _i(v: int) -> Handle:
+    return Handle.blob(v.to_bytes(8, "little", signed=True))
+
+
+def _int_of(repo: Repository, h: Handle) -> int:
+    return int.from_bytes(repo.get_blob(h), "little", signed=True)
+
+
+def make_cluster(**kw) -> Cluster:
+    kw.setdefault("n_nodes", 3)
+    kw.setdefault("workers_per_node", 2)
+    kw.setdefault("network", Network(Link(latency_s=0.0005, gbps=10)))
+    return Cluster(**kw)
+
+
+class TestClusterBasics:
+    def test_simple_add(self):
+        c = make_cluster()
+        try:
+            th = combination(c.client_repo, "add", _i(20), _i(22))
+            out = c.evaluate(th.strict(), timeout=30)
+            repo = c.fetch_result(out)
+            assert _int_of(repo, out) == 42
+        finally:
+            c.shutdown()
+
+    def test_tail_call_chain_single_submission(self):
+        c = make_cluster()
+        try:
+            th = combination(c.client_repo, "inc_chain", _i(0), _i(100))
+            out = c.evaluate(th.strict(), timeout=60)
+            repo = c.fetch_result(out)
+            assert _int_of(repo, out) == 100
+        finally:
+            c.shutdown()
+
+    def test_parallel_fanout_fib(self):
+        c = make_cluster()
+        try:
+            th = combination(c.client_repo, "fib", _i(12))
+            out = c.evaluate(th.strict(), timeout=60)
+            repo = c.fetch_result(out)
+            assert _int_of(repo, out) == 144
+        finally:
+            c.shutdown()
+
+    def test_memoized_resubmission_is_instant(self):
+        c = make_cluster()
+        try:
+            th = combination(c.client_repo, "add", _i(1), _i(2))
+            c.evaluate(th.strict(), timeout=30)
+            t0 = time.perf_counter()
+            c.evaluate(th.strict(), timeout=30)
+            assert time.perf_counter() - t0 < 0.05  # memo hit, no re-execution
+        finally:
+            c.shutdown()
+
+    def test_lazy_branch_not_fetched(self):
+        """fig 2: the untaken branch's minimum repository never moves."""
+        c = make_cluster()
+        try:
+            repo = c.client_repo
+            big = repo.put_blob(b"B" * 500_000)  # lives only on client
+            bomb = combination(repo, "identity", big)
+            good = combination(repo, "add", _i(5), _i(6))
+            th = combination(repo, "fix_if", _i(1), good, bomb)
+            out = c.evaluate(th.strict(), timeout=30)
+            assert _int_of(c.fetch_result(out), out) == 11
+            # the 500 kB blob never left the client
+            for n in c.worker_nodes():
+                assert not n.repo.contains(big)
+        finally:
+            c.shutdown()
+
+    def test_selection_moves_node_not_children(self):
+        """fig 4 / B+-tree property: selecting a child of a Tree ships the
+        32-byte-per-child node, not the children's data."""
+        c = make_cluster()
+        try:
+            repo = c.client_repo
+            kids = [repo.put_blob(bytes([i]) * 100_000) for i in range(8)]
+            tree = repo.put_tree(kids)
+            pair = repo.put_tree([tree, repo.put_blob(struct.pack("<q", 2))])
+            sel = pair.selection_of()
+            out = c.evaluate(sel.shallow(), timeout=30)
+            assert out.is_ref() and out.size == 100_000
+            # selection ran without moving any 100 kB child
+            moved = sum(1 for n in c.worker_nodes() for k in kids if n.repo.contains(k))
+            assert moved == 0
+        finally:
+            c.shutdown()
+
+
+class TestPlacement:
+    def test_locality_places_near_data(self):
+        c = make_cluster(n_nodes=4)
+        try:
+            # park a large shard on n2
+            shard = Handle.blob(b"x" * 1_000_000)
+            c.nodes["n2"].repo.put_blob(b"x" * 1_000_000)
+            needle = Handle.blob(b"xx")
+            th = combination(c.client_repo, "count_string", shard, needle)
+            out = c.evaluate(th.strict(), timeout=30)
+            assert _int_of(c.fetch_result(out), out) == 500_000
+            assert c.nodes["n2"].jobs_run >= 1  # ran where the data lives
+            assert c.bytes_moved < 10_000  # the shard did not move
+        finally:
+            c.shutdown()
+
+    def test_random_placement_moves_data(self):
+        c = make_cluster(n_nodes=4, placement="random", seed=7)
+        try:
+            c.nodes["n2"].repo.put_blob(b"y" * 1_000_000)
+            shard = Handle.blob(b"y" * 1_000_000)
+            th = combination(c.client_repo, "count_string", shard, Handle.blob(b"yy"))
+            out = c.evaluate(th.strict(), timeout=30)
+            assert _int_of(c.fetch_result(out), out) == 500_000
+        finally:
+            c.shutdown()
+
+
+class TestInternalIO:
+    def test_internal_mode_starves_workers(self):
+        net = Network(Link(latency_s=0.02, gbps=10))
+        c = make_cluster(n_nodes=2, io_mode="internal", network=net)
+        try:
+            c.nodes["n0"].repo.put_blob(b"z" * 100_000)
+            shard = Handle.blob(b"z" * 100_000)
+            # force remote work: submit several, some land off-node
+            outs = []
+            for i in range(8):
+                th = combination(c.client_repo, "count_string", shard,
+                                 Handle.blob(bytes([i % 3]) + b"zz"))
+                outs.append(c.submit(th.strict()))
+            for f in outs:
+                f.result(timeout=30)
+            starved = sum(n.starved_ns for n in c.worker_nodes())
+            assert starved > 0  # slots were held during fetches
+        finally:
+            c.shutdown()
+
+
+class TestFaultTolerance:
+    def test_node_failure_reschedules(self):
+        c = make_cluster(n_nodes=3)
+        try:
+            th = combination(c.client_repo, "inc_chain", _i(0), _i(50))
+            fut = c.submit(th.strict())
+            time.sleep(0.02)
+            c.kill_node("n0")
+            out = fut.result(timeout=60)
+            assert _int_of(c.fetch_result(out), out) == 50
+        finally:
+            c.shutdown()
+
+    def test_lost_data_recomputed_from_lineage(self):
+        """Computational GC (paper §6): results can be deleted and
+        deterministically re-derived from their producing Encode."""
+        c = make_cluster(n_nodes=3)
+        try:
+            repo = c.client_repo
+            corpus = repo.put_blob(bytes(range(256)) * 1000)
+            sl = combination(repo, "slice_blob", corpus, _i(1000), _i(500))
+            out1 = c.evaluate(sl.strict(), timeout=30)
+            # wipe the result from every node that holds it
+            for n in c.worker_nodes():
+                n.repo._blobs.pop(out1.content_key(), None)
+            # a consumer needing the slice forces recompute-from-lineage
+            th = combination(repo, "count_string", out1.as_object(), Handle.blob(bytes([232])))
+            out2 = c.evaluate(th.strict(), timeout=30)
+            assert _int_of(c.fetch_result(out2), out2) >= 1
+        finally:
+            c.shutdown()
+
+    def test_straggler_duplicate_execution_safe(self):
+        c = make_cluster(n_nodes=3, speculate_after_s=0.05)
+        try:
+            th = combination(c.client_repo, "fib", _i(10))
+            out = c.evaluate(th.strict(), timeout=60)
+            assert _int_of(c.fetch_result(out), out) == 55
+        finally:
+            c.shutdown()
+
+
+class TestDeterminismProperties:
+    def test_same_job_same_result_across_clusters(self):
+        results = []
+        for seed in (0, 1):
+            c = make_cluster(n_nodes=2 + seed, seed=seed)
+            try:
+                th = combination(c.client_repo, "fib", _i(9))
+                out = c.evaluate(th.strict(), timeout=60)
+                results.append(_int_of(c.fetch_result(out), out))
+            finally:
+                c.shutdown()
+        assert results[0] == results[1] == 34
