@@ -22,6 +22,7 @@ FIGS = {
     "8b": figures.fig8b_wordcount,
     "9": figures.fig9_btree,
     "10": figures.fig10_burst_compile,
+    "staging": figures.fig_staging,
 }
 
 
@@ -56,6 +57,8 @@ def main() -> None:
     ap.add_argument("--fig", action="append", default=None, choices=list(FIGS))
     ap.add_argument("--roofline", default=None,
                     help="print the roofline table from a dry-run json")
+    ap.add_argument("--json", default=None,
+                    help="also dump {figure: result} to this path")
     args = ap.parse_args()
 
     if args.roofline:
@@ -63,12 +66,18 @@ def main() -> None:
         return
 
     figs = args.fig or list(FIGS)
+    collected = {}
     print("figure,metric,value")
     for name in figs:
         t0 = time.time()
         result = FIGS[name]()
+        collected[name] = result
         print_csv(f"fig{name}", result)
         print(f"# fig{name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

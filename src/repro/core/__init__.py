@@ -1,8 +1,9 @@
 """Fix core: the paper's computation model.
 
 Handles (packed 32-byte ABI), content-addressed Repositories with memo
-tables, the Table-1 API as a sealed capability, the codelet registry, and
-the Evaluator implementing Thunk/Encode reduction semantics.
+tables (plus complete-footprint caches feeding the runtime's transfer
+scheduler), the Table-1 API as a sealed capability, the codelet registry,
+and the Evaluator implementing Thunk/Encode reduction semantics.
 """
 from .api import AccessViolation, FixAPI
 from .evaluator import Evaluator, FixError

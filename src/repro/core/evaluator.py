@@ -98,6 +98,11 @@ class Evaluator:
         return current
 
     # -------------------------------------------------------------- think
+    def think(self, thunk: Handle) -> Handle:
+        """One reduction step — the public single-step entry the runtime's
+        workers use (a codelet runs to completion, never blocking)."""
+        return self._think(thunk)
+
     def _think(self, thunk: Handle) -> Handle:
         interp = thunk.interp
         if interp == IDENTIFICATION:
@@ -195,8 +200,7 @@ class Evaluator:
             if not self.repo.contains(handle):
                 raise MissingData(handle)
             return handle.as_object()
-        memo_key = b"S" + handle.raw
-        cached = self.repo._memo.get(memo_key)
+        cached = self.repo.strict_memo_get(handle)
         if cached is not None:
             return cached
         kids = self.repo.get_tree(handle)
@@ -205,7 +209,7 @@ class Evaluator:
             out = handle.as_object()
         else:
             out = self.repo.put_tree(new_kids)
-        self.repo._memo.setdefault(memo_key, out)
+        self.repo.strict_memo_put(handle, out)
         return out
 
     # -------------------------------------------------------------- stats

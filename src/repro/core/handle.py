@@ -259,8 +259,6 @@ class Handle:
     def __repr__(self) -> str:
         kind = "blob" if self.content_type == BLOB else "tree"
         interp = _INTERP_NAMES[self.interp]
-        if self.is_encode:
-            pass
         if self.is_literal:
             return f"<{interp} literal-{kind} {self.literal_payload()!r}>"
         return f"<{interp} {kind} size={self.size} {self.raw[:6].hex()}>"

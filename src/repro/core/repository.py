@@ -9,7 +9,11 @@ result computed everywhere).
 
 The reachability analysis here is the paper's "minimum repository" (§3.3):
 the complete set of data an invocation may touch, computable from the handle
-alone before the task runs.
+alone before the task runs.  Footprints and object closures are cached by
+content key once *complete* (all reachable trees resident, all encountered
+Encodes memoized): content addressing makes such results immutable, so the
+hot scheduler paths (``footprint`` / ``missing`` / staging walks) stop
+re-traversing shared subtrees.
 """
 from __future__ import annotations
 
@@ -47,6 +51,9 @@ class Footprint:
         self.refs |= other.refs
         self.encodes.extend(other.encodes)
 
+    def copy(self) -> "Footprint":
+        return Footprint(set(self.data), set(self.refs), list(self.encodes))
+
 
 class MissingData(KeyError):
     """Raised when data for a handle is not resident in this repository."""
@@ -54,6 +61,62 @@ class MissingData(KeyError):
     def __init__(self, handle: Handle):
         super().__init__(repr(handle))
         self.handle = handle
+
+
+def walk_object_closure(root: Handle, memo_get: Callable,
+                        tree_children: Callable, cache: dict) -> tuple:
+    """Every non-literal handle reachable as an Object from ``root``.
+
+    The one walker behind :meth:`Repository.reachable_objects` and the
+    cluster's staging closure — the cache-correctness rules live here only.
+    ``memo_get(handle)`` resolves Encodes (None = unresolved);
+    ``tree_children(handle)`` yields a Tree's children (None = content not
+    available).  *Complete* closures — no unresolved Encode, no unreadable
+    Tree — are cached by ``root.raw``: content addressing plus
+    first-write-wins memoization make them immutable."""
+    cached = cache.get(root.raw)
+    if cached is not None:
+        return cached
+    out: list[Handle] = []
+    complete = True
+    stack = [root]
+    seen: set[bytes] = set()
+    while stack:
+        h = stack.pop()
+        if h.raw in seen or h.is_literal:
+            continue
+        seen.add(h.raw)
+        if h.is_encode():
+            res = memo_get(h)
+            if res is not None:
+                stack.append(res)
+            else:
+                complete = False  # closure grows once this memoizes
+            continue
+        if h.is_thunk() or h.is_ref():
+            continue  # lazy / metadata-only
+        sub = cache.get(h.raw)
+        if sub is not None and h.raw != root.raw:
+            out.extend(sub)  # shared subtree: reuse, don't re-walk
+            continue
+        out.append(h)
+        if h.content_type == TREE:
+            kids = tree_children(h)
+            if kids is not None:
+                stack.extend(kids)
+            else:
+                complete = False  # children unknown until the tree lands
+    # cached subtrees may overlap: dedup by raw, preserving order
+    uniq: list[Handle] = []
+    uniq_seen: set[bytes] = set()
+    for h in out:
+        if h.raw not in uniq_seen:
+            uniq_seen.add(h.raw)
+            uniq.append(h)
+    result = tuple(uniq)
+    if complete:
+        cache.setdefault(root.raw, result)
+    return result
 
 
 class Repository:
@@ -66,20 +129,52 @@ class Repository:
         # memo: raw handle bytes of a Thunk or Encode -> result Handle
         self._memo: dict[bytes, Handle] = {}
         self._lock = threading.RLock()
+        self._blob_bytes = 0  # maintained counter; stats() stays O(1)
+        # Put listeners: called with the new content's Handle after every
+        # insert (blob/tree, local or network).  The cluster's location
+        # index subscribes here so source lookup never scans repositories.
+        self._put_listeners: list[Callable[[Handle], None]] = []
+        # Complete-footprint / complete-reachability caches, keyed by
+        # (content_key, follow_memo).  Content is immutable and the memo
+        # table is first-write-wins, so an entry recorded as *complete*
+        # (every reachable tree resident, every encountered Encode already
+        # memoized) can never change — no invalidation needed.
+        self._fp_cache: dict[tuple[bytes, bool], Footprint] = {}
+        self._reach_cache: dict[bytes, tuple[Handle, ...]] = {}
+
+    # -------------------------------------------------------------- listeners
+    def add_put_listener(self, fn: Callable[[Handle], None]) -> None:
+        """``fn(handle)`` fires after new content lands (any thread)."""
+        self._put_listeners.append(fn)
+
+    def _notify_put(self, handle: Handle) -> None:
+        for fn in self._put_listeners:
+            fn(handle)
 
     # ------------------------------------------------------------------ put
     def put_blob(self, payload: bytes) -> Handle:
         h = Handle.blob(payload)
         if not h.is_literal:
+            key = h.content_key()
             with self._lock:
-                self._blobs[h.content_key()] = bytes(payload)
+                fresh = key not in self._blobs
+                if fresh:
+                    self._blobs[key] = bytes(payload)
+                    self._blob_bytes += len(payload)
+            if fresh:
+                self._notify_put(h)
         return h
 
     def put_tree(self, children: Iterable[Handle]) -> Handle:
         kids = tuple(children)
         h = Handle.tree(kids)
+        key = h.content_key()
         with self._lock:
-            self._trees[h.content_key()] = kids
+            fresh = key not in self._trees
+            if fresh:
+                self._trees[key] = kids
+        if fresh:
+            self._notify_put(h)
         return h
 
     def put_handle_data(self, handle: Handle, payload) -> None:
@@ -90,9 +185,16 @@ class Repository:
         with self._lock:
             if handle.content_type == BLOB:
                 assert isinstance(payload, (bytes, bytearray))
-                self._blobs[key] = bytes(payload)
+                fresh = key not in self._blobs
+                if fresh:
+                    self._blobs[key] = bytes(payload)
+                    self._blob_bytes += len(payload)
             else:
-                self._trees[key] = tuple(payload)
+                fresh = key not in self._trees
+                if fresh:
+                    self._trees[key] = tuple(payload)
+        if fresh:
+            self._notify_put(handle)
 
     # ------------------------------------------------------------------ get
     def get_blob(self, handle: Handle) -> bytes:
@@ -127,6 +229,16 @@ class Repository:
         with self._lock:
             self._memo.setdefault(handle.raw, result)
 
+    # Strictification memos share the table under a distinct key prefix so
+    # a Tree's strict form is computed once per repository.  This is the
+    # public API; callers must not reach into ``_memo`` directly.
+    def strict_memo_get(self, handle: Handle) -> Optional[Handle]:
+        return self._memo.get(b"S" + handle.raw)
+
+    def strict_memo_put(self, handle: Handle, result: Handle) -> None:
+        with self._lock:
+            self._memo.setdefault(b"S" + handle.raw, result)
+
     # ----------------------------------------------------------- membership
     def contains(self, handle: Handle) -> bool:
         """Is this handle's own content resident (not transitively)?"""
@@ -152,7 +264,14 @@ class Repository:
         footprint is folded in instead (the runtime sees through finished
         work).
         """
+        cache_key = None
+        if handle.is_object() and not handle.is_literal and handle.content_type == TREE:
+            cache_key = (handle.content_key(), follow_memo)
+            cached = self._fp_cache.get(cache_key)
+            if cached is not None:
+                return cached.copy()
         fp = Footprint()
+        complete = True  # no missing trees / unresolved encodes encountered
         stack = [handle]
         seen: set[bytes] = set()
         while stack:
@@ -166,6 +285,7 @@ class Repository:
                     if res is not None:
                         stack.append(res)
                         continue
+                    complete = False  # footprint grows once this memoizes
                 fp.encodes.append(h)
                 continue
             if h.is_thunk():
@@ -183,39 +303,32 @@ class Repository:
                 continue
             fp.data.add(h.content_key())
             if h.content_type == TREE:
+                sub = self._fp_cache.get((h.content_key(), follow_memo))
+                if sub is not None and h.raw != handle.raw:
+                    fp.merge(sub)  # shared subtree: reuse, don't re-walk
+                    continue
                 try:
                     stack.extend(self.get_tree(h))
                 except MissingData:
                     # Tree node itself not resident: its key is already in
                     # fp.data; children unknown until it arrives.
-                    pass
+                    complete = False
+        if complete and cache_key is not None:
+            self._fp_cache.setdefault(cache_key, fp.copy())
         return fp
+
+    def reachable_objects(self, handle: Handle) -> tuple[Handle, ...]:
+        """Every non-literal handle reachable as an Object from ``handle``
+        (complete closures cached — see :func:`walk_object_closure`)."""
+        return walk_object_closure(
+            handle, self.memo_get,
+            lambda h: self.get_tree(h) if self.contains(h) else None,
+            self._reach_cache)
 
     def missing(self, handle: Handle) -> list[Handle]:
         """Handles reachable as Objects whose content is not resident."""
-        out: list[Handle] = []
-        stack = [handle]
-        seen: set[bytes] = set()
-        while stack:
-            h = stack.pop()
-            if h.raw in seen:
-                continue
-            seen.add(h.raw)
-            if h.is_encode():
-                res = self.memo_get(h)
-                if res is not None:
-                    stack.append(res)
-                continue  # unevaluated encode: not a *data* gap
-            if h.is_thunk():
-                continue  # lazy — see footprint()
-            if h.is_ref() or h.is_literal:
-                continue
-            if not self.contains(h):
-                out.append(h)
-                continue
-            if h.content_type == TREE:
-                stack.extend(self.get_tree(h))
-        return out
+        return [h for h in self.reachable_objects(handle)
+                if not self.contains(h)]
 
     def transitive_size(self, handle: Handle) -> int:
         """Bytes of resident data reachable as Objects from ``handle``.
@@ -295,5 +408,5 @@ class Repository:
             "blobs": len(self._blobs),
             "trees": len(self._trees),
             "memos": len(self._memo),
-            "blob_bytes": sum(len(b) for b in self._blobs.values()),
+            "blob_bytes": self._blob_bytes,  # maintained counter, O(1)
         }

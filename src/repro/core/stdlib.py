@@ -104,3 +104,17 @@ def _slice_blob(api: FixAPI, comb: Handle) -> Handle:
 def _identity(api: FixAPI, comb: Handle) -> Handle:
     kids = api.read_tree(comb)
     return kids[2]
+
+
+@register("checksum_tree")
+def _checksum_tree(api: FixAPI, comb: Handle) -> Handle:
+    """Fold a Tree of input Blobs into one checksum — a fan-out staging
+    workload: every child blob is in the minimum repository, so the
+    platform must move all of them before the slot binds (the batched
+    transfer scheduler's benchmark case)."""
+    _, _, inputs = api.read_tree(comb)
+    acc = 0
+    for kid in api.read_tree(inputs):
+        data = api.read_blob(kid)
+        acc = (acc * 31 + len(data) + (data[0] if data else 0)) & 0x7FFFFFFF
+    return api.create_int(acc)

@@ -29,7 +29,7 @@ from ..models.base import tree_map_specs
 from ..optim import AdamWConfig, ef_int8_allreduce, ef_state_specs
 from ..optim import adafactor as _adafactor
 from ..optim import adamw as _adamw
-from .sharding import RULE_VARIANTS, Sharder, make_rules
+from .sharding import RULE_VARIANTS, Sharder, compat_shard_map, make_rules
 
 
 @dataclass(frozen=True)
@@ -134,7 +134,6 @@ def build_train_step(cfg: ModelConfig, runcfg: RunConfig, mesh: Optional[Mesh]):
         # pod-local grads via shard_map over "pod" ONLY (data/model stay
         # automatic so the model's sharding constraints keep working), then
         # EF-int8 all-reduce across the DCN link
-        auto_axes = frozenset(a for a in mesh.axis_names if a != "pod")
 
         def synced_grads(params, batch, ef):
             def per_pod(params, batch, ef):
@@ -152,11 +151,11 @@ def build_train_step(cfg: ModelConfig, runcfg: RunConfig, mesh: Optional[Mesh]):
             efspec = jax.tree.map(lambda _: P(), ef)
             bspec = {k: P("pod") for k in batch}
             mspec = P()
-            return jax.shard_map(
+            return compat_shard_map(
                 per_pod, mesh=mesh,
                 in_specs=(rep, bspec, efspec),
                 out_specs=(rep, efspec, mspec),
-                check_vma=False, axis_names=frozenset({"pod"}),
+                check=False, manual_axes=("pod",),
             )(params, batch, ef)
     else:
         synced_grads = None

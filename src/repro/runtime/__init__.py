@@ -1,5 +1,7 @@
 """Fixpoint runtime: multi-node execution engine for Fix programs."""
 from .cluster import Cluster, Future, Link, Network
 from .node import Node, WorkItem
+from .transfers import LocationIndex, TransferManager, TransferPlan
 
-__all__ = ["Cluster", "Future", "Link", "Network", "Node", "WorkItem"]
+__all__ = ["Cluster", "Future", "Link", "Network", "Node", "WorkItem",
+           "LocationIndex", "TransferManager", "TransferPlan"]

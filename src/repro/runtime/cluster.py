@@ -11,9 +11,20 @@ transfer threads only post events):
   slot is bound (late binding).  The ``io_mode="internal"`` ablation instead
   binds the slot first and makes the worker perform blocking fetches —
   reproducing the starvation of conventional serverless platforms (fig 8a/b).
+* **Batched transfers** — all of a job's missing handles are coalesced into
+  per-(src → dst) :class:`~repro.runtime.transfers.TransferPlan`s that pay
+  link latency once and serialize the summed payload, executed by
+  persistent per-link workers (see ``transfers.py``).  In-flight transfers
+  are deduplicated across jobs: two jobs staging the same blob to the same
+  node share one wire transfer.
+* **Prefetch** — while a job waits on child Encodes, its already-known
+  needs start staging toward the tentatively placed node, overlapping
+  child compute with data movement (the paper's fig-8 starvation-reduction
+  mechanism).
 * **Dataflow-aware placement** — each job runs on the node minimizing bytes
-  moved, computed from the self-describing thunk (no side metadata).  The
-  ``placement="random"`` ablation reproduces "Fixpoint (no locality)".
+  moved, computed from the self-describing thunk via the scheduler's
+  location index (content key → nodes) — O(needs), no repository scans.
+  The ``placement="random"`` ablation reproduces "Fixpoint (no locality)".
 * **Tail calls** — a codelet returning a Thunk yields a *new* job that is
   re-placed from scratch: 500-deep chains need one client submission.
 * **Determinism dividends** — results are memoized first-write-wins, so
@@ -25,15 +36,16 @@ from __future__ import annotations
 import itertools
 import queue
 import random
-import struct
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
-from ..core import Evaluator, Handle, MissingData, Repository
-from ..core.handle import APPLICATION, BLOB, IDENTIFICATION, SELECTION, TREE
+from ..core import Handle, MissingData, Repository
+from ..core.handle import APPLICATION, BLOB, IDENTIFICATION, SELECTION, STRICT, TREE
+from ..core.repository import walk_object_closure
 from .node import Node, WorkItem
+from .transfers import LocationIndex, TransferManager
 
 
 # ----------------------------------------------------------------- network
@@ -82,8 +94,8 @@ class Future:
 
 
 # --------------------------------------------------------------------- job
-RESOLVE, WAIT_CHILDREN, STAGING, READY, RUNNING, STRICT_WAIT, STRICT_STAGE, DONE = range(8)
-_PHASE_NAMES = ["RESOLVE", "WAIT_CHILDREN", "STAGING", "READY", "RUNNING",
+RESOLVE, WAIT_CHILDREN, STAGING, RUNNING, STRICT_WAIT, STRICT_STAGE, DONE = range(7)
+_PHASE_NAMES = ["RESOLVE", "WAIT_CHILDREN", "STAGING", "RUNNING",
                 "STRICT_WAIT", "STRICT_STAGE", "DONE"]
 
 
@@ -123,10 +135,13 @@ class Cluster:
         speculate_after_s: Optional[float] = None,
         seed: int = 0,
         node_ram: int = 64 << 30,
+        transfer_mode: str = "batched",    # "batched" | "per_handle" (seed A/B)
+        prefetch: bool = True,             # stage known needs during WAIT_CHILDREN
     ):
         self.network = network or Network()
         self.placement = placement
         self.io_mode = io_mode
+        self.prefetch = prefetch
         self.rng = random.Random(seed)
         workers = workers_per_node * (oversubscribe if io_mode == "internal" else 1)
         self.nodes: dict[str, Node] = {}
@@ -144,10 +159,22 @@ class Cluster:
         self._memo: dict[bytes, Handle] = {}            # encode raw -> result
         self._lineage: dict[bytes, Handle] = {}          # content key -> encode
         self._inflight: dict[tuple, list] = {}           # (node, raw) -> waiter ids
+        self._reach: dict[bytes, tuple] = {}             # handle raw -> object closure
         self._ids = itertools.count()
         self._stop = False
         self.transfers = 0
         self.bytes_moved = 0
+
+        # Location index: every repository put (worker results, client puts,
+        # transfer deliveries) lands here, so source lookup and placement
+        # never scan node repositories.
+        self._locs = LocationIndex()
+        for name, n in self.nodes.items():
+            n.repo.add_put_listener(
+                lambda h, _name=name: self._locs.add(h.content_key(), _name))
+        self._xfer = TransferManager(
+            self.network, self.nodes, self._events.put,
+            account=self._account_transfer, mode=transfer_mode)
 
         self._sched = threading.Thread(target=self._loop, daemon=True, name="fix-sched")
         self._sched.start()
@@ -212,6 +239,7 @@ class Cluster:
     def shutdown(self) -> None:
         self._stop = True
         self._events.put(("stop",))
+        self._xfer.stop()
         for n in self.nodes.values():
             n.stop()
 
@@ -235,9 +263,45 @@ class Cluster:
                     self._on_node_failed(ev[1])
                 elif kind == "tick":
                     self._on_tick()
-            except Exception as e:  # noqa: BLE001 — fail the affected job
-                jid = ev[2] if kind in ("transfer_done",) else None
-                self._fail_all(e)
+            except Exception as e:  # noqa: BLE001 — fail the affected job only
+                self._scope_failure(kind, ev, e)
+
+    def _scope_failure(self, kind: str, ev: tuple, exc: BaseException) -> None:
+        """A handler blew up: fail the job(s) the event belonged to (and
+        their parents) but keep the scheduler loop — and every unrelated
+        in-flight job — alive."""
+        jids: set[int] = set()
+        if kind == "submit":
+            _, encode, fut, parent, _ignore = ev
+            if fut is not None and not fut.done():
+                fut.set_exception(exc)
+            if parent is not None:
+                jids.add(parent)
+            jid = self._by_encode.get(encode.raw)
+            if jid is not None:
+                jids.add(jid)
+        elif kind == "child_done":
+            jids.add(ev[1])
+        elif kind == "transfer_done":
+            node_id, raws = ev[1], ev[2]
+            for raw in raws:
+                jids.update(self._inflight.pop((node_id, raw), []))
+        elif kind == "ran":
+            jids.add(ev[2].job_id)
+        else:
+            # node_failed / tick touch many jobs; no single owner to blame.
+            self._fail_all(exc)
+            return
+        for jid in jids:
+            self._fail_job(self._jobs.get(jid), exc)
+
+    def _fail_job(self, job: Optional[Job], exc: BaseException) -> None:
+        if job is None or job.phase == DONE:
+            return
+        job.phase = DONE
+        for f in job.futures:
+            f.set_exception(exc)
+        self._notify_parents_exc(job, exc)
 
     def _fail_all(self, exc: BaseException) -> None:
         for job in list(self._jobs.values()):
@@ -266,7 +330,7 @@ class Cluster:
                     job.parents.append(parent)
                 return
         jid = next(self._ids)
-        job = Job(jid, encode, encode.unwrap_encode(), encode.interp == 5,
+        job = Job(jid, encode, encode.unwrap_encode(), encode.interp == STRICT,
                   ignore_memo=ignore_memo)
         if fut is not None:
             job.futures.append(fut)
@@ -289,18 +353,19 @@ class Cluster:
             job.phase = RESOLVE if job.phase == WAIT_CHILDREN else STRICT_STAGE
             self._advance(job)
 
-    def _on_transfer_done(self, node_id: str, raw: bytes) -> None:
-        waiters = self._inflight.pop((node_id, raw), [])
-        for jid in waiters:
-            job = self._jobs.get(jid)
-            if job is None or job.phase not in (STAGING, STRICT_STAGE):
-                continue
-            job.staging.discard(raw)
-            if not job.staging:
-                if job.phase == STAGING:
-                    self._enqueue_run(job)
-                else:
-                    self._enqueue_strictify(job)
+    def _on_transfer_done(self, node_id: str, raws: tuple) -> None:
+        for raw in raws:
+            waiters = self._inflight.pop((node_id, raw), [])
+            for jid in waiters:
+                job = self._jobs.get(jid)
+                if job is None or job.phase not in (STAGING, STRICT_STAGE):
+                    continue
+                job.staging.discard(raw)
+                if not job.staging:
+                    if job.phase == STAGING:
+                        self._enqueue_run(job)
+                    else:
+                        self._enqueue_strictify(job)
 
     def _on_ran(self, node: Node, item: WorkItem, result) -> None:
         job = self._jobs.get(item.job_id)
@@ -319,7 +384,9 @@ class Cluster:
             job.thunk = result
             job.epoch += 1
             job.phase = RESOLVE
-            self._advance(job)
+            # the thunk's definition may have died with its producing node
+            # (kill racing the "ran" event): restart from the encode if so
+            self._advance_or_restart(job)
             return
         # WHNF data
         job.whnf = result
@@ -331,6 +398,19 @@ class Cluster:
         self._begin_strictify(job)
 
     # ------------------------------------------------------------ advance
+    def _advance_or_restart(self, job: Job) -> None:
+        """Advance; if the in-progress (tail-call) thunk's definition is
+        gone (its producing node died), restart from the original encode —
+        the determinism dividend: every step re-derives identically."""
+        try:
+            self._advance(job)
+        except MissingData:
+            job.epoch += 1
+            job.thunk = job.encode.unwrap_encode()
+            job.whnf = None
+            job.phase = RESOLVE
+            self._advance(job)  # a second failure escapes to _scope_failure
+
     def _advance(self, job: Job) -> None:
         thunk = job.thunk
         if thunk.is_data():  # submitted encode over an already-data handle
@@ -347,6 +427,9 @@ class Cluster:
             job.pending_children = {c.raw for c in unresolved}
             for c in unresolved:
                 self._events.put(("submit", c, None, job.id, False))
+            # overlap child compute with data movement: stage what we
+            # already know this job needs toward its tentative placement
+            self._maybe_prefetch(needs)
             return
         # fold resolved child results into the staging set
         for enc in children:
@@ -364,15 +447,14 @@ class Cluster:
             return
         if missing:
             job.phase = STAGING
-            job.staging = {h.raw for h in missing}
-            for h in missing:
-                self._start_transfer(node, h, job.id)
+            job.staging = self._stage_missing(node, missing, job.id)
+            if not job.staging:
+                self._enqueue_run(job)
         else:
             self._enqueue_run(job)
 
     def _enqueue_run(self, job: Job, internal: Optional[list] = None) -> None:
         node = self.nodes[job.node]
-        job.phase = READY
         fetches = [(h, 0.0) for h in (internal or [])]
         item = WorkItem(job.id, job.epoch, job.thunk, internal_fetches=fetches)
         job.phase = RUNNING
@@ -384,7 +466,6 @@ class Cluster:
         """Deep-evaluate the WHNF result: nested thunks/encodes become child
         jobs; Ref'd data is staged; then the node runs a local strictify."""
         whnf = job.whnf
-        node = self.nodes[job.node] if job.node else self.client
         children: list[Handle] = []
         stage: list[Handle] = []
         stack = [whnf]
@@ -418,6 +499,7 @@ class Cluster:
             job._strict_children = children  # type: ignore[attr-defined]
             for c in unresolved:
                 self._events.put(("submit", c, None, job.id, False))
+            self._maybe_prefetch(stage, node_id=job.node)
             return
         job._strict_children = children  # type: ignore[attr-defined]
         job.phase = STRICT_STAGE
@@ -434,9 +516,9 @@ class Cluster:
             needs.extend(self._deep_object_handles(res))
         missing = [h for h in needs if not node.repo.contains(h)]
         if missing:
-            job.staging = {h.raw for h in missing}
-            for h in missing:
-                self._start_transfer(node, h, job.id)
+            job.staging = self._stage_missing(node, missing, job.id)
+            if not job.staging:
+                self._enqueue_strictify(job)
         else:
             self._enqueue_strictify(job)
 
@@ -541,18 +623,31 @@ class Cluster:
         raise ValueError(f"not a thunk: {thunk!r}")
 
     # ---------------------------------------------------------- placement
-    def _place(self, job: Job, needs: list[Handle]) -> Node:
+    def _place(self, job: Optional[Job], needs: list[Handle]) -> Node:
         candidates = self.worker_nodes()
         if not candidates:
             raise RuntimeError("no live worker nodes")
         if self.placement == "random":
             return self.rng.choice(candidates)
+        # Cost of running on node n = bytes of `needs` n does not hold.
+        # The location index inverts the seed's O(nodes × needs) repo scans:
+        # walk each handle's (few) replica sites and credit those nodes.
+        total = 0
+        credit: dict[str, int] = {}
+        seen: set[bytes] = set()
+        for h in needs:
+            if h.is_literal or h.raw in seen:
+                continue
+            seen.add(h.raw)
+            size = h.size if h.content_type == BLOB else 32 * h.size
+            total += size
+            for name in self._locs.nodes_for(h.content_key()):
+                n = self.nodes.get(name)
+                if n is not None and n.alive and n.n_workers > 0 and n.repo.contains(h):
+                    credit[name] = credit.get(name, 0) + size
         best, best_cost = None, None
         for n in candidates:
-            cost = 0
-            for h in needs:
-                if not n.repo.contains(h):
-                    cost += h.size if h.content_type == BLOB else 32 * h.size
+            cost = total - credit.get(n.id, 0)
             cost += n.queue.qsize() * 16  # mild load-balancing tiebreak
             if best_cost is None or cost < best_cost:
                 best, best_cost = n, cost
@@ -562,48 +657,81 @@ class Cluster:
         return self.worker_nodes()[0]
 
     # ---------------------------------------------------------- transfers
-    def _start_transfer(self, node: Node, h: Handle, job_id: int) -> None:
-        key = (node.id, h.raw)
-        if node.repo.contains(h):
-            self._inflight.setdefault(key, []).append(job_id)
-            self._events.put(("transfer_done", node.id, h.raw))
+    def _stage_missing(self, node: Node, handles: list[Handle],
+                       job_id: Optional[int] = None, *,
+                       recompute: bool = True) -> set:
+        """Coalesce ``handles`` into per-source batched transfers to
+        ``node``, joining any transfer already in flight (cross-job dedup).
+
+        Returns the set of handle raws now pending for ``job_id``.  With
+        ``job_id=None`` (prefetch) transfers are registered waiterless and
+        missing sources are skipped instead of recomputed.
+        """
+        batches: dict[str, list] = {}
+        pending: set[bytes] = set()
+        waiters = [job_id] if job_id is not None else []
+        for h in handles:
+            if node.repo.contains(h):
+                continue
+            key = (node.id, h.raw)
+            if key in self._inflight:  # shared wire transfer: join it
+                self._inflight[key].extend(waiters)
+                pending.add(h.raw)
+                continue
+            src = self._find_source_name(h, exclude=node.id)
+            if src is None:
+                if recompute:
+                    pending.add(h.raw)
+                    self._recompute_for(node, h, job_id)
+                continue
+            size = h.size if h.content_type == BLOB else 32 * h.size
+            payload = self.nodes[src].repo.raw_payload(h)
+            self._inflight[key] = list(waiters)
+            pending.add(h.raw)
+            batches.setdefault(src, []).append((h, payload, size))
+        for src, items in batches.items():
+            self._xfer.submit(src, node.id, items)
+        return pending
+
+    def _maybe_prefetch(self, needs: list[Handle],
+                        node_id: Optional[str] = None) -> None:
+        """Job is blocked on children: start moving its already-known needs
+        toward the (tentative) placement so data motion overlaps compute.
+        Externalized locality mode only — the ablations must keep their
+        seed behaviour — and never toward a dead node."""
+        if not self.prefetch or self.io_mode != "external" or self.placement != "locality":
             return
-        if key in self._inflight:
-            self._inflight[key].append(job_id)
+        cands = [h for h in needs if not h.is_literal]
+        if not cands:
             return
-        src = self._find_source_name(h, exclude=node.id)
-        if src is None:
-            # No replica survives: recompute from lineage (determinism!)
-            enc = self._lineage.get(h.content_key())
-            if enc is None:
-                self._inflight.setdefault(key, []).append(job_id)
-                self._events.put(("transfer_done", node.id, h.raw))  # will re-miss & fail
+        if node_id is not None:
+            node = self.nodes.get(node_id)
+        else:
+            try:
+                node = self._place(None, cands)
+            except RuntimeError:
                 return
-            self._inflight[key] = [job_id]
-            jid = next(self._ids)
-            rejob = Job(jid, enc, enc.unwrap_encode(), enc.interp == 5, ignore_memo=True)
-            rejob.on_complete.append(
-                lambda _j, node=node, h=h, key=key: self._retry_transfer(node, h, key)
-            )
-            self._jobs[jid] = rejob
-            self._advance(rejob)
+        if node is None or not node.alive or node.n_workers == 0:
             return
-        self._inflight[key] = [job_id]
-        size = h.size if h.content_type == BLOB else 32 * h.size
-        link = self.network.link(src, node.id)
-        src_node = self.nodes[src]
-        payload = src_node.repo.raw_payload(h)
-        self.transfers += 1
-        self.bytes_moved += size
+        self._stage_missing(node, cands, None, recompute=False)
 
-        def xfer():
-            time.sleep(link.latency_s)
-            with src_node.nic_lock:
-                time.sleep(link.serialized_s(size))
-            node.repo.put_handle_data(h, payload)
-            self._events.put(("transfer_done", node.id, h.raw))
-
-        threading.Thread(target=xfer, daemon=True).start()
+    def _recompute_for(self, node: Node, h: Handle, job_id: Optional[int]) -> None:
+        """No replica survives: recompute from lineage (determinism!)."""
+        key = (node.id, h.raw)
+        waiters = [job_id] if job_id is not None else []
+        enc = self._lineage.get(h.content_key())
+        if enc is None:
+            self._inflight.setdefault(key, []).extend(waiters)
+            self._events.put(("transfer_done", node.id, (h.raw,)))  # will re-miss & fail
+            return
+        self._inflight[key] = list(waiters)
+        jid = next(self._ids)
+        rejob = Job(jid, enc, enc.unwrap_encode(), enc.interp == STRICT, ignore_memo=True)
+        rejob.on_complete.append(
+            lambda _j, node=node, h=h, key=key: self._retry_transfer(node, h, key)
+        )
+        self._jobs[jid] = rejob
+        self._advance(rejob)
 
     def _retry_transfer(self, node: Node, h: Handle, key: tuple) -> None:
         waiters = self._inflight.pop(key, [])
@@ -611,7 +739,15 @@ class Cluster:
             job = self._jobs.get(jid)
             if job is None or job.phase not in (STAGING, STRICT_STAGE):
                 continue
-            self._start_transfer(node, h, jid)
+            if self._stage_missing(node, [h], jid):
+                continue  # staged again (or rejoined); waiter re-registered
+            # already resident: unblock directly
+            job.staging.discard(h.raw)
+            if not job.staging:
+                if job.phase == STAGING:
+                    self._enqueue_run(job)
+                else:
+                    self._enqueue_strictify(job)
 
     def _blocking_fetch(self, node: Node, h: Handle) -> None:
         """Internal-I/O mode: the worker performs the fetch while holding
@@ -628,16 +764,19 @@ class Cluster:
         time.sleep(link.latency_s)
         with src_node.nic_lock:
             time.sleep(link.serialized_s(size))
-        with node._acct_lock:
-            pass
         self.transfers += 1
         self.bytes_moved += size
         node.repo.put_handle_data(h, payload)
 
+    def _account_transfer(self, n_transfers: int, n_bytes: int) -> None:
+        self.transfers += n_transfers
+        self.bytes_moved += n_bytes
+
     # -------------------------------------------------------- node failure
     def _on_node_failed(self, node_id: str) -> None:
+        self._locs.drop_node(node_id)
         for job in list(self._jobs.values()):
-            if job.phase in (STAGING, READY, RUNNING, STRICT_STAGE) and job.node == node_id:
+            if job.phase in (STAGING, RUNNING, STRICT_STAGE) and job.node == node_id:
                 job.epoch += 1
                 job.staging.clear()
                 job.node = None
@@ -645,7 +784,10 @@ class Cluster:
                     # whnf data may have died with the node; re-run the step
                     job.whnf = None
                 job.phase = RESOLVE
-                self._advance(job)
+                try:
+                    self._advance_or_restart(job)
+                except Exception as e:  # noqa: BLE001 — this job only
+                    self._fail_job(job, e)
         # drop in-flight transfer bookkeeping involving the dead node
         for key in [k for k in self._inflight if k[0] == node_id]:
             self._inflight.pop(key, None)
@@ -687,8 +829,17 @@ class Cluster:
     def _find_source_name(self, h: Handle, exclude: Optional[str] = None) -> Optional[str]:
         if h.is_literal:
             return "client"
+        key = h.content_key()
+        for name in self._locs.nodes_for(key):
+            if name == exclude:
+                continue
+            n = self.nodes.get(name)
+            if n is not None and n.alive and n.repo.contains(h):
+                return name
+        # Fallback scan: covers content that raced the index (and repairs it)
         for name, n in self.nodes.items():
             if name != exclude and n.alive and n.repo.contains(h):
+                self._locs.add(key, name)
                 return name
         return None
 
@@ -703,28 +854,11 @@ class Cluster:
 
     def _deep_object_handles(self, handle: Handle) -> list[Handle]:
         """All content handles reachable as Objects (for staging a strict
-        child result)."""
-        out: list[Handle] = []
-        stack = [handle]
-        seen = set()
-        while stack:
-            h = stack.pop()
-            if h.raw in seen or h.is_literal:
-                continue
-            seen.add(h.raw)
-            if h.is_encode():
-                res = self._memo.get(h.raw)
-                if res is not None:
-                    stack.append(res)
-                continue
-            if h.is_thunk() or h.is_ref():
-                continue
-            out.append(h)
-            if h.content_type == TREE:
-                kids = self._tree_children(h)
-                if kids is not None:
-                    stack.extend(kids)
-        return out
+        child result) — the shared closure walker over the *cluster* memo
+        table and cross-node tree lookup, cached in ``self._reach``."""
+        return list(walk_object_closure(
+            handle, lambda h: self._memo.get(h.raw),
+            self._tree_children, self._reach))
 
     def _deep_size(self, handle: Handle) -> int:
         return sum(h.size if h.content_type == BLOB else 32 * h.size
@@ -732,7 +866,4 @@ class Cluster:
 
     # -------------------------------------------------------- worker event
     def _on_worker_done(self, node: Node, item: WorkItem, result) -> None:
-        if item.thunk is None and not isinstance(result, BaseException):
-            # strictify op: worker ran evaluator.strictify
-            pass
         self._events.put(("ran", node, item, result))

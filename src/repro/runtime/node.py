@@ -96,7 +96,7 @@ class Node:
                 if item.thunk is None:
                     result = self.evaluator.strictify(item.strict_target)
                 else:
-                    result = self.evaluator._think(item.thunk)
+                    result = self.evaluator.think(item.thunk)
             except Exception as e:  # noqa: BLE001 — reported to scheduler
                 result = e
             dt = time.perf_counter_ns() - t0

@@ -1,0 +1,266 @@
+"""Batched, pipelined network transfers + the scheduler's location index.
+
+The seed runtime shipped every missing handle as its own thread-per-handle
+transfer: each one paid link latency, took the source NIC lock, slept for
+its own (often microscopic) serialization share, and posted its own
+scheduler event.  For a job staging K inputs that is K thread spawns,
+K latency charges and K events — the per-transfer *fixed* costs dominate
+and the scheduler re-walks the object graph to find a source for every
+handle.
+
+This module externalizes that work into a proper subsystem (paper §4.2:
+the platform owns network I/O, so it can schedule it):
+
+* :class:`TransferPlan` — all handles a job (or prefetch pass) needs moved
+  across one (src → dst) link, coalesced into a single wire transfer that
+  pays link latency **once** and serializes bandwidth for the summed
+  payload.
+* :class:`TransferManager` — a small pool of *persistent* per-link worker
+  threads executing plans.  Serialization holds the source NIC; propagation
+  latency is handed to a shared delivery timer so consecutive plans on a
+  link pipeline (plan N+1 serializes while plan N is in flight).
+  ``mode="per_handle"`` reproduces the seed's thread-per-handle behaviour
+  for A/B benchmarking (see ``benchmarks --fig staging``).
+* :class:`LocationIndex` — content key → node-id set, maintained from
+  repository put notifications and transfer deliveries, so source lookup
+  and locality placement are O(needs) instead of O(nodes × graph walk).
+
+Cross-job dedup (two jobs staging the same blob to the same node share one
+wire transfer) lives in the scheduler's in-flight table; this module only
+ever sees already-deduplicated batches.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from ..core import Handle
+
+
+# ----------------------------------------------------------- location index
+class LocationIndex:
+    """Which nodes hold which content (content key → set of node ids).
+
+    Entries are *hints*: data can vanish under us (node failure, explicit
+    eviction), so readers must verify residency with the node's repository
+    before trusting a hit.  Writers are repository put listeners (worker
+    and transfer threads) plus the scheduler, hence the lock.
+    """
+
+    def __init__(self):
+        self._locs: dict[bytes, set[str]] = {}
+        self._lock = threading.Lock()
+
+    def add(self, key: bytes, node_id: str) -> None:
+        with self._lock:
+            self._locs.setdefault(key, set()).add(node_id)
+
+    def drop_node(self, node_id: str) -> None:
+        """A node died (fail-stop): forget everything it held."""
+        with self._lock:
+            empty = []
+            for key, nodes in self._locs.items():
+                nodes.discard(node_id)
+                if not nodes:
+                    empty.append(key)
+            for key in empty:
+                del self._locs[key]
+
+    def nodes_for(self, key: bytes) -> tuple[str, ...]:
+        with self._lock:
+            nodes = self._locs.get(key)
+            return tuple(nodes) if nodes else ()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._locs)
+
+
+# ------------------------------------------------------------ transfer plan
+@dataclass
+class TransferPlan:
+    """One coalesced wire transfer: every handle moving src → dst together.
+
+    Payloads are captured eagerly (on the scheduler thread, while the
+    source is known to hold them) so a source failing mid-flight cannot
+    corrupt the batch — mirroring the seed's eager ``raw_payload`` grab.
+    """
+
+    src: str
+    dst: str
+    items: list = field(default_factory=list)  # (Handle, payload, size)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(size for _, _, size in self.items)
+
+    @property
+    def raws(self) -> tuple[bytes, ...]:
+        return tuple(h.raw for h, _, _ in self.items)
+
+
+# ------------------------------------------------------------ delivery timer
+class _DeliveryTimer:
+    """Single thread firing callbacks at deadlines (propagation latency).
+
+    Link workers hand completed serializations here so the *next* plan can
+    start serializing while the previous one is still propagating — the
+    pipelining that makes batched latency per-plan instead of per-handle
+    without giving up wall-clock overlap.
+    """
+
+    def __init__(self):
+        self._heap: list = []
+        self._cv = threading.Condition()
+        self._seq = itertools.count()
+        self._stopped = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="fix-xfer-timer")
+        self._thread.start()
+
+    def schedule(self, when: float, fn: Callable[[], None]) -> None:
+        with self._cv:
+            heapq.heappush(self._heap, (when, next(self._seq), fn))
+            self._cv.notify()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify()
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                if self._stopped:
+                    return
+                if not self._heap:
+                    self._cv.wait()
+                    continue
+                when, _, fn = self._heap[0]
+                now = time.monotonic()
+                if when > now:
+                    self._cv.wait(when - now)
+                    continue
+                heapq.heappop(self._heap)
+            try:
+                fn()
+            except Exception:  # noqa: BLE001 — a delivery must never kill the clock
+                pass
+
+
+# -------------------------------------------------------------- link worker
+class _LinkWorker:
+    """Persistent worker serializing plans over one (src → dst) link."""
+
+    def __init__(self, manager: "TransferManager", src: str, dst: str):
+        self.manager = manager
+        self.src = src
+        self.dst = dst
+        self.q: "queue.Queue[Optional[TransferPlan]]" = queue.Queue()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"fix-xfer-{src}-{dst}")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self.q.put(None)
+
+    def _run(self) -> None:
+        mgr = self.manager
+        while True:
+            plan = self.q.get()
+            if plan is None:
+                return
+            link = mgr.network.link(plan.src, plan.dst)
+            src_node = mgr.nodes.get(plan.src)
+            nic = src_node.nic_lock if src_node is not None else threading.Lock()
+            with nic:  # the source NIC serializes the summed payload once
+                time.sleep(link.serialized_s(plan.total_bytes))
+            mgr._timer.schedule(time.monotonic() + link.latency_s,
+                                lambda p=plan: mgr._deliver(p))
+
+
+# ---------------------------------------------------------- transfer manager
+class TransferManager:
+    """Executes :class:`TransferPlan`s with per-link persistent workers.
+
+    ``submit`` is called from the scheduler thread only; completions are
+    posted back as ``("transfer_done", dst_id, raws)`` events.  ``account``
+    is invoked synchronously on submit with (transfer_count, bytes) so the
+    cluster's public counters stay scheduler-thread-owned.
+    """
+
+    def __init__(self, network, nodes: dict, post_event: Callable,
+                 account: Optional[Callable] = None, mode: str = "batched"):
+        if mode not in ("batched", "per_handle"):
+            raise ValueError(f"unknown transfer mode {mode!r}")
+        self.network = network
+        self.nodes = nodes
+        self.mode = mode
+        self._post = post_event
+        self._account = account or (lambda n, b: None)
+        self._timer = _DeliveryTimer()
+        self._workers: dict[tuple[str, str], _LinkWorker] = {}
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, src_id: str, dst_id: str, items: list) -> None:
+        """Move ``items`` = [(handle, payload, size), ...] src → dst."""
+        if not items:
+            return
+        plan = TransferPlan(src_id, dst_id, list(items))
+        if self.mode == "per_handle":
+            # Seed behaviour: one thread, one latency charge, one NIC grab
+            # and one scheduler event *per handle* — kept for A/B runs.
+            self._account(len(plan.items), plan.total_bytes)
+            for h, payload, size in plan.items:
+                threading.Thread(
+                    target=self._per_handle_xfer,
+                    args=(plan.src, plan.dst, h, payload, size),
+                    daemon=True,
+                ).start()
+            return
+        self._account(1, plan.total_bytes)
+        key = (src_id, dst_id)
+        worker = self._workers.get(key)
+        if worker is None:
+            worker = self._workers[key] = _LinkWorker(self, src_id, dst_id)
+        worker.q.put(plan)
+
+    # -------------------------------------------------------------- delivery
+    def _deliver(self, plan: TransferPlan) -> None:
+        try:
+            dst = self.nodes.get(plan.dst)
+            if dst is not None and dst.alive:
+                for h, payload, _size in plan.items:
+                    dst.repo.put_handle_data(h, payload)
+        finally:
+            # ALWAYS post, even toward a dead node or past a failed install:
+            # waiting jobs must unblock (an undelivered handle re-misses and
+            # fails the job with the real error) and the scheduler's
+            # in-flight table must be reaped.
+            self._post(("transfer_done", plan.dst, plan.raws))
+
+    def _per_handle_xfer(self, src_id: str, dst_id: str, h: Handle,
+                         payload, size: int) -> None:
+        link = self.network.link(src_id, dst_id)
+        src_node = self.nodes.get(src_id)
+        time.sleep(link.latency_s)
+        nic = src_node.nic_lock if src_node is not None else threading.Lock()
+        with nic:
+            time.sleep(link.serialized_s(size))
+        try:
+            dst = self.nodes.get(dst_id)
+            if dst is not None and dst.alive:
+                dst.repo.put_handle_data(h, payload)
+        finally:
+            self._post(("transfer_done", dst_id, (h.raw,)))
+
+    # ------------------------------------------------------------- lifecycle
+    def stop(self) -> None:
+        for w in self._workers.values():
+            w.stop()
+        self._timer.stop()

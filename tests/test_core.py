@@ -126,6 +126,70 @@ class TestRepository:
         parsed = parse_limits(raw)
         assert parsed["ram_bytes"] == 123456 and parsed["cpu_slots"] == 3
 
+    def test_blob_bytes_is_maintained_counter(self):
+        repo = Repository()
+        repo.put_blob(b"a" * 100)
+        repo.put_blob(b"a" * 100)  # content-addressed dedup: counted once
+        repo.put_blob(b"b" * 50)
+        repo.put_blob(b"tiny")     # literal: never stored
+        assert repo.stats()["blob_bytes"] == 150
+        other = Repository()
+        h = other.put_blob(b"c" * 70)
+        repo.put_handle_data(h, other.get_blob(h))  # network-install path
+        repo.put_handle_data(h, other.get_blob(h))  # duplicate: no recount
+        assert repo.stats()["blob_bytes"] == 220
+
+    def test_put_listener_fires_once_per_new_content(self):
+        repo = Repository()
+        seen = []
+        repo.add_put_listener(lambda h: seen.append(h.content_key()))
+        b = repo.put_blob(b"c" * 100)
+        repo.put_blob(b"c" * 100)      # dedup: no second notification
+        t = repo.put_tree([b])
+        repo.put_tree([b])
+        repo.put_blob(b"small-literal")  # literals never notify
+        assert seen == [b.content_key(), t.content_key()]
+
+    def test_strict_memo_public_api(self):
+        repo = Repository()
+        t = repo.put_tree([Handle.blob(b"x")])
+        assert repo.strict_memo_get(t) is None
+        repo.strict_memo_put(t, t)
+        assert repo.strict_memo_get(t) == t
+        repo.strict_memo_put(t, t.as_ref())  # first-write-wins
+        assert repo.strict_memo_get(t) == t
+
+    def test_footprint_cache_returns_fresh_copies(self):
+        repo = Repository()
+        big = repo.put_blob(b"d" * 1000)
+        t = repo.put_tree([big])
+        fp1 = repo.footprint(t)
+        fp1.data.clear()  # caller mutation must not poison the cache
+        fp2 = repo.footprint(t)
+        assert fp2.data == {t.content_key(), big.content_key()}
+
+    def test_footprint_incomplete_not_cached(self):
+        """A footprint computed while a subtree is absent must grow once
+        the subtree arrives (no stale complete-cache entry)."""
+        repo = Repository()
+        blob = Handle.blob(b"q" * 200)
+        child = Handle.tree([blob])       # handle only: content not stored
+        parent = repo.put_tree([child])
+        fp = repo.footprint(parent)
+        assert blob.content_key() not in fp.data  # children unknown
+        repo.put_tree([blob])             # child tree content arrives
+        repo.put_blob(b"q" * 200)
+        fp2 = repo.footprint(parent)
+        assert blob.content_key() in fp2.data
+
+    def test_missing_uses_closure_and_tracks_eviction(self):
+        repo = Repository()
+        blob = repo.put_blob(b"m" * 300)
+        t = repo.put_tree([blob])
+        assert repo.missing(t) == []      # complete: closure now cached
+        repo._blobs.pop(blob.content_key(), None)
+        assert repo.missing(t) == [blob]  # residency re-checked every call
+
 
 # --------------------------------------------------------------- evaluator
 class TestEvaluator:

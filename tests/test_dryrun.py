@@ -49,6 +49,7 @@ print("ok")
     assert "ok" in _run(code)
 
 
+@pytest.mark.slow
 def test_rollup_matches_unrolled_reference():
     code = """
 import os

@@ -150,8 +150,10 @@ class TestOptimizers:
 
     def test_ef_int8_compression_bounded_error(self):
         """Single-host simulation of the 2-pod EF-int8 all-reduce."""
-        mesh = jax.make_mesh((1,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import axis_type_kwargs
+        from repro.parallel import compat_shard_map
+
+        mesh = jax.make_mesh((1,), ("pod",), **axis_type_kwargs(1))
         g = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.01
         err = jnp.zeros_like(g)
 
@@ -160,9 +162,9 @@ class TestOptimizers:
 
         from jax.sharding import PartitionSpec as P
 
-        out, new_err = jax.jit(jax.shard_map(run, mesh=mesh,
-                                             in_specs=(P(), P()),
-                                             out_specs=(P(), P())))(g, err)
+        out, new_err = jax.jit(compat_shard_map(run, mesh=mesh,
+                                                in_specs=(P(), P()),
+                                                out_specs=(P(), P())))(g, err)
         # quantization error bounded by scale/2, and error feedback captures it
         scale = float(jnp.abs(g).max()) / 127
         assert float(jnp.abs(out - g).max()) <= scale

@@ -1,0 +1,203 @@
+"""Tests for the batched transfer scheduler, location index and prefetch."""
+import time
+
+import pytest
+
+from repro.core import Handle, Repository
+from repro.core.stdlib import combination
+from repro.runtime import Cluster, Link, Network
+
+
+def _i(v: int) -> Handle:
+    return Handle.blob(v.to_bytes(8, "little", signed=True))
+
+
+def _int_of(repo: Repository, h: Handle) -> int:
+    return int.from_bytes(repo.get_blob(h), "little", signed=True)
+
+
+def _staging_thunk(c: Cluster, n_inputs: int = 16, size: int = 4096,
+                   tag: int = 0) -> Handle:
+    """A checksum_tree job whose inputs (a tree of blobs) live on s0."""
+    repo = c.nodes["s0"].repo
+    blobs = [repo.put_blob(bytes([tag % 251, i % 251]) + b"x" * (size - 2))
+             for i in range(n_inputs)]
+    tree = repo.put_tree(blobs)
+    return combination(c.client_repo, "checksum_tree", tree)
+
+
+class TestBatching:
+    def test_batching_collapses_transfers_same_bytes(self):
+        """N same-link transfers coalesce into one TransferPlan: transfer
+        count drops, bytes on the wire are identical, result unchanged."""
+        results = {}
+        for mode in ("per_handle", "batched"):
+            c = Cluster(n_nodes=1, workers_per_node=2, storage_nodes=("s0",),
+                        network=Network(Link(latency_s=0.001, gbps=10)),
+                        transfer_mode=mode)
+            try:
+                th = _staging_thunk(c, n_inputs=16)
+                out = c.evaluate(th.strict(), timeout=30)
+                val = _int_of(c.fetch_result(out), out)
+                results[mode] = (val, c.transfers, c.bytes_moved)
+            finally:
+                c.shutdown()
+        val_ph, tx_ph, by_ph = results["per_handle"]
+        val_b, tx_b, by_b = results["batched"]
+        assert val_b == val_ph
+        assert by_b == by_ph            # same bytes moved
+        assert tx_ph >= 17              # inputs tree + 16 blobs, one each
+        assert tx_b < tx_ph
+        assert tx_b <= 2                # one plan from s0, one from client
+
+    def test_cross_job_dedup_shares_wire_transfer(self):
+        """Two jobs staging the same blob to the same node join one
+        in-flight wire transfer instead of fetching twice."""
+        # slow link: the 500 kB transfer is still in flight when job 2 stages
+        c = Cluster(n_nodes=1, workers_per_node=2, storage_nodes=("s0",),
+                    network=Network(Link(latency_s=0.02, gbps=0.1)))
+        try:
+            payload = b"D" * 500_000
+            blob = c.nodes["s0"].repo.put_blob(payload)
+            th1 = combination(c.client_repo, "count_string", blob,
+                              Handle.blob(b"DD"))
+            th2 = combination(c.client_repo, "slice_blob", blob, _i(0), _i(8))
+            f1 = c.submit(th1.strict())
+            f2 = c.submit(th2.strict())
+            f1.result(timeout=60)
+            f2.result(timeout=60)
+            # blob once (500 kB) + two small def trees; far below 2 blobs
+            assert c.bytes_moved < 2 * len(payload)
+        finally:
+            c.shutdown()
+
+
+class TestLocationIndex:
+    def test_index_tracks_puts_and_kills(self):
+        c = Cluster(n_nodes=3, workers_per_node=1)
+        try:
+            payload = b"Z" * 100_000
+            h = c.nodes["n1"].repo.put_blob(payload)
+            assert c._locs.nodes_for(h.content_key()) == ("n1",)
+            assert c._find_source_name(h) == "n1"
+            c.kill_node("n1")
+            # dead node is excluded immediately (alive flag), and the index
+            # entry is dropped once the scheduler processes the failure
+            assert c._find_source_name(h) is None
+            deadline = time.monotonic() + 5
+            while c._locs.nodes_for(h.content_key()) and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert c._locs.nodes_for(h.content_key()) == ()
+            # a new replica elsewhere re-populates via the put listener
+            c.nodes["n2"].repo.put_blob(payload)
+            assert c._find_source_name(h) == "n2"
+        finally:
+            c.shutdown()
+
+    def test_index_survives_direct_eviction(self):
+        """Index entries are hints: data wiped behind the scheduler's back
+        must not produce a phantom source."""
+        c = Cluster(n_nodes=2, workers_per_node=1)
+        try:
+            payload = b"E" * 50_000
+            h = c.nodes["n0"].repo.put_blob(payload)
+            c.nodes["n0"].repo._blobs.pop(h.content_key(), None)
+            assert c._find_source_name(h) is None
+        finally:
+            c.shutdown()
+
+
+class TestPrefetch:
+    def _child_blocked_thunk(self, c: Cluster, payload: bytes) -> Handle:
+        """count_string over a shard on s0 where the needle is a child
+        Encode — the job waits on the child while the shard prefetches."""
+        shard = c.nodes["s0"].repo.put_blob(payload)
+        needle = combination(c.client_repo, "slice_blob",
+                             Handle.blob(b"DDDD"), _i(0), _i(2))
+        return combination(c.client_repo, "count_string", shard,
+                           needle.strict())
+
+    def test_prefetch_parity_with_disabled(self):
+        """Prefetch overlaps child compute with staging but must not move
+        extra bytes or change the result (in-flight dedup)."""
+        results = {}
+        payload = b"D" * 400_000
+        for pf in (True, False):
+            c = Cluster(n_nodes=1, workers_per_node=2, storage_nodes=("s0",),
+                        network=Network(Link(latency_s=0.002, gbps=1.0)),
+                        prefetch=pf)
+            try:
+                th = self._child_blocked_thunk(c, payload)
+                out = c.evaluate(th.strict(), timeout=60)
+                val = _int_of(c.fetch_result(out), out)
+                results[pf] = (val, c.bytes_moved)
+            finally:
+                c.shutdown()
+        assert results[True][0] == results[False][0] == payload.count(b"DD")
+        assert results[True][1] == results[False][1]
+
+    def test_prefetch_never_stages_to_dead_node(self):
+        c = Cluster(n_nodes=2, workers_per_node=1, storage_nodes=("s0",),
+                    network=Network(Link(latency_s=0.002, gbps=1.0)))
+        try:
+            dests = []
+            orig_submit = c._xfer.submit
+
+            def recording_submit(src, dst, items):
+                dests.append(dst)
+                return orig_submit(src, dst, items)
+
+            c._xfer.submit = recording_submit
+            c.kill_node("n1")
+            th = self._child_blocked_thunk(c, b"D" * 200_000)
+            out = c.evaluate(th.strict(), timeout=60)
+            assert _int_of(c.fetch_result(out), out) > 0
+            assert dests  # staging did happen
+            assert "n1" not in dests
+        finally:
+            c.shutdown()
+
+
+class TestFailover:
+    def test_kill_during_staging_reroutes(self):
+        """Killing the destination mid-transfer: the plan's late delivery
+        is dropped (dead node) and the job re-places and completes."""
+        c = Cluster(n_nodes=2, workers_per_node=1, storage_nodes=("s0",),
+                    network=Network(Link(latency_s=0.02, gbps=0.05)))
+        try:
+            payload = b"K" * 500_000  # ~80 ms serialization at 0.05 Gb/s
+            blob = c.nodes["s0"].repo.put_blob(payload)
+            th = combination(c.client_repo, "count_string", blob,
+                             Handle.blob(b"KK"))
+            fut = c.submit(th.strict())
+            time.sleep(0.04)  # transfer in flight toward the placed node
+            c.kill_node("n0")
+            out = fut.result(timeout=60)
+            assert _int_of(c.fetch_result(out), out) == len(payload) // 2
+        finally:
+            c.shutdown()
+
+
+class TestScopedFailure:
+    def test_one_bad_job_does_not_fail_others(self):
+        """A handler exception (unknown procedure definition walk) fails
+        only the offending job; the scheduler loop and unrelated in-flight
+        jobs keep going."""
+        c = Cluster(n_nodes=2, workers_per_node=2)
+        try:
+            good1 = combination(c.client_repo, "inc_chain", _i(0), _i(60))
+            f_good1 = c.submit(good1.strict())
+            # a selection thunk over a malformed pair raises inside the
+            # scheduler's _step_needs (not in a worker)
+            bad_pair = c.client_repo.put_tree([_i(1)])  # not a [target, idx] pair
+            f_bad = c.submit(bad_pair.selection_of().strict())
+            good2 = combination(c.client_repo, "add", _i(20), _i(22))
+            f_good2 = c.submit(good2.strict())
+            with pytest.raises(Exception):
+                f_bad.result(timeout=30)
+            out1 = f_good1.result(timeout=60)
+            out2 = f_good2.result(timeout=30)
+            assert _int_of(c.fetch_result(out1), out1) == 60
+            assert _int_of(c.fetch_result(out2), out2) == 42
+        finally:
+            c.shutdown()
