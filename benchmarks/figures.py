@@ -1,7 +1,10 @@
 """Paper-figure benchmarks (one function per table/figure of §5).
 
-Each returns a dict of measurements; run.py prints CSV.  Comparator
-baselines are honest analogs implemented on our own runtime:
+Each returns a dict of measurements; run.py prints CSV.  Workloads are
+written against the ``repro.fix`` frontend (typed codelets + lazy graphs +
+the Backend protocol) — which compiles to combination trees byte-identical
+to the hand-built ones, so numbers are comparable across the migration.
+Comparator baselines are honest analogs implemented on our own runtime:
 
 * "subprocess"          — fig 7a's Linux vfork+exec comparator.
 * "client-driven"       — fig 7b/9's Ray-like mode: the client performs a
@@ -14,15 +17,22 @@ baselines are honest analogs implemented on our own runtime:
 """
 from __future__ import annotations
 
-import struct
 import subprocess
 import sys
 import time
 
 import numpy as np
 
+import repro.fix as fix
 from repro.core import Evaluator, Handle, Repository
-from repro.core.stdlib import combination
+from repro.core.stdlib import (
+    add,
+    checksum_tree,
+    combination,
+    count_string,
+    inc_chain,
+    merge_counts,
+)
 from repro.runtime import Cluster, Link, Network
 
 
@@ -30,13 +40,10 @@ def _i(v: int) -> Handle:
     return Handle.blob(v.to_bytes(8, "little", signed=True))
 
 
-def _int_of(repo, h) -> int:
-    return int.from_bytes(repo.get_blob(h), "little", signed=True)
-
-
 # ------------------------------------------------------------------ fig 7a
 def fig7a_invocation(n: int = 4096) -> dict:
-    """Invocation overhead of add(i8, i8): static call / Fix / subprocess."""
+    """Invocation overhead of add(i8, i8): static call / Fix (raw and
+    frontend spellings) / subprocess."""
     # static python call
     f = lambda a, b: a + b
     t0 = time.perf_counter_ns()
@@ -45,7 +52,7 @@ def fig7a_invocation(n: int = 4096) -> dict:
         acc = f(acc & 0xFF, i & 0xFF)
     static_ns = (time.perf_counter_ns() - t0) / n
 
-    # Fix evaluation (fresh thunk each time: full reduction path)
+    # Fix evaluation, raw Table-1 spelling (fresh thunk each time)
     repo = Repository()
     ev = Evaluator(repo)
     ev.evaluate(combination(repo, "add", _i(1), _i(2)).strict())  # warm
@@ -53,6 +60,16 @@ def fig7a_invocation(n: int = 4096) -> dict:
     for i in range(n):
         ev.evaluate(combination(repo, "add", _i(i), _i(i + 1)).strict())
     fix_ns = (time.perf_counter_ns() - t0) / n
+
+    # frontend spelling: typed call -> compile -> evaluate (same thunks,
+    # so the delta over fix_us is the marshalling layer's cost)
+    be = fix.local()
+    be.run(add(1, 2))  # warm
+    t0 = time.perf_counter_ns()
+    for i in range(n):
+        be.evaluate(add(i, i + 1), timeout=None)  # synchronous fast path
+    frontend_ns = (time.perf_counter_ns() - t0) / n
+    be.close()
 
     # memo-hit path (pay-for-results: repeated work is free)
     th = combination(repo, "add", _i(7), _i(8)).strict()
@@ -73,6 +90,7 @@ def fig7a_invocation(n: int = 4096) -> dict:
     return {
         "static_us": static_ns / 1e3,
         "fix_us": fix_ns / 1e3,
+        "fix_frontend_us": frontend_ns / 1e3,
         "fix_memo_us": memo_ns / 1e3,
         "subprocess_us": proc_ns / 1e3,
         "slowdown_subprocess_vs_fix": proc_ns / fix_ns,
@@ -90,20 +108,18 @@ def fig7b_chain(length: int = 500) -> dict:
                       | {(f"n{i}", "client"): Link(lat, 10) for i in range(2)})
         c = Cluster(n_nodes=2, workers_per_node=2, network=net)
         try:
+            be = fix.on(c)
             # Fix: the whole chain is one thunk (tail calls stay server-side)
-            th = combination(c.client_repo, "inc_chain", _i(0), _i(length))
             t0 = time.perf_counter()
-            r = c.evaluate(th.strict(), timeout=120)
+            r = be.fetch(inc_chain(0, length), timeout=120)
             fix_s = time.perf_counter() - t0
-            assert _int_of(c.fetch_result(r), r) == length
+            assert r == length
             # client-driven: one submission per step, client latency each way
             t0 = time.perf_counter()
             v = 0
             for _ in range(length):
                 time.sleep(lat)  # request leaves the client
-                step = combination(c.client_repo, "add", _i(v), _i(1))
-                rr = c.evaluate(step.strict(), timeout=120)
-                v = _int_of(c.fetch_result(rr), rr)
+                v = be.fetch(add(v, 1), timeout=120)
             client_s = time.perf_counter() - t0
             assert v == length
             out[f"fix_{label}_s"] = fix_s
@@ -127,6 +143,7 @@ def fig8a_late_binding(n_jobs: int = 256, storage_latency: float = 0.15,
         c = Cluster(n_nodes=1, workers_per_node=workers, io_mode=mode,
                     oversubscribe=oversub, storage_nodes=("s0",), network=net)
         try:
+            be = fix.on(c)
             inputs = []
             for i in range(n_jobs):
                 payload = i.to_bytes(8, "little", signed=True) + b"\x00" * 56
@@ -134,14 +151,13 @@ def fig8a_late_binding(n_jobs: int = 256, storage_latency: float = 0.15,
                 inputs.append(h)
             c.reset_accounting()
             t0 = time.perf_counter()
-            futs = [c.submit(combination(c.client_repo, "count_string",
-                                         h, Handle.blob(b"\x00")).strict())
-                    for h in inputs]
+            futs = [be.submit(count_string(h, b"\x00")) for h in inputs]
             for f in futs:
                 f.result(timeout=300)
             dt = time.perf_counter() - t0
             util = c.utilization(dt)
             out[f"{mode}_s"] = dt
+            out[f"{mode}_starved_frac"] = round(util["starved_frac"], 3)
             out[f"{mode}_idle_iowait_frac"] = round(util["idle_iowait_frac"], 3)
         finally:
             c.shutdown()
@@ -172,31 +188,27 @@ def fig8b_wordcount(n_shards: int = 48, shard_mb: float = 16.0,
                     oversubscribe=2 if io_mode == "internal" else 1,
                     network=net, seed=1)
         try:
+            be = fix.on(c)
             handles = []
             for i, sb in enumerate(shard_bytes):  # scatter round-robin
                 node = c.nodes[f"n{i % n_nodes}"]
                 handles.append(node.repo.put_blob(sb))
             c.reset_accounting()
             t0 = time.perf_counter()
-            counts = [combination(c.client_repo, "count_string", h,
-                                  Handle.blob(needle)) for h in handles]
-            # binary reduction tree of merge_counts thunks
-            level = [t.strict() for t in counts]
+            # map + binary reduction: one lazy DAG, one submission
+            level = [count_string(h, needle) for h in handles]
             while len(level) > 1:
-                nxt = []
-                for i in range(0, len(level) - 1, 2):
-                    m = combination(c.client_repo, "merge_counts",
-                                    level[i], level[i + 1])
-                    nxt.append(m.strict())
+                nxt = [merge_counts(level[i], level[i + 1])
+                       for i in range(0, len(level) - 1, 2)]
                 if len(level) % 2:
                     nxt.append(level[-1])
                 level = nxt
-            r = c.evaluate(level[0], timeout=600)
+            got = be.fetch(level[0], timeout=600)
             dt = time.perf_counter() - t0
-            got = _int_of(c.fetch_result(r), r)
             assert got == expected, (got, expected)
             util = c.utilization(dt)
             results[f"{label}_s"] = dt
+            results[f"{label}_starved_frac"] = round(util["starved_frac"], 3)
             results[f"{label}_idle_iowait_frac"] = round(util["idle_iowait_frac"], 3)
             results[f"{label}_bytes_moved_mb"] = round(c.bytes_moved / 1e6, 1)
         finally:
@@ -218,13 +230,13 @@ def fig9_btree(n_keys: int = 20_000, lookups: int = 50) -> dict:
     values = [f"value-{i}".encode() * 3 for i in range(n_keys)]
     out = {}
     for arity in (64, 256):
-        repo = Repository()
-        ev = Evaluator(repo)
+        be = fix.local()
+        repo = be.repo
         root, depth = build_btree(repo, keys, values, arity)
 
         t0 = time.perf_counter()
         for i in range(0, n_keys, max(n_keys // lookups, 1)):
-            val, _steps = fix_lookup(repo, ev, root, keys[i])
+            val, _steps = fix_lookup(be, root, keys[i])
             assert val == values[i]
         fix_us = (time.perf_counter() - t0) / lookups * 1e6
 
@@ -245,6 +257,7 @@ def fig9_btree(n_keys: int = 20_000, lookups: int = 50) -> dict:
         for i in range(0, n_keys, max(n_keys // lookups, 1)):
             assert blocking_lookup(root, keys[i]) == values[i]
         blocking_us = (time.perf_counter() - t0) / lookups * 1e6
+        be.close()
 
         out[f"arity{arity}_fix_us"] = round(fix_us, 1)
         out[f"arity{arity}_blocking_us"] = round(blocking_us, 1)
@@ -271,19 +284,20 @@ def fig_staging(n_jobs: int = 32, inputs_per_job: int = 24, blob_kb: int = 8,
         c = Cluster(n_nodes=n_nodes, workers_per_node=workers,
                     storage_nodes=("s0",), network=net, transfer_mode=mode)
         try:
+            be = fix.on(c)
             store = c.nodes["s0"].repo
-            thunks = []
+            jobs = []
             for _ in range(n_jobs):
                 blobs = [store.put_blob(rng.integers(0, 255, blob_kb * 1024)
                                         .astype(np.uint8).tobytes())
                          for _ in range(inputs_per_job)]
                 tree = store.put_tree(blobs)
-                thunks.append(combination(c.client_repo, "checksum_tree", tree))
+                jobs.append(checksum_tree(tree))
             c.reset_accounting()
             t0 = time.perf_counter()
-            futs = [c.submit(t.strict()) for t in thunks]
-            for f in futs:
-                f.result(timeout=600)
+            futs = [be.submit(j) for j in jobs]
+            for f in be.as_completed(futs, timeout=600):
+                f.result(timeout=0)
             dt = time.perf_counter() - t0
             out[f"{mode}_s"] = dt
             out[f"{mode}_transfers"] = c.transfers
@@ -296,6 +310,15 @@ def fig_staging(n_jobs: int = 32, inputs_per_job: int = 24, blob_kb: int = 8,
 
 
 # ------------------------------------------------------------------ fig 10
+@fix.codelet(name="compile_unit")
+def compile_unit(src: bytes) -> int:
+    """A "compile one translation unit" stand-in: real local work over a
+    source blob fetched from storage."""
+    a = np.frombuffer(src[:4096], dtype=np.uint8).astype(np.float64)
+    a = np.tanh(a.reshape(64, 64) @ a.reshape(64, 64).T / 500.0)
+    return int(a.sum() * 1000) & 0x7FFFFFFF
+
+
 def fig10_burst_compile(n_units: int = 24, fetch_latency: float = 0.1) -> dict:
     """Burst-parallel compilation analog: every unit depends on a source
     blob behind a 100 ms storage link (paper: C files + headers), plus a
@@ -307,18 +330,6 @@ def fig10_burst_compile(n_units: int = 24, fetch_latency: float = 0.1) -> dict:
     * internal_io   — slots are held during each fetch (status-quo FaaS).
     * client_serial — one submission at a time (no platform visibility).
     """
-    from repro.core import register
-    from repro.core.api import FixAPI
-
-    if "compile_unit" not in __import__("repro.core.procedures", fromlist=["x"])._NAMES.values():
-        @register("compile_unit")
-        def _compile_unit(api: FixAPI, comb: Handle) -> Handle:
-            kids = api.read_tree(comb)
-            src = api.read_blob(kids[2])  # the "source file"
-            a = np.frombuffer(src[:4096], dtype=np.uint8).astype(np.float64)
-            a = np.tanh(a.reshape(64, 64) @ a.reshape(64, 64).T / 500.0)
-            return api.create_int(int(a.sum() * 1000) & 0x7FFFFFFF)
-
     def make_cluster(io_mode):
         net = Network(Link(latency_s=0.001, gbps=10),
                       overrides={("s0", f"n{i}"): Link(fetch_latency, 10)
@@ -334,17 +345,16 @@ def fig10_burst_compile(n_units: int = 24, fetch_latency: float = 0.1) -> dict:
                                    ("client_serial", "external", True)):
         c = make_cluster(io_mode)
         try:
+            be = fix.on(c)
             srcs = [c.nodes["s0"].repo.put_blob(
                 rng.integers(0, 255, 8192).astype(np.uint8).tobytes())
                 for _ in range(n_units)]
             t0 = time.perf_counter()
             if serial:
                 for h in srcs:
-                    c.evaluate(combination(c.client_repo, "compile_unit",
-                                           h).strict(), timeout=600)
+                    be.evaluate(compile_unit(h), timeout=600)
             else:
-                futs = [c.submit(combination(c.client_repo, "compile_unit",
-                                             h).strict()) for h in srcs]
+                futs = [be.submit(compile_unit(h)) for h in srcs]
                 for f in futs:
                     f.result(timeout=600)
             out[f"{label}_s"] = time.perf_counter() - t0

@@ -1,17 +1,18 @@
 """B+-tree key-value store on Fix (paper §5.4, fig 9).
 
 The tree is a nest of Fix Trees; a lookup descends node-by-node with
-Selection Thunks, so each step's minimum repository is ONE node (32 bytes
-per child handle) + ONE key array — never the siblings' data.  Compare the
-"blocking" style (fetch whole subtree data at every level).
+Selection Thunks — spelled ``fix.lit(node)[i]`` in the frontend — so each
+step's minimum repository is ONE node (32 bytes per child handle) + ONE key
+array — never the siblings' data.  Compare the "blocking" style (fetch
+whole subtree data at every level).
 
 Run:  PYTHONPATH=src python examples/btree_kv.py
 """
 import bisect
-import struct
 import time
 
-from repro.core import Evaluator, Handle, Repository
+import repro.fix as fix
+from repro.core import Handle, Repository
 
 
 def build_btree(repo: Repository, keys, values, arity: int):
@@ -36,41 +37,42 @@ def build_btree(repo: Repository, keys, values, arity: int):
     return level[0][1], depth
 
 
-def fix_lookup(repo: Repository, ev: Evaluator, root: Handle, key: bytes):
+def fix_lookup(backend: fix.Backend, root: Handle, key: bytes):
     """Descend with Selections: per level, read ONLY the keys blob; the
     child handles travel as a 32-byte-each tree node."""
     node = root
     steps = 0
     while True:
-        kids = repo.get_tree(node)
-        keys = repo.get_blob(kids[0]).split(b"\x00")
+        kids = backend.repo.get_tree(node)
+        keys = backend.repo.get_blob(kids[0]).split(b"\x00")
         idx = max(bisect.bisect_right(keys, key) - 1, 0)
-        pair = repo.put_tree([node, repo.put_blob(struct.pack("<q", idx + 1))])
-        child = ev.evaluate(pair.selection_of().shallow())
+        # shallow: minimum work — the child comes back as a Ref (a name),
+        # its data untouched until we actually descend into it
+        # (timeout=None: the local backend's synchronous fast path)
+        child = backend.evaluate(fix.lit(node)[idx + 1].shallow(), timeout=None)
         steps += 1
         if child.content_type == 0:  # blob leaf => value
-            return repo.get_blob(child.as_object()), steps
+            return backend.fetch(child, as_type=bytes), steps
         node = child.as_object()
 
 
 def main() -> None:
-    repo = Repository()
-    ev = Evaluator(repo)
-    n = 50_000
-    keys = [f"key{i:08d}".encode() for i in range(n)]
-    values = [f"value-{i}".encode() * 3 for i in range(n)]
+    with fix.local() as be:
+        n = 50_000
+        keys = [f"key{i:08d}".encode() for i in range(n)]
+        values = [f"value-{i}".encode() * 3 for i in range(n)]
 
-    for arity in (16, 64, 256):
-        root, depth = build_btree(repo, keys, values, arity)
-        t0 = time.perf_counter()
-        hits = 0
-        for i in range(0, n, n // 200):  # 200 random-ish lookups
-            val, steps = fix_lookup(repo, ev, root, keys[i])
-            assert val == values[i]
-            hits += 1
-        dt = (time.perf_counter() - t0) / hits
-        print(f"arity {arity:4d}  depth {depth}  {dt*1e6:8.1f} us/lookup "
-              f"({hits} lookups ok)")
+        for arity in (16, 64, 256):
+            root, depth = build_btree(be.repo, keys, values, arity)
+            t0 = time.perf_counter()
+            hits = 0
+            for i in range(0, n, n // 200):  # 200 random-ish lookups
+                val, steps = fix_lookup(be, root, keys[i])
+                assert val == values[i]
+                hits += 1
+            dt = (time.perf_counter() - t0) / hits
+            print(f"arity {arity:4d}  depth {depth}  {dt*1e6:8.1f} us/lookup "
+                  f"({hits} lookups ok)")
 
 
 if __name__ == "__main__":

@@ -1,58 +1,68 @@
 """Quickstart: the Fix computation model in five minutes.
 
+Programs are written against ``repro.fix`` — typed codelets, lazy
+expression graphs, one Backend protocol — and compile down to the paper's
+Table-1 representation (handles, combination trees, Encodes).  Section 5
+shows the compiled form next to the hand-built one: byte-identical.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import struct
-
-from repro.core import Evaluator, Handle, Repository
-from repro.core.stdlib import combination
+import repro.fix as fix
+from repro.core import Handle
+from repro.core.stdlib import add, combination, fib, fix_if
 from repro.runtime import Cluster, Link, Network
 
 
 def main() -> None:
-    # --- 1. local evaluation: data + code -> content-addressed results ----
-    repo = Repository()
-    ev = Evaluator(repo)
-    th = combination(repo, "add",
-                     Handle.blob((40).to_bytes(8, "little", signed=True)),
-                     Handle.blob((2).to_bytes(8, "little", signed=True)))
-    out = ev.evaluate(th.strict())
-    print("40 + 2 =", int.from_bytes(repo.get_blob(out), "little", signed=True))
+    # --- 1. typed codelets + a local backend ------------------------------
+    # add(40, 2) runs nothing: it builds a lazy expression.  The backend
+    # compiles it to a thunk, evaluates, and decodes the result type.
+    with fix.local() as be:
+        print("40 + 2 =", be.run(add(40, 2)))
 
-    # memoization: the thunk IS the cache key
-    before = ev.applications
-    ev.evaluate(th.strict())
-    print("re-evaluation ran", ev.applications - before, "codelets (memo hit)")
+        # memoization: the compiled thunk IS the cache key
+        before = be.evaluator.applications
+        be.run(add(40, 2))
+        print("re-evaluation ran", be.evaluator.applications - before,
+              "codelets (memo hit)")
 
-    # --- 2. laziness: the untaken branch never evaluates ------------------
-    bomb = combination(repo, "add", Handle.blob(b"not-an-int"), Handle.blob(b"x"))
-    good = combination(repo, "add", Handle.blob((1).to_bytes(8, "little", signed=True)),
-                       Handle.blob((2).to_bytes(8, "little", signed=True)))
-    cond = combination(repo, "fix_if",
-                       Handle.blob((1).to_bytes(8, "little", signed=True)), good, bomb)
-    out = ev.evaluate(cond.strict())
-    print("lazy if ->", int.from_bytes(repo.get_blob(out), "little", signed=True))
+        # --- 2. laziness: the untaken branch never evaluates --------------
+        # fix_if's branches are Handle-typed, so they stay *names*: the bomb
+        # (adding non-integers — raw Handles pass through the typed layer
+        # unchecked, exactly like hand-built trees) is never run.
+        bomb = add(Handle.blob(b"not-an-int"), Handle.blob(b"x"))
+        out = be.fetch(fix_if(True, add(1, 2), bomb), as_type=int)
+        print("lazy if ->", out)
 
-    # --- 3. selection: touch one child of a big tree ----------------------
-    kids = [repo.put_blob(bytes([i]) * 1000) for i in range(100)]
-    tree = repo.put_tree(kids)
-    pair = repo.put_tree([tree, repo.put_blob(struct.pack("<q", 42))])
-    sel = ev.evaluate(pair.selection_of().strict())
-    print("selected child 42, first byte:", repo.get_blob(sel)[0])
+        # --- 3. selection sugar: touch one child of a big tree ------------
+        kids = tuple(bytes([i]) * 1000 for i in range(100))
+        sel = fix.lit(kids)[42]
+        print("selected child 42, first byte:", be.run(sel)[0])
+
+        # deep composition is still ONE submission: a whole expression DAG
+        total = add(add(1, 2), add(add(3, 4), 5))
+        print("nested adds =", be.run(total))
 
     # --- 4. the same program on a 3-node cluster ---------------------------
     cluster = Cluster(n_nodes=3, workers_per_node=2,
                       network=Network(Link(latency_s=0.001, gbps=10)))
-    try:
-        fib = combination(cluster.client_repo, "fib",
-                          Handle.blob((15).to_bytes(8, "little", signed=True)))
-        out = cluster.evaluate(fib.strict(), timeout=60)
-        got = cluster.fetch_result(out)
-        print("fib(15) on the cluster =",
-              int.from_bytes(got.get_blob(out), "little", signed=True))
-        print("bytes moved:", cluster.bytes_moved, " transfers:", cluster.transfers)
-    finally:
-        cluster.shutdown()
+    with fix.on(cluster) as be:
+        print("fib(15) on the cluster =", be.run(fib(15), timeout=60))
+        print("bytes moved:", cluster.bytes_moved,
+              " transfers:", cluster.transfers)
+
+    # --- 5. what it compiles to: the shared Table-1 representation ---------
+    # A typed call lowers to the combination tree [limits, procedure, args]
+    # — byte-identical to building it by hand against the raw core.  Users,
+    # programs and the platform share one representation of the computation.
+    from repro.core import Repository
+    repo = Repository()
+    typed = add(40, 2).compile(repo)
+    hand = combination(repo, "add",
+                       Handle.blob((40).to_bytes(8, "little", signed=True)),
+                       Handle.blob((2).to_bytes(8, "little", signed=True)))
+    print("typed call == hand-built combination:", typed.raw == hand.raw)
+    print("compiled form:", typed)
 
 
 if __name__ == "__main__":

@@ -17,6 +17,7 @@ import struct
 from typing import Iterable, Sequence
 
 from .handle import BLOB, TREE, Handle
+from .procedures import procedure_blob
 from .repository import MissingData, Repository
 
 
@@ -127,6 +128,11 @@ class FixAPI:
 
     # -------------------------------------------------------- conveniences
     # (thin sugar used by our codelets; all expressed via the Table-1 core)
+    def procedure(self, name: str) -> Handle:
+        """Handle naming a registered procedure — so codelets composing new
+        combinations never hard-code the ``fix/proc/`` prefix."""
+        return self.create_blob(procedure_blob(name))
+
     def read_int(self, handle: Handle) -> int:
         data = self.read_blob(handle)
         return int.from_bytes(data, "little", signed=True)

@@ -5,116 +5,103 @@
 ``btree_get`` lives in examples/btree_kv.py, ``count_string`` / ``merge_counts``
 (fig 8b's map-reduce) live here too since the runtime benchmarks share them.
 
-Combination convention (paper §4.1): ``[limits, procedure, arg...]``.
+All of them are **typed codelets** (:func:`repro.fix.codelet`): bodies take
+real Python values and return real values; the generated shims do the
+Table-1 marshalling through the sealed FixAPI.  Tail calls are typed too —
+``inc_chain`` returns ``inc_chain(v + 1, r - 1)``, a Lazy expression the
+shim compiles into an Application Thunk through the same capability.
+
+The raw spelling stays first-class: :func:`combination` builds the
+``[limits, procedure, arg...]`` tree by hand (paper §4.1), and evaluates
+through the *same* registered shims — typed calls compile to byte-identical
+trees (asserted in tests/test_fix_frontend.py).
 """
 from __future__ import annotations
 
-import struct
-
-from .api import FixAPI
+from ..fix.codelet import DEFAULT_LIMITS, codelet
 from .handle import Handle
-from .procedures import handle_for, make_limits, register
+from .procedures import handle_for
 from .repository import Repository
 
-LIMITS_SMALL = make_limits(ram_bytes=1 << 16)
+LIMITS_SMALL = DEFAULT_LIMITS
 
 
 def combination(repo: Repository, proc_name: str, *args: Handle,
                 limits: bytes = LIMITS_SMALL) -> Handle:
-    """Build an Application Thunk for ``proc_name(*args)``."""
+    """Build an Application Thunk for ``proc_name(*args)`` by hand — the
+    raw Table-1 spelling of what typed codelet calls compile to."""
     tree = repo.put_tree([repo.put_blob(limits), handle_for(repo, proc_name), *args])
     return tree.application()
 
 
 # --------------------------------------------------------------------- add
-@register("add")
-def _add(api: FixAPI, comb: Handle) -> Handle:
-    _, _, a, b = api.read_tree(comb)
-    return api.create_int(api.read_int(a) + api.read_int(b))
+@codelet(name="add")
+def add(a: int, b: int) -> int:
+    return a + b
 
 
 # ----------------------------------------------------------------- fig 7b
-@register("inc_chain")
-def _inc_chain(api: FixAPI, comb: Handle) -> Handle:
+@codelet(name="inc_chain")
+def inc_chain(value: int, remaining: int) -> int:
     """Increment; if steps remain, tail-call self (one submission, no client
     round-trips — the whole chain is described by the initial thunk)."""
-    kids = api.read_tree(comb)
-    limits, proc, value, remaining = kids
-    v = api.read_int(value)
-    r = api.read_int(remaining)
-    if r <= 0:
-        return api.create_int(v)
-    nxt = api.create_tree([limits, proc, api.create_int(v + 1), api.create_int(r - 1)])
-    return api.application(nxt)
+    if remaining <= 0:
+        return value
+    return inc_chain(value + 1, remaining - 1)
 
 
 # ------------------------------------------------------------------ fig 2
-@register("fix_if")
-def _fix_if(api: FixAPI, comb: Handle) -> Handle:
-    """Lazy conditional: the untaken branch's thunk is never evaluated and
-    its minimum repository is never fetched."""
-    _, _, pred, then_t, else_t = api.read_tree(comb)
-    take = api.read_int(pred) != 0
-    return then_t if take else else_t
+@codelet(name="fix_if")
+def fix_if(pred: bool, then_t: Handle, else_t: Handle) -> Handle:
+    """Lazy conditional: the branches stay *names* (Handle parameters), so
+    the untaken branch's thunk is never evaluated and its minimum
+    repository is never fetched."""
+    return then_t if pred else else_t
 
 
 # ------------------------------------------------------------------ fig 3
-@register("fib")
-def _fib(api: FixAPI, comb: Handle) -> Handle:
-    limits, proc, n_h = api.read_tree(comb)
-    n = api.read_int(n_h)
+@codelet(name="fib")
+def fib(n: int) -> int:
     if n < 2:
-        return api.create_int(n)
-    f1 = api.application(api.create_tree([limits, proc, api.create_int(n - 1)]))
-    f2 = api.application(api.create_tree([limits, proc, api.create_int(n - 2)]))
-    add_comb = api.create_tree(
-        [limits, api.create_blob(b"fix/proc/add"), api.strict(f1), api.strict(f2)]
-    )
-    return api.application(add_comb)
+        return n
+    # Nested calls in value position compile to strict-Encoded child
+    # thunks — exactly the hand-built [limits, add, strict(f1), strict(f2)].
+    return add(fib(n - 1), fib(n - 2))
 
 
 # ------------------------------------------------------------------ fig 8b
-@register("count_string")
-def _count_string(api: FixAPI, comb: Handle) -> Handle:
+@codelet(name="count_string")
+def count_string(shard: bytes, needle: bytes) -> int:
     """Count non-overlapping occurrences of a needle in one corpus shard."""
-    _, _, shard, needle = api.read_tree(comb)
-    hay = api.read_blob(shard)
-    ndl = api.read_blob(needle)
-    return api.create_int(hay.count(ndl))
+    return shard.count(needle)
 
 
-@register("merge_counts")
-def _merge_counts(api: FixAPI, comb: Handle) -> Handle:
-    _, _, a, b = api.read_tree(comb)
-    return api.create_int(api.read_int(a) + api.read_int(b))
+@codelet(name="merge_counts")
+def merge_counts(a: int, b: int) -> int:
+    return a + b
 
 
 # ------------------------------------------------- data-pipeline codelets
-@register("slice_blob")
-def _slice_blob(api: FixAPI, comb: Handle) -> Handle:
+@codelet(name="slice_blob")
+def slice_blob(corpus: bytes, start: int, length: int) -> bytes:
     """Deterministic re-derivation of a shard from (corpus, start, len) —
     the paper's recompute-instead-of-transfer strategy needs shards to be
     products of pure functions."""
-    _, _, corpus, start_h, len_h = api.read_tree(comb)
-    start, ln = api.read_int(start_h), api.read_int(len_h)
-    return api.create_blob(api.read_blob(corpus)[start : start + ln])
+    return corpus[start : start + length]
 
 
-@register("identity")
-def _identity(api: FixAPI, comb: Handle) -> Handle:
-    kids = api.read_tree(comb)
-    return kids[2]
+@codelet(name="identity")
+def identity(x: Handle) -> Handle:
+    return x
 
 
-@register("checksum_tree")
-def _checksum_tree(api: FixAPI, comb: Handle) -> Handle:
+@codelet(name="checksum_tree")
+def checksum_tree(inputs: list[bytes]) -> int:
     """Fold a Tree of input Blobs into one checksum — a fan-out staging
     workload: every child blob is in the minimum repository, so the
     platform must move all of them before the slot binds (the batched
     transfer scheduler's benchmark case)."""
-    _, _, inputs = api.read_tree(comb)
     acc = 0
-    for kid in api.read_tree(inputs):
-        data = api.read_blob(kid)
+    for data in inputs:
         acc = (acc * 31 + len(data) + (data[0] if data else 0)) & 0x7FFFFFFF
-    return api.create_int(acc)
+    return acc

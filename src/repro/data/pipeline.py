@@ -22,7 +22,8 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core import Handle, Repository
-from ..core.stdlib import combination
+from ..core.stdlib import slice_blob
+from ..fix import Backend, Lazy
 
 
 def synth_corpus(n_bytes: int, seed: int = 0) -> bytes:
@@ -51,16 +52,18 @@ class TokenPipeline:
     batch: int
     vocab: int = 256
 
-    def shard_thunk(self, step: int) -> Handle:
-        """The Fix recipe for step ``step``'s bytes (pure function)."""
+    def shard_expr(self, step: int) -> Lazy:
+        """The Fix recipe for step ``step``'s bytes (pure function), as a
+        typed frontend expression — submit it to any Backend."""
         need = self.batch * (self.seq_len + 1)
         total = self.corpus.size
         offset = (step * need) % max(total - need, 1)
-        return combination(
-            self.repo, "slice_blob", self.corpus,
-            Handle.blob(offset.to_bytes(8, "little", signed=True)),
-            Handle.blob(need.to_bytes(8, "little", signed=True)),
-        )
+        return slice_blob(self.corpus, offset, need)
+
+    def shard_thunk(self, step: int) -> Handle:
+        """The recipe compiled to its Table-1 Application Thunk handle
+        (byte-identical to the hand-built ``combination`` tree)."""
+        return self.shard_expr(step).compile(self.repo)
 
     def materialize(self, shard_bytes: bytes):
         """bytes -> {tokens, labels} int32 arrays (numpy; cast on device)."""
@@ -70,10 +73,13 @@ class TokenPipeline:
         arr = arr.reshape(self.batch, self.seq_len + 1)
         return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
 
-    def batch_for_step(self, evaluator, step: int):
-        """Local-evaluator path used by the e2e example."""
+    def batch_for_step(self, engine, step: int):
+        """Shard bytes -> arrays via a Backend or a bare local Evaluator."""
+        if isinstance(engine, Backend):
+            return self.materialize(engine.fetch(self.shard_expr(step),
+                                                 as_type=bytes))
         th = self.shard_thunk(step)
-        out = evaluator.evaluate(th.strict())
+        out = engine.evaluate(th.strict())
         return self.materialize(self.repo.get_blob(out))
 
 

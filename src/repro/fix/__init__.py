@@ -1,0 +1,49 @@
+"""``repro.fix`` — the user-facing Fix frontend.
+
+The Table-1 core (:mod:`repro.core`) is the paper's shared representation:
+handles, sealed :class:`~repro.core.api.FixAPI` capabilities, combination
+trees ``[limits, procedure, arg...]``.  This package is the *compiler* from
+ergonomic Python programs down to that representation — it adds no new
+semantics and no new I/O path:
+
+* :func:`codelet` — a decorator that reads a Python signature (``int``,
+  ``bytes``, ``str``, ``bool``, nested tuples/lists, raw ``Handle``
+  passthrough) and generates the marshal/unmarshal shims, so codelet bodies
+  take real values and return real values while the sealed ``FixAPI``
+  remains the only I/O surface.
+* :class:`Lazy` — calling a typed codelet returns a lazy expression; nesting
+  calls, ``.strict()`` / ``.shallow()``, and ``expr[i]`` selection sugar
+  build the whole thunk DAG client-side.  ``Lazy.compile(repo)`` produces
+  handles **byte-identical** to the equivalent hand-built ``combination``
+  tree — the shared-representation guarantee, asserted by the test suite.
+* :class:`Backend` — one protocol (``submit`` / ``evaluate`` / ``fetch`` /
+  ``as_completed``) over the local :class:`~repro.core.evaluator.Evaluator`
+  (:func:`local`) and the distributed :class:`~repro.runtime.cluster.Cluster`
+  (:func:`on`): the same program runs unchanged on either.
+
+Quickstart::
+
+    import repro.fix as fix
+    from repro.core.stdlib import add, fib
+
+    with fix.local() as be:
+        print(be.run(add(40, 2)))          # -> 42
+        print(be.run(fib(15)))             # -> 610
+
+    from repro.runtime import Cluster
+    with fix.on(Cluster(n_nodes=3)) as be:
+        print(be.run(fib(15)))             # same program, unchanged
+"""
+from .backend import Backend, ClusterBackend, LocalBackend, local, on
+from .codelet import DEFAULT_LIMITS, TypedCodelet, codelet
+from .future import Future, as_completed
+from .lazy import Lazy, lit
+from .marshal import MarshalError
+
+__all__ = [
+    "Backend", "ClusterBackend", "LocalBackend", "local", "on",
+    "TypedCodelet", "codelet", "DEFAULT_LIMITS",
+    "Future", "as_completed",
+    "Lazy", "lit",
+    "MarshalError",
+]

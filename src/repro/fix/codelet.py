@@ -1,0 +1,131 @@
+"""Typed codelets: Python signatures compiled to Table-1 shims.
+
+``@fix.codelet`` reads a function's annotations and generates both halves
+of the boundary:
+
+* an **unmarshal shim**, registered in the ordinary procedure registry
+  under ``fix/proc/<name>`` — at apply time it decodes the combination's
+  argument handles into real Python values through the sealed
+  :class:`~repro.core.api.FixAPI` (still the only I/O path), calls the
+  body, and marshals the return value back to a Handle.  A body may also
+  return a Handle directly, or a :class:`~repro.fix.lazy.Lazy` expression —
+  the latter compiles through the same capability into a tail-call Thunk,
+  so typed codelets recurse exactly like hand-written ones.
+* a **client-side constructor**: calling the decorated object builds a
+  :class:`~repro.fix.lazy.Lazy` call node, not an invocation.
+
+Because the shim is a plain registered procedure, hand-built
+``combination(repo, name, ...)`` trees keep working unchanged and evaluate
+through the very same code — one representation, two spellings.
+"""
+from __future__ import annotations
+
+import inspect
+import typing
+from typing import Any, Callable, Optional
+
+from ..core.handle import Handle
+from ..core.procedures import make_limits, procedure_blob, register
+from .lazy import _CALL, Lazy
+from .marshal import (
+    ApiEmitter,
+    ApiReader,
+    MarshalError,
+    marshal,
+    unmarshal,
+    validate_hint,
+)
+
+#: Default resource-limit blob for typed calls — identical bytes to the raw
+#: helper's default (``stdlib.LIMITS_SMALL``), so typed and hand-built
+#: combinations share content keys.
+DEFAULT_LIMITS = make_limits(ram_bytes=1 << 16)
+
+
+class TypedCodelet:
+    """A registered procedure plus its typed client-side constructor."""
+
+    def __init__(self, fn: Callable, name: str, limits: bytes):
+        self.fn = fn
+        self.name = name
+        self.limits = limits
+        self.proc_payload = procedure_blob(name)
+        self.__name__ = fn.__name__
+        self.__doc__ = fn.__doc__
+        self.__wrapped__ = fn
+
+        self._sig = inspect.signature(fn)
+        hints = typing.get_type_hints(fn)
+        self.param_hints: list[Any] = []
+        for p in self._sig.parameters.values():
+            if p.kind in (inspect.Parameter.VAR_POSITIONAL,
+                          inspect.Parameter.VAR_KEYWORD):
+                raise MarshalError(
+                    f"codelet {name!r}: *args/**kwargs are not marshallable — "
+                    f"take a list/tuple parameter instead")
+            if p.name not in hints:
+                raise MarshalError(
+                    f"codelet {name!r}: parameter {p.name!r} needs a type "
+                    f"annotation (int, bytes, str, bool, tuple/list, Handle)")
+            hint = hints[p.name]
+            validate_hint(hint)
+            self.param_hints.append(hint)
+        self.return_hint = hints.get("return")
+        if self.return_hint is not None:
+            validate_hint(self.return_hint)
+
+        def _registered(api, comb, _self=self):  # plain function: the
+            return _self._shim(api, comb)        # registry tags attributes
+        _registered.__name__ = f"{name}.shim"
+        _registered.__qualname__ = f"TypedCodelet({name}).shim"
+        register(name)(_registered)
+        self.shim = _registered
+
+    # ------------------------------------------------------- server side
+    def _shim(self, api, comb: Handle) -> Handle:
+        kids = api.read_tree(comb)
+        arg_handles = kids[2:]  # [limits, procedure, arg...]
+        if len(arg_handles) != len(self.param_hints):
+            raise MarshalError(
+                f"codelet {self.name!r} takes {len(self.param_hints)} "
+                f"argument(s), combination supplies {len(arg_handles)}")
+        reader = ApiReader(api)
+        values = [unmarshal(reader, h, hint)
+                  for h, hint in zip(arg_handles, self.param_hints)]
+        out = self.fn(*values)
+        if isinstance(out, Handle):
+            return out  # raw handle (data, or a hand-rolled tail call)
+        if isinstance(out, Lazy):
+            return out.compile(ApiEmitter(api))  # typed tail call
+        return marshal(ApiEmitter(api), out, self.return_hint)
+
+    # ------------------------------------------------------- client side
+    def __call__(self, *args, **kwargs) -> Lazy:
+        try:
+            bound = self._sig.bind(*args, **kwargs)
+        except TypeError as e:
+            raise MarshalError(f"codelet {self.name!r}: {e}") from None
+        bound.apply_defaults()
+        ordered = [bound.arguments[p] for p in self._sig.parameters]
+        return Lazy(_CALL, codelet=self, args=ordered,
+                    out_type=self.return_hint)
+
+    def __repr__(self) -> str:
+        params = ", ".join(
+            f"{p}: {getattr(h, '__name__', h)}"
+            for p, h in zip(self._sig.parameters, self.param_hints))
+        return f"<fix.codelet {self.name}({params})>"
+
+
+def codelet(fn: Optional[Callable] = None, *, name: Optional[str] = None,
+            limits: bytes = DEFAULT_LIMITS):
+    """Decorator: turn an annotated function into a :class:`TypedCodelet`.
+
+    ``@codelet`` and ``@codelet(name="add", limits=...)`` both work.
+    ``limits`` is the resource-limit blob placed first in every combination
+    this codelet's calls compile to.
+    """
+    def deco(f: Callable) -> TypedCodelet:
+        return TypedCodelet(f, name or f.__name__, limits)
+
+    return deco(fn) if fn is not None else deco

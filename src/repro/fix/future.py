@@ -1,0 +1,110 @@
+"""Future: the handle to an in-flight Fix submission.
+
+Dependency-light on purpose — the cluster scheduler imports this module, so
+it must not import the runtime (or anything above the stdlib).  Completion
+callbacks and :func:`as_completed` are the coordination surface the
+:class:`~repro.fix.backend.Backend` protocol builds on.
+
+Callbacks run on whichever thread completes the future (the cluster's
+scheduler thread, or a local backend's worker) — keep them cheap and never
+block in one.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterable, Iterator, Optional
+
+
+class Future:
+    """Result of a submitted Fix program.
+
+    ``result()`` returns the result *Handle* (use ``Backend.fetch`` to decode
+    it into a Python value).  ``out_type`` carries the static result type the
+    frontend inferred at submit time, if any — ``fetch`` uses it to decode.
+    """
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._lock = threading.Lock()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+        self._callbacks: list[Callable[["Future"], Any]] = []
+        self.out_type = None  # static result type, set by the frontend
+
+    # ------------------------------------------------------------- setters
+    def set(self, result) -> None:
+        with self._lock:
+            if self._ev.is_set():
+                return  # first write wins (determinism makes dupes identical)
+            self._result = result
+            self._ev.set()
+            callbacks, self._callbacks = self._callbacks, []
+        self._run_callbacks(callbacks)
+
+    def set_exception(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._ev.is_set():
+                return
+            self._exc = exc
+            self._ev.set()
+            callbacks, self._callbacks = self._callbacks, []
+        self._run_callbacks(callbacks)
+
+    def _run_callbacks(self, callbacks) -> None:
+        for cb in callbacks:
+            try:
+                cb(self)
+            except Exception:  # noqa: BLE001 — a callback must not kill the setter
+                pass
+
+    # ------------------------------------------------------------- getters
+    def result(self, timeout: Optional[float] = 120.0):
+        if not self._ev.wait(timeout):
+            raise TimeoutError("fix job timed out")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = 120.0) -> Optional[BaseException]:
+        if not self._ev.wait(timeout):
+            raise TimeoutError("fix job timed out")
+        return self._exc
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def add_done_callback(self, fn: Callable[["Future"], Any]) -> None:
+        """``fn(future)`` runs when the future completes (immediately if it
+        already has)."""
+        with self._lock:
+            if not self._ev.is_set():
+                self._callbacks.append(fn)
+                return
+        self._run_callbacks([fn])
+
+
+def as_completed(futures: Iterable[Future],
+                 timeout: Optional[float] = None) -> Iterator[Future]:
+    """Yield futures as they finish, whichever order that happens in.
+
+    ``timeout`` bounds the *total* wait; expiry raises :class:`TimeoutError`
+    with the futures still pending left unconsumed.
+    """
+    futs = list(futures)
+    done_q: "queue.Queue[Future]" = queue.Queue()
+    for f in futs:
+        f.add_done_callback(done_q.put)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    for _ in range(len(futs)):
+        if deadline is None:
+            yield done_q.get()
+        else:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError("as_completed timed out")
+            try:
+                yield done_q.get(timeout=remaining)
+            except queue.Empty:
+                raise TimeoutError("as_completed timed out") from None

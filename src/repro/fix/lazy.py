@@ -1,0 +1,175 @@
+"""Lazy expression graphs: client-side construction of whole thunk DAGs.
+
+Calling a typed codelet does not run anything — it returns a :class:`Lazy`
+node.  Nesting calls, ``.strict()`` / ``.shallow()``, and ``expr[i]``
+selection sugar grow the graph; :meth:`Lazy.compile` lowers it to Table-1
+handles, so an arbitrarily deep program is still **one** submission that
+describes its precise data needs.
+
+The lowering is the paper's shared-representation guarantee made testable:
+for every construct there is exactly one Table-1 spelling, chosen to match
+what hand-written code in this repo already does —
+
+* a call lowers to ``put_tree([limits, procedure, arg...]).application()``;
+* a nested call in a *value* position (``int``/``bytes``/... parameter)
+  lowers to the child thunk wrapped ``.strict()`` (the callee needs the
+  value), while a nested call in a ``Handle`` position stays a bare thunk
+  (laziness survives: fig 2's untaken branch never evaluates);
+* ``expr[i]`` lowers to the ``[target, index]`` pair-tree Selection Thunk;
+* compiled handles are therefore byte-identical to the equivalent
+  hand-built ``combination`` tree (asserted in tests/test_fix_frontend.py).
+
+Compilation needs only ``put_blob``/``put_tree`` — a client Repository or,
+inside a codelet returning a tail-call expression, the sealed FixAPI via
+:class:`~repro.fix.marshal.ApiEmitter`.  Content addressing makes the
+result independent of *which* emitter lowered it.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, Optional
+
+from ..core.handle import Handle, SHALLOW, STRICT
+from .marshal import MarshalError, element_type, marshal
+
+_CALL, _CONST, _ENCODE, _SELECT = range(4)
+
+
+class Lazy:
+    """A node of a client-side Fix expression graph."""
+
+    __slots__ = ("_kind", "_codelet", "_args", "_value", "_target", "_mode",
+                 "_index", "out_type")
+
+    def __init__(self, kind: int, *, codelet=None, args=None, value=None,
+                 target=None, mode=None, index=None, out_type=None):
+        self._kind = kind
+        self._codelet = codelet
+        self._args = args
+        self._value = value
+        self._target = target
+        self._mode = mode
+        self._index = index
+        self.out_type = out_type
+
+    # ------------------------------------------------------------- sugar
+    def strict(self) -> "Lazy":
+        """Demand the fully-evaluated value (Encode: maximum work)."""
+        if self._kind == _ENCODE and self._mode == STRICT:
+            return self
+        return Lazy(_ENCODE, target=self, mode=STRICT, out_type=self.out_type)
+
+    def shallow(self) -> "Lazy":
+        """Demand WHNF only; data comes back as a Ref (minimum work)."""
+        if self._kind == _ENCODE and self._mode == SHALLOW:
+            return self
+        return Lazy(_ENCODE, target=self, mode=SHALLOW, out_type=self.out_type)
+
+    def __getitem__(self, index) -> "Lazy":
+        """Selection Thunk sugar: ``expr[i]`` / ``expr[a:b]`` touch one child
+        (or a subrange) without materializing the rest of the target."""
+        if isinstance(index, slice):
+            if index.step not in (None, 1):
+                raise MarshalError("selection slices must be contiguous (step 1)")
+            if (index.start or 0) < 0 or (index.stop is not None and index.stop < 0):
+                raise MarshalError("selection slices take non-negative bounds "
+                                   "(the target's length is not known client-side)")
+        elif not isinstance(index, int):
+            raise MarshalError(f"selection index must be int or slice, not "
+                               f"{type(index).__name__}")
+        elif index < 0:
+            raise MarshalError("selection indices are non-negative "
+                               "(the target's length is not known client-side)")
+        return Lazy(_SELECT, target=self, index=index,
+                    out_type=element_type(self.out_type, index))
+
+    def __bool__(self):
+        raise MarshalError(
+            "a Lazy expression has no truth value yet — submit it to a "
+            "backend (fix.local() / fix.on(cluster)) to evaluate it")
+
+    def __repr__(self) -> str:
+        if self._kind == _CALL:
+            return f"<lazy call {self._codelet.name}/{len(self._args)}>"
+        if self._kind == _CONST:
+            return f"<lazy const {self._value!r}>"
+        if self._kind == _ENCODE:
+            kind = "strict" if self._mode == STRICT else "shallow"
+            return f"<lazy {kind} {self._target!r}>"
+        return f"<lazy select [{self._index!r}] of {self._target!r}>"
+
+    # ----------------------------------------------------------- compile
+    def compile(self, emitter, _memo: Optional[dict] = None) -> Handle:
+        """Lower the graph to a Handle via ``emitter`` (put_blob/put_tree).
+
+        Shared sub-expressions compile once per call (the graph is a DAG);
+        content addressing makes the output emitter-independent.
+        """
+        memo = _memo if _memo is not None else {}
+        cached = memo.get(id(self))
+        if cached is not None:
+            return cached
+        h = self._compile(emitter, memo)
+        memo[id(self)] = h
+        return h
+
+    def _compile(self, emitter, memo: dict) -> Handle:
+        if self._kind == _CONST:
+            return marshal(emitter, self._value)
+        if self._kind == _CALL:
+            cd = self._codelet
+            kids = [emitter.put_blob(cd.limits), emitter.put_blob(cd.proc_payload)]
+            for value, hint in zip(self._args, cd.param_hints):
+                kids.append(_lower_arg(emitter, value, hint, memo))
+            return emitter.put_tree(kids).application()
+        if self._kind == _ENCODE:
+            t = self._target.compile(emitter, memo)
+            return _encode(t, self._mode)
+        # _SELECT: [target, index] pair-tree reinterpreted as a Selection
+        t = self._target.compile(emitter, memo)
+        if isinstance(self._index, slice):
+            start, stop = self._index.start or 0, self._index.stop
+            if stop is None:
+                raise MarshalError("selection slices need an explicit stop")
+            idx = emitter.put_blob(struct.pack("<qq", start, stop - start))
+        else:
+            idx = emitter.put_blob(struct.pack("<q", self._index))
+        return emitter.put_tree([t, idx]).selection_of()
+
+
+def _lower_arg(emitter, value: Any, hint: Any, memo: dict) -> Handle:
+    """One argument position of a combination tree."""
+    if isinstance(value, Lazy):
+        ch = value.compile(emitter, memo)
+        if hint is Handle or hint is Lazy:
+            return ch  # callee wants the name, not the value: stays lazy
+        if ch.is_thunk():
+            return ch.strict()  # callee reads the value: demand it
+        return ch  # already an encode / already data
+    return marshal(emitter, value, hint)
+
+
+def _encode(handle: Handle, mode: int) -> Handle:
+    """Wrap a compiled handle in a strict/shallow Encode."""
+    if handle.is_encode():
+        inner = handle.unwrap_encode()
+    elif handle.is_thunk():
+        inner = handle
+    elif handle.is_data():
+        inner = handle.identification()  # evaluate-a-value: identity thunk
+    else:
+        raise MarshalError(f"cannot encode {handle!r}")
+    return inner.strict() if mode == STRICT else inner.shallow()
+
+
+def lit(value: Any, out_type: Any = None) -> Lazy:
+    """Wrap a plain value or Handle as a Lazy leaf, unlocking the sugar:
+    ``lit(tree_handle)[3]``, ``lit((1, 2, 3)).strict()``, ..."""
+    if isinstance(value, Lazy):
+        return value
+    if out_type is None and isinstance(value, (int, bytes, str)) \
+            and not isinstance(value, bool):
+        out_type = type(value)
+    elif out_type is None and isinstance(value, bool):
+        out_type = bool
+    return Lazy(_CONST, value=value, out_type=out_type)

@@ -1,0 +1,212 @@
+"""Type-driven marshalling between Python values and Fix handles.
+
+The encodings are exactly the repo-wide Table-1 conventions — nothing new
+on the wire, so values marshalled here are byte-identical to hand-built
+blobs/trees (the content-key-equivalence guarantee):
+
+* ``int`` / ``bool``  — 8-byte little-endian signed blob (the ``create_int``
+  convention every existing codelet and test uses).
+* ``bytes``           — blob, verbatim.
+* ``str``             — UTF-8 blob.
+* ``tuple[...]`` / ``list[T]`` — Tree of marshalled children, nested freely.
+* ``Handle``          — passthrough: the caller already speaks Table-1.
+
+Marshalling is expressed against two tiny structural interfaces so the same
+code runs client-side (against a :class:`~repro.core.repository.Repository`)
+and inside a sealed codelet (against the :class:`~repro.core.api.FixAPI`
+capability — which stays the codelet's only I/O path).
+"""
+from __future__ import annotations
+
+import typing
+from typing import Any, Optional
+
+from ..core.handle import BLOB, TREE, Handle
+
+
+class MarshalError(TypeError):
+    """A value or annotation the typed frontend cannot (un)marshal."""
+
+
+#: Annotations the frontend accepts, for error messages.
+_SCALARS = (int, bool, bytes, str)
+
+
+# ---------------------------------------------------------------- emitters
+class ApiEmitter:
+    """Adapts the sealed FixAPI to the put_blob/put_tree emitter shape
+    (used when a codelet returns values or tail-call expressions)."""
+
+    __slots__ = ("_api",)
+
+    def __init__(self, api):
+        self._api = api
+
+    def put_blob(self, payload: bytes) -> Handle:
+        return self._api.create_blob(payload)
+
+    def put_tree(self, children) -> Handle:
+        return self._api.create_tree(children)
+
+
+class ApiReader:
+    """Adapts the sealed FixAPI to the get_blob/get_tree reader shape
+    (used to unmarshal a codelet's arguments)."""
+
+    __slots__ = ("_api",)
+
+    def __init__(self, api):
+        self._api = api
+
+    def get_blob(self, handle: Handle) -> bytes:
+        return self._api.read_blob(handle)
+
+    def get_tree(self, handle: Handle):
+        return self._api.read_tree(handle)
+
+
+# ------------------------------------------------------------- validation
+def validate_hint(hint: Any) -> None:
+    """Reject annotations the frontend cannot marshal, at decoration time."""
+    if hint is None or hint is type(None):
+        raise MarshalError("None is not a marshallable Fix type")
+    if hint in _SCALARS or hint is Handle:
+        return
+    origin = typing.get_origin(hint)
+    if origin in (tuple, list):
+        args = typing.get_args(hint)
+        for a in args:
+            if a is Ellipsis:
+                continue
+            validate_hint(a)
+        return
+    if hint in (tuple, list):
+        return  # bare containers: element types inferred per value
+    raise MarshalError(
+        f"unsupported annotation {hint!r}: use int, bool, bytes, str, "
+        f"Handle, or tuples/lists thereof")
+
+
+# ---------------------------------------------------------------- marshal
+def _int_blob(emitter, value: int) -> Handle:
+    try:
+        return emitter.put_blob(int(value).to_bytes(8, "little", signed=True))
+    except OverflowError as e:
+        raise MarshalError(f"int {value!r} does not fit 8 bytes") from e
+
+
+def marshal(emitter, value: Any, hint: Any = None) -> Handle:
+    """Encode ``value`` as a Handle via ``emitter`` (put_blob/put_tree).
+
+    ``hint`` is the annotation driving the encoding; Handles pass through
+    regardless of hint, and with no hint the encoding is inferred from the
+    runtime type.
+    """
+    if isinstance(value, Handle):
+        return value  # raw Table-1 passthrough
+    if hint is Handle or hint is None or hint in (tuple, list):
+        return _marshal_inferred(emitter, value)
+    if hint is bool or hint is int:
+        if not isinstance(value, int):
+            raise MarshalError(f"expected {hint.__name__}, got {type(value).__name__}")
+        return _int_blob(emitter, value)
+    if hint is bytes:
+        if not isinstance(value, (bytes, bytearray, memoryview)):
+            raise MarshalError(f"expected bytes, got {type(value).__name__}")
+        return emitter.put_blob(bytes(value))
+    if hint is str:
+        if not isinstance(value, str):
+            raise MarshalError(f"expected str, got {type(value).__name__}")
+        return emitter.put_blob(value.encode("utf-8"))
+    origin = typing.get_origin(hint)
+    if origin in (tuple, list):
+        if not isinstance(value, (tuple, list)):
+            raise MarshalError(f"expected {hint!r}, got {type(value).__name__}")
+        hints = _element_hints(hint, len(value))
+        kids = [marshal(emitter, v, h) for v, h in zip(value, hints)]
+        return emitter.put_tree(kids)
+    raise MarshalError(f"unsupported annotation {hint!r}")
+
+
+def _marshal_inferred(emitter, value: Any) -> Handle:
+    if isinstance(value, bool) or isinstance(value, int):
+        return _int_blob(emitter, value)
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        return emitter.put_blob(bytes(value))
+    if isinstance(value, str):
+        return emitter.put_blob(value.encode("utf-8"))
+    if isinstance(value, (tuple, list)):
+        return emitter.put_tree([marshal(emitter, v) for v in value])
+    raise MarshalError(f"cannot marshal {type(value).__name__}: {value!r}")
+
+
+def _element_hints(hint: Any, n: int) -> list:
+    """Per-element annotations for a container hint of ``n`` elements."""
+    origin = typing.get_origin(hint)
+    args = typing.get_args(hint)
+    if origin is list:
+        elem = args[0] if args else None
+        return [elem] * n
+    # tuple
+    if not args:
+        return [None] * n
+    if len(args) == 2 and args[1] is Ellipsis:
+        return [args[0]] * n
+    if len(args) != n:
+        raise MarshalError(f"{hint!r} expects {len(args)} elements, got {n}")
+    return list(args)
+
+
+# -------------------------------------------------------------- unmarshal
+def unmarshal(reader, handle: Handle, hint: Any = None) -> Any:
+    """Decode ``handle`` into a Python value per ``hint`` via ``reader``
+    (get_blob/get_tree).  ``hint`` of ``Handle`` (or None on a non-data
+    handle) passes the handle through unread — laziness survives typing.
+    """
+    if hint is Handle:
+        return handle
+    if not handle.is_data():
+        if hint is None:
+            return handle  # thunk/encode: opaque without a value annotation
+        raise MarshalError(f"cannot decode non-data handle {handle!r} as {hint!r}")
+    if hint is None or hint in (tuple, list):
+        if handle.content_type == BLOB:
+            return reader.get_blob(handle)
+        kids = reader.get_tree(handle)
+        return tuple(unmarshal(reader, k, None) for k in kids)
+    if hint is bool:
+        return int.from_bytes(reader.get_blob(handle), "little", signed=True) != 0
+    if hint is int:
+        return int.from_bytes(reader.get_blob(handle), "little", signed=True)
+    if hint is bytes:
+        return bytes(reader.get_blob(handle))
+    if hint is str:
+        return reader.get_blob(handle).decode("utf-8")
+    origin = typing.get_origin(hint)
+    if origin in (tuple, list):
+        if handle.content_type != TREE:
+            raise MarshalError(f"expected a tree for {hint!r}, got a blob")
+        kids = reader.get_tree(handle)
+        hints = _element_hints(hint, len(kids))
+        vals = [unmarshal(reader, k, h) for k, h in zip(kids, hints)]
+        return vals if origin is list else tuple(vals)
+    raise MarshalError(f"unsupported annotation {hint!r}")
+
+
+# ----------------------------------------------------------- type algebra
+def element_type(hint: Any, index) -> Optional[Any]:
+    """Static type of ``hint[index]`` for selection sugar (None = unknown)."""
+    if hint is None:
+        return None
+    origin = typing.get_origin(hint)
+    args = typing.get_args(hint)
+    if origin is list and args:
+        return list[args[0]] if isinstance(index, slice) else args[0]
+    if origin is tuple and args:
+        if len(args) == 2 and args[1] is Ellipsis:
+            return hint if isinstance(index, slice) else args[0]
+        if isinstance(index, slice):
+            return None  # a subrange of a heterogeneous tuple: re-annotate
+        if isinstance(index, int) and 0 <= index < len(args):
+            return args[index]
+    return None

@@ -20,7 +20,8 @@ import numpy as np
 
 from ..checkpoint import dedup_stats, load_step, save_step
 from ..configs import ARCHS, get_config
-from ..core import Evaluator, Repository
+from ..core import Repository
+from .. import fix
 from ..data import TokenPipeline, corpus_handle
 from ..models import init_params
 from ..models.base import tree_map_specs
@@ -49,7 +50,7 @@ def train(cfg, runcfg: RunConfig, steps: int, batch: int, seq: int,
           seed: int = 0):
     """Returns (final state, losses, checkpoint roots, repo)."""
     repo = repo or Repository("train")
-    evaluator = Evaluator(repo)
+    backend = fix.local(repo)  # shard recipes run through the one protocol
     corpus = corpus_handle(repo, n_bytes=max(batch * (seq + 1) * 64, 1 << 20),
                            seed=seed)
     pipe = TokenPipeline(repo, corpus, seq_len=seq, batch=batch,
@@ -67,7 +68,7 @@ def train(cfg, runcfg: RunConfig, steps: int, batch: int, seq: int,
     losses, roots = [], []
     t0 = time.time()
     for step in range(start, start + steps):
-        batch_np = pipe.batch_for_step(evaluator, step)  # Fix thunk -> bytes
+        batch_np = pipe.batch_for_step(backend, step)  # Fix recipe -> bytes
         state, metrics = step_fn(state, batch_np)
         loss = float(metrics["loss"])
         losses.append(loss)
@@ -79,6 +80,7 @@ def train(cfg, runcfg: RunConfig, steps: int, batch: int, seq: int,
         if checkpoint_every and (step + 1) % checkpoint_every == 0:
             roots.append(save_step(repo, state, step + 1,
                                    {"arch": cfg.name}))
+    backend.close()
     return state, losses, roots, repo
 
 

@@ -44,6 +44,8 @@ from typing import Optional
 from ..core import Handle, MissingData, Repository
 from ..core.handle import APPLICATION, BLOB, IDENTIFICATION, SELECTION, STRICT, TREE
 from ..core.repository import walk_object_closure
+from ..fix.backend import ClusterBackend
+from ..fix.future import Future
 from .node import Node, WorkItem
 from .transfers import LocationIndex, TransferManager
 
@@ -65,32 +67,6 @@ class Network:
 
     def link(self, src: str, dst: str) -> Link:
         return self.overrides.get((src, dst), self.default)
-
-
-# ------------------------------------------------------------------ future
-class Future:
-    def __init__(self):
-        self._ev = threading.Event()
-        self._result: Optional[Handle] = None
-        self._exc: Optional[BaseException] = None
-
-    def set(self, result: Handle) -> None:
-        self._result = result
-        self._ev.set()
-
-    def set_exception(self, exc: BaseException) -> None:
-        self._exc = exc
-        self._ev.set()
-
-    def result(self, timeout: Optional[float] = 120.0) -> Handle:
-        if not self._ev.wait(timeout):
-            raise TimeoutError("fix job timed out")
-        if self._exc is not None:
-            raise self._exc
-        return self._result
-
-    def done(self) -> bool:
-        return self._ev.is_set()
 
 
 # --------------------------------------------------------------------- job
@@ -176,6 +152,11 @@ class Cluster:
             self.network, self.nodes, self._events.put,
             account=self._account_transfer, mode=transfer_mode)
 
+        # The user-facing surface: Cluster.submit/evaluate/fetch_result are
+        # thin delegates to this Backend (repro.fix), which owns program
+        # compilation, fetch accounting and decode.
+        self.backend = ClusterBackend(self)
+
         self._sched = threading.Thread(target=self._loop, daemon=True, name="fix-sched")
         self._sched.start()
         for n in self.nodes.values():
@@ -193,24 +174,24 @@ class Cluster:
     def worker_nodes(self) -> list[Node]:
         return [n for n in self.nodes.values() if n.n_workers > 0 and n.alive]
 
-    def submit(self, encode: Handle) -> Future:
+    def submit(self, program) -> Future:
+        """Thin delegate: accepts a Lazy program or a Handle (thunks are
+        strict-wrapped), compiled by the Backend against the client repo."""
+        return self.backend.submit(program)
+
+    def evaluate(self, program, timeout: float = 120.0) -> Handle:
+        return self.backend.evaluate(program, timeout)
+
+    def fetch_result(self, handle: Handle, into: Optional[Repository] = None) -> Repository:
+        """Pull result bytes to the client — link costs paid *and accounted*
+        (see ClusterBackend.fetch_result)."""
+        return self.backend.fetch_result(handle, into)
+
+    def _submit_encode(self, encode: Handle) -> Future:
+        """Raw submission path the Backend compiles down to."""
         fut = Future()
         self._events.put(("submit", encode, fut, None, False))
         return fut
-
-    def evaluate(self, encode: Handle, timeout: float = 120.0) -> Handle:
-        return self.submit(encode).result(timeout)
-
-    def fetch_result(self, handle: Handle, into: Optional[Repository] = None) -> Repository:
-        """Pull result bytes to the client (charged with link costs)."""
-        into = into or self.client.repo
-        src = self._find_source_name(handle)
-        if src is not None and src != "client":
-            link = self.network.link(src, "client")
-            size = self._deep_size(handle)
-            time.sleep(link.latency_s + link.serialized_s(size))
-            self.nodes[src].repo.export(handle, into)
-        return into
 
     def kill_node(self, node_id: str) -> None:
         self.nodes[node_id].kill()
@@ -224,14 +205,21 @@ class Cluster:
         self.bytes_moved = 0
 
     def utilization(self, window_s: float) -> dict:
+        """Worker-slot time over ``window_s``, as three fractions that
+        partition the window: *busy* (codelet running), *starved* (slot held
+        while internal-mode I/O completes — the paper's iowait), and
+        *idle_iowait* (the remainder: slots with nothing bound).  Starvation
+        is no longer double-counted into the idle fraction."""
         busy = sum(n.busy_ns for n in self.worker_nodes()) * 1e-9
         starved = sum(n.starved_ns for n in self.worker_nodes()) * 1e-9
         slots = sum(n.n_workers for n in self.worker_nodes())
         denom = max(slots * window_s, 1e-9)
+        busy_frac = busy / denom
+        starved_frac = starved / denom
         return {
-            "busy_frac": busy / denom,
-            "starved_frac": starved / denom,
-            "idle_iowait_frac": 1.0 - busy / denom,
+            "busy_frac": busy_frac,
+            "starved_frac": starved_frac,
+            "idle_iowait_frac": max(0.0, 1.0 - busy_frac - starved_frac),
             "transfers": self.transfers,
             "bytes_moved": self.bytes_moved,
         }

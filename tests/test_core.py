@@ -1,4 +1,12 @@
-"""Unit tests for the Fix core: handles, repository, evaluator semantics."""
+"""Unit tests for the Fix core: handles, repository, evaluator semantics.
+
+PINNED raw-Table-1 module: everything here speaks the paper's interface
+directly — hand-packed little-endian blobs, hand-built ``combination``
+trees, explicit ``.strict()`` — deliberately bypassing the ``repro.fix``
+frontend.  This keeps the core paper-faithful: the typed frontend compiles
+*down to* this surface (equivalence asserted in tests/test_fix_frontend.py)
+and must never be required to use it.
+"""
 import struct
 
 import pytest

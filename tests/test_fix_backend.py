@@ -1,0 +1,270 @@
+"""The Backend protocol: Future callbacks / error paths / as_completed,
+local ≡ cluster program portability, and the satellites that ride on it
+(fetch accounting, utilization partition).
+"""
+import threading
+import time
+
+import pytest
+
+import repro.fix as fix
+from repro.core import FixError, Handle, Repository
+from repro.core.stdlib import add, count_string, fib, inc_chain, slice_blob
+from repro.runtime import Cluster, Link, Network
+
+
+def make_cluster(**kw) -> Cluster:
+    kw.setdefault("n_nodes", 3)
+    kw.setdefault("workers_per_node", 2)
+    kw.setdefault("network", Network(Link(latency_s=0.0005, gbps=10)))
+    return Cluster(**kw)
+
+
+# ------------------------------------------------------------------ future
+class TestFuture:
+    def test_callback_after_set(self):
+        f = fix.Future()
+        seen = []
+        f.add_done_callback(seen.append)
+        assert seen == []
+        f.set("r")
+        assert seen == [f]
+
+    def test_callback_on_already_done(self):
+        f = fix.Future()
+        f.set("r")
+        seen = []
+        f.add_done_callback(seen.append)
+        assert seen == [f]
+
+    def test_first_write_wins(self):
+        f = fix.Future()
+        f.set("a")
+        f.set("b")
+        f.set_exception(RuntimeError("late"))
+        assert f.result(0) == "a" and f.exception(0) is None
+
+    def test_exception_path(self):
+        f = fix.Future()
+        f.set_exception(ValueError("boom"))
+        assert isinstance(f.exception(0), ValueError)
+        with pytest.raises(ValueError, match="boom"):
+            f.result(0)
+
+    def test_callback_exception_swallowed(self):
+        f = fix.Future()
+        f.add_done_callback(lambda _: 1 / 0)
+        seen = []
+        f.add_done_callback(seen.append)
+        f.set("ok")  # must not raise, must reach later callbacks
+        assert seen == [f]
+
+    def test_timeout(self):
+        f = fix.Future()
+        with pytest.raises(TimeoutError):
+            f.result(0.01)
+
+
+class TestAsCompleted:
+    def test_completion_order(self):
+        futs = [fix.Future() for _ in range(3)]
+
+        def finisher():
+            for i in (2, 0, 1):
+                time.sleep(0.01)
+                futs[i].set(i)
+
+        threading.Thread(target=finisher, daemon=True).start()
+        order = [f.result(1) for f in fix.as_completed(futs, timeout=5)]
+        assert order == [2, 0, 1]
+
+    def test_already_done_yield_immediately(self):
+        futs = [fix.Future() for _ in range(3)]
+        for i, f in enumerate(futs):
+            f.set(i)
+        assert sorted(f.result(0) for f in fix.as_completed(futs)) == [0, 1, 2]
+
+    def test_timeout(self):
+        stuck = fix.Future()
+        with pytest.raises(TimeoutError):
+            list(fix.as_completed([stuck], timeout=0.05))
+
+
+# ----------------------------------------------------------- local backend
+class TestLocalBackend:
+    def test_submit_evaluate_fetch_run(self):
+        with fix.local() as be:
+            fut = be.submit(add(20, 22))
+            assert be.fetch(fut) == 42
+            out = be.evaluate(add(20, 22))
+            assert isinstance(out, Handle)
+            assert be.fetch(out, as_type=int) == 42
+            assert be.run(add(1, 2)) == 3
+
+    def test_codelet_error_delivered_via_future(self):
+        with fix.local() as be:
+            bomb = add(Handle.blob(b"not-an-int"), Handle.blob(b"x"))
+            fut = be.submit(bomb)
+            assert isinstance(fut.exception(10), FixError)
+            with pytest.raises(FixError):
+                fut.result(10)
+
+    def test_close_idempotent_and_submit_after_close_rejected(self):
+        be = fix.local()
+        be.run(add(1, 1))
+        be.close()
+        be.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            be.submit(add(1, 2))
+
+    def test_evaluate_honors_timeout(self):
+        """The portability contract: a bounded evaluate must raise
+        TimeoutError on the local backend just like on the cluster."""
+        @fix.codelet(name="t_sleepy")
+        def t_sleepy(n: int) -> int:
+            time.sleep(0.4)
+            return n
+
+        with fix.local() as be:
+            with pytest.raises(TimeoutError):
+                be.evaluate(t_sleepy(1), timeout=0.05)
+
+    def test_evaluate_inline_fast_path(self):
+        with fix.local() as be:
+            out = be.evaluate(add(3, 4), timeout=None)  # runs on this thread
+            assert be.fetch(out, as_type=int) == 7
+
+    def test_fetch_untyped_defaults(self):
+        with fix.local() as be:
+            h = be.evaluate(slice_blob(b"hello world", 0, 5))
+            assert be.fetch(h) == b"hello"  # no type: blobs decode to bytes
+
+    def test_submit_rejects_non_programs(self):
+        with fix.local() as be:
+            with pytest.raises(fix.MarshalError):
+                be.submit(42)
+
+
+# --------------------------------------------------- program portability
+class TestPortability:
+    """The acceptance bar: the same program, unchanged, on both backends."""
+
+    PROGRAMS = [
+        (lambda: add(20, 22), 42),
+        (lambda: fib(12), 144),
+        (lambda: inc_chain(0, 60), 60),
+        (lambda: add(add(1, 2), add(add(3, 4), 5)), 15),
+    ]
+
+    def test_same_value_and_same_result_handle(self):
+        local_results = []
+        with fix.local() as be:
+            for mk, want in self.PROGRAMS:
+                h = be.evaluate(mk(), timeout=60)
+                assert be.fetch(h, as_type=int) == want
+                local_results.append(h.raw)
+        c = make_cluster()
+        try:
+            be = fix.on(c)
+            for (mk, want), local_raw in zip(self.PROGRAMS, local_results):
+                h = be.evaluate(mk(), timeout=60)
+                assert be.fetch(h, as_type=int) == want
+                assert h.raw == local_raw  # content-addressed: same name
+        finally:
+            c.shutdown()
+
+    def test_cluster_error_path(self):
+        c = make_cluster()
+        try:
+            be = fix.on(c)
+            bomb = add(Handle.blob(b"not-an-int"), Handle.blob(b"x"))
+            with pytest.raises(FixError):
+                be.submit(bomb).result(30)
+        finally:
+            c.shutdown()
+
+    def test_as_completed_on_cluster(self):
+        c = make_cluster()
+        try:
+            be = fix.on(c)
+            futs = [be.submit(add(i, i)) for i in range(6)]
+            got = sorted(be.fetch(f) for f in be.as_completed(futs, timeout=30))
+            assert got == [0, 2, 4, 6, 8, 10]
+        finally:
+            c.shutdown()
+
+    def test_cluster_thin_delegates_accept_programs(self):
+        """Cluster.submit/evaluate are Backend delegates: Lazy in, raw
+        encodes still accepted."""
+        c = make_cluster()
+        try:
+            assert c.backend.fetch(c.submit(add(2, 3))) == 5
+            raw = add(4, 5).compile(c.client_repo).strict()
+            assert c.backend.fetch(c.evaluate(raw), as_type=int) == 9
+        finally:
+            c.shutdown()
+
+
+# ------------------------------------------------------- fetch accounting
+class TestFetchAccounting:
+    def test_result_fetch_counts_transfers_and_bytes(self):
+        """Satellite: fetch_result used to sleep for link costs but never
+        account them — result-fetch traffic must show up in the counters."""
+        c = make_cluster()
+        try:
+            be = fix.on(c)
+            corpus = c.client_repo.put_blob(bytes(range(256)) * 1000)
+            fut = be.submit(slice_blob(corpus, 0, 100_000))
+            h = fut.result(30)
+            tx0, by0 = c.transfers, c.bytes_moved
+            got = be.fetch(fut)
+            assert len(got) == 100_000
+            assert c.transfers == tx0 + 1
+            assert c.bytes_moved >= by0 + 100_000
+            # a second fetch moves nothing new (content addressing)
+            tx1, by1 = c.transfers, c.bytes_moved
+            be.fetch(h, as_type=bytes)
+            assert (c.transfers, c.bytes_moved) == (tx1, by1)
+        finally:
+            c.shutdown()
+
+    def test_literal_results_fetch_free(self):
+        c = make_cluster()
+        try:
+            be = fix.on(c)
+            fut = be.submit(add(1, 2))
+            fut.result(30)
+            tx0, by0 = c.transfers, c.bytes_moved
+            assert be.fetch(fut) == 3
+            assert (c.transfers, c.bytes_moved) == (tx0, by0)
+        finally:
+            c.shutdown()
+
+
+# -------------------------------------------------- utilization partition
+class TestUtilization:
+    def test_fractions_partition_the_window(self):
+        """Satellite: busy + starved + idle_iowait must cover the window
+        exactly once — starvation is not double-counted into idle."""
+        net = Network(Link(latency_s=0.02, gbps=10))
+        c = make_cluster(n_nodes=2, io_mode="internal", network=net)
+        try:
+            be = fix.on(c)
+            c.nodes["n0"].repo.put_blob(b"z" * 100_000)
+            shard = Handle.blob(b"z" * 100_000)
+            t0 = time.perf_counter()
+            futs = [be.submit(count_string(shard, bytes([i % 3]) + b"zz"))
+                    for i in range(8)]
+            for f in futs:
+                f.result(30)
+            dt = time.perf_counter() - t0
+            u = c.utilization(dt)
+            assert u["starved_frac"] > 0  # internal mode held slots on I/O
+            total = u["busy_frac"] + u["starved_frac"] + u["idle_iowait_frac"]
+            assert total >= 1.0 - 1e-9
+            assert u["idle_iowait_frac"] >= 0.0
+            # unclamped case: the three cover the window exactly
+            if u["busy_frac"] + u["starved_frac"] <= 1.0:
+                assert total == pytest.approx(1.0)
+        finally:
+            c.shutdown()

@@ -1,0 +1,323 @@
+"""The typed frontend: marshalling, lazy graphs, and — load-bearing — the
+shared-representation guarantee: every frontend-compiled program has
+**byte-identical content keys** to the equivalent hand-built Table-1 tree.
+"""
+import struct
+
+import pytest
+
+import repro.fix as fix
+from repro.core import Evaluator, FixError, Handle, Repository
+from repro.core.stdlib import (
+    LIMITS_SMALL,
+    add,
+    checksum_tree,
+    combination,
+    count_string,
+    fib,
+    fix_if,
+    inc_chain,
+    merge_counts,
+    slice_blob,
+)
+from repro.fix.marshal import MarshalError, marshal, unmarshal
+
+
+def _i(v: int) -> Handle:
+    return Handle.blob(v.to_bytes(8, "little", signed=True))
+
+
+# Test-local typed codelets exercising the full annotation surface.
+@fix.codelet(name="t_echo_nested")
+def t_echo_nested(x: tuple[tuple[int, bytes], str, bool]) -> tuple[tuple[int, bytes], str, bool]:
+    return x
+
+
+@fix.codelet(name="t_echo_list")
+def t_echo_list(xs: list[int]) -> list[int]:
+    return xs
+
+
+@fix.codelet(name="t_pass_handle")
+def t_pass_handle(h: Handle, n: int) -> Handle:
+    return h
+
+
+@fix.codelet(name="t_pair")
+def t_pair(a: int, b: bytes) -> tuple[int, bytes]:
+    return (a * 2, b + b)
+
+
+# ------------------------------------------------- content-key equivalence
+class TestSharedRepresentation:
+    """Frontend-compiled graph ≡ hand-built combination tree, byte for byte."""
+
+    def test_simple_call(self):
+        repo = Repository()
+        typed = add(40, 2).compile(repo)
+        hand = combination(repo, "add", _i(40), _i(2))
+        assert typed.raw == hand.raw
+
+    def test_nested_calls_strict_in_value_position(self):
+        repo = Repository()
+        typed = add(add(1, 2), add(3, 4)).compile(repo)
+        hand = combination(repo, "add",
+                           combination(repo, "add", _i(1), _i(2)).strict(),
+                           combination(repo, "add", _i(3), _i(4)).strict())
+        assert typed.raw == hand.raw
+
+    def test_handle_position_stays_lazy(self):
+        """fig 2: branches of fix_if are Handle params — bare thunks, no
+        Encode wrapper, exactly like the hand-built spelling."""
+        repo = Repository()
+        good, bomb = add(1, 2), add(10, 20)
+        typed = fix_if(True, good, bomb).compile(repo)
+        hand = combination(repo, "fix_if", _i(1),
+                           combination(repo, "add", _i(1), _i(2)),
+                           combination(repo, "add", _i(10), _i(20)))
+        assert typed.raw == hand.raw
+
+    def test_inc_chain_and_fib(self):
+        repo = Repository()
+        assert inc_chain(0, 500).compile(repo).raw == \
+            combination(repo, "inc_chain", _i(0), _i(500)).raw
+        assert fib(10).compile(repo).raw == \
+            combination(repo, "fib", _i(10)).raw
+
+    def test_wordcount_reduction_dag(self):
+        """The fig-8b map+binary-reduce program, both spellings."""
+        repo = Repository()
+        shards = [repo.put_blob(bytes([i]) * 100) for i in range(5)]
+        needle = b"ab"
+        # typed
+        level_t = [count_string(h, needle) for h in shards]
+        while len(level_t) > 1:
+            nxt = [merge_counts(level_t[i], level_t[i + 1])
+                   for i in range(0, len(level_t) - 1, 2)]
+            if len(level_t) % 2:
+                nxt.append(level_t[-1])
+            level_t = nxt
+        typed = level_t[0].strict().compile(repo)
+        # hand-built
+        level_h = [combination(repo, "count_string", h,
+                               Handle.blob(needle)).strict() for h in shards]
+        while len(level_h) > 1:
+            nxt = [combination(repo, "merge_counts",
+                               level_h[i], level_h[i + 1]).strict()
+                   for i in range(0, len(level_h) - 1, 2)]
+            if len(level_h) % 2:
+                nxt.append(level_h[-1])
+            level_h = nxt
+        assert typed.raw == level_h[0].raw
+
+    def test_checksum_tree_handle_passthrough(self):
+        repo = Repository()
+        tree = repo.put_tree([repo.put_blob(bytes([i]) * 64) for i in range(4)])
+        typed = checksum_tree(tree).compile(repo)
+        hand = combination(repo, "checksum_tree", tree)
+        assert typed.raw == hand.raw
+
+    def test_selection_sugar(self):
+        repo = Repository()
+        kids = [repo.put_blob(bytes([i]) * 40) for i in range(5)]
+        tree = repo.put_tree(kids)
+        typed = fix.lit(tree)[3].compile(repo)
+        pair = repo.put_tree([tree, repo.put_blob(struct.pack("<q", 3))])
+        assert typed.raw == pair.selection_of().raw
+        # subrange
+        typed_r = fix.lit(tree)[1:4].compile(repo)
+        pair_r = repo.put_tree([tree, repo.put_blob(struct.pack("<qq", 1, 3))])
+        assert typed_r.raw == pair_r.selection_of().raw
+
+    def test_encode_sugar(self):
+        repo = Repository()
+        expr = add(1, 2)
+        hand = combination(repo, "add", _i(1), _i(2))
+        assert expr.strict().compile(repo).raw == hand.strict().raw
+        assert expr.shallow().compile(repo).raw == hand.shallow().raw
+
+    def test_limits_match_raw_default(self):
+        assert fix.DEFAULT_LIMITS == LIMITS_SMALL
+
+    def test_pipeline_shard_recipe(self):
+        from repro.data import TokenPipeline, corpus_handle
+        repo = Repository()
+        corpus = corpus_handle(repo, 1 << 16)
+        pipe = TokenPipeline(repo, corpus, seq_len=16, batch=2)
+        need = 2 * 17
+        offset = (3 * need) % max(corpus.size - need, 1)
+        hand = combination(repo, "slice_blob", corpus, _i(offset), _i(need))
+        assert pipe.shard_thunk(3).raw == hand.raw
+
+    def test_raw_and_typed_spellings_evaluate_identically(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        typed_out = ev.evaluate(add(19, 23).compile(repo).strict())
+        hand_out = ev.evaluate(combination(repo, "add", _i(19), _i(23)).strict())
+        assert typed_out.raw == hand_out.raw
+
+
+# ----------------------------------------------------- marshal round trips
+# (hypothesis widens these in tests/test_fix_marshal_props.py; the pinned
+# cases here run everywhere)
+NESTED = tuple[tuple[int, bytes], str, bool]
+
+
+class TestMarshalRoundTrip:
+    @pytest.mark.parametrize("v", [0, 1, -1, 255, -256, 2**62, -(2**63),
+                                   2**63 - 1])
+    def test_int(self, v):
+        repo = Repository()
+        assert unmarshal(repo, marshal(repo, v, int), int) == v
+
+    @pytest.mark.parametrize("b", [b"", b"x", b"\x00" * 30, b"y" * 31,
+                                   bytes(range(256))])
+    def test_bytes(self, b):
+        """Includes the empty blob (a 0-length literal handle) and both
+        sides of the literal threshold."""
+        repo = Repository()
+        assert unmarshal(repo, marshal(repo, b, bytes), bytes) == b
+
+    @pytest.mark.parametrize("s", ["", "plain", "ünïcodé ✓", "a" * 100])
+    def test_str(self, s):
+        repo = Repository()
+        assert unmarshal(repo, marshal(repo, s, str), str) == s
+
+    @pytest.mark.parametrize("v", [True, False])
+    def test_bool(self, v):
+        repo = Repository()
+        assert unmarshal(repo, marshal(repo, v, bool), bool) is v
+
+    @pytest.mark.parametrize("xs", [[], [1], [-5, 0, 5], list(range(20))])
+    def test_list(self, xs):
+        repo = Repository()
+        assert unmarshal(repo, marshal(repo, xs, list[int]), list[int]) == xs
+
+    @pytest.mark.parametrize("v", [((0, b""), "", False),
+                                   ((-42, b"blob" * 20), "déjà", True)])
+    def test_nested_tuple(self, v):
+        repo = Repository()
+        assert unmarshal(repo, marshal(repo, v, NESTED), NESTED) == v
+
+    def test_handle_passthrough(self):
+        repo = Repository()
+        h = repo.put_blob(b"q" * 64)
+        assert marshal(repo, h, bytes) is h       # handles bypass encoding
+        assert unmarshal(repo, h, Handle) is h    # and decoding
+
+    @pytest.mark.parametrize("v", [((0, b""), "", False),
+                                   ((2**40, b"\x00\xff"), "mid ✓", True)])
+    def test_echo_codelet_end_to_end(self, v):
+        """Values survive the full trip: client marshal -> sealed-API
+        unmarshal -> codelet body -> sealed-API marshal -> client decode."""
+        with fix.local() as be:
+            assert be.run(t_echo_nested(v)) == v
+
+    def test_echo_list_end_to_end(self):
+        with fix.local() as be:
+            assert be.run(t_echo_list([7, -9, 2**50])) == [7, -9, 2**50]
+
+
+# ------------------------------------------------------------- lazy sugar
+class TestLazy:
+    def test_calling_runs_nothing(self):
+        expr = add(1, 2)
+        assert isinstance(expr, fix.Lazy)
+        assert expr.out_type is int
+
+    def test_no_truth_value(self):
+        with pytest.raises(MarshalError, match="truth value"):
+            bool(add(1, 2))
+
+    def test_strict_idempotent(self):
+        e = add(1, 2).strict()
+        assert e.strict() is e
+        assert e.shallow() is not e
+
+    def test_selection_types(self):
+        p = t_pair(3, b"xy")
+        assert p.out_type == tuple[int, bytes]
+        assert p[0].out_type is int
+        assert p[1].out_type is bytes
+        with fix.local() as be:
+            assert be.run(p[0]) == 6
+            assert be.run(p[1]) == b"xyxy"
+
+    def test_bad_selection_index(self):
+        with pytest.raises(MarshalError):
+            add(1, 2)["k"]
+        with pytest.raises(MarshalError):
+            add(1, 2)[::2]
+
+    def test_negative_selection_rejected(self):
+        """The target's length is unknown client-side, so negative indices
+        cannot be normalized — reject them instead of mis-selecting."""
+        with pytest.raises(MarshalError, match="non-negative"):
+            fix.lit(b"abc")[-1]
+        with pytest.raises(MarshalError, match="non-negative"):
+            t_pair(1, b"x")[-2:]
+        with pytest.raises(MarshalError, match="non-negative"):
+            fix.lit((1, 2, 3))[0:-1]
+
+    def test_arity_checked_client_side(self):
+        with pytest.raises(MarshalError):
+            add(1)
+        with pytest.raises(MarshalError):
+            add(1, 2, 3)
+
+    def test_type_checked_client_side(self):
+        with pytest.raises(MarshalError):
+            add("one", 2).compile(Repository())
+
+    def test_handle_args_bypass_type_checks(self):
+        """Raw Table-1 escape hatch: a Handle arg is passed through even
+        where a value type is annotated (same trust as hand-built trees)."""
+        repo = Repository()
+        h = repo.put_blob(b"whatever")
+        compiled = add(h, 2).compile(repo)
+        hand = combination(repo, "add", h, _i(2))
+        assert compiled.raw == hand.raw
+
+    def test_shared_subexpression_compiles_once(self):
+        repo = Repository()
+        shared = add(1, 2)
+        expr = add(shared, shared)
+        compiled = expr.compile(repo)
+        hand_child = combination(repo, "add", _i(1), _i(2)).strict()
+        hand = combination(repo, "add", hand_child, hand_child)
+        assert compiled.raw == hand.raw
+
+
+# -------------------------------------------------------- codelet hygiene
+class TestCodeletDefinition:
+    def test_unannotated_param_rejected(self):
+        with pytest.raises(MarshalError, match="annotation"):
+            @fix.codelet(name="t_bad1")
+            def bad(x):
+                return x
+
+    def test_unsupported_annotation_rejected(self):
+        with pytest.raises(MarshalError, match="unsupported"):
+            @fix.codelet(name="t_bad2")
+            def bad(x: float) -> int:
+                return 0
+
+    def test_varargs_rejected(self):
+        with pytest.raises(MarshalError, match="marshallable"):
+            @fix.codelet(name="t_bad3")
+            def bad(*xs: int) -> int:
+                return 0
+
+    def test_wrong_arity_combination_fails_at_apply(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        th = combination(repo, "add", _i(1))  # missing an argument
+        with pytest.raises(FixError, match="argument"):
+            ev.evaluate(th.strict())
+
+    def test_handle_return_passthrough(self):
+        repo = Repository()
+        ev = Evaluator(repo)
+        big = repo.put_blob(b"p" * 64)
+        out = ev.evaluate(t_pass_handle(big, 1).compile(repo).strict())
+        assert out.content_key() == big.content_key()

@@ -1,0 +1,93 @@
+"""Hypothesis property tests for the typed frontend's marshalling layer.
+
+The pinned deterministic cases live in tests/test_fix_frontend.py; this
+module widens them to generated inputs (nested tuples, negative ints,
+empty bytes, unicode, Handle passthrough) wherever hypothesis is present.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+import repro.fix as fix  # noqa: E402
+from repro.core import Handle, Repository  # noqa: E402
+from repro.fix.marshal import marshal, unmarshal  # noqa: E402
+from test_fix_frontend import NESTED, t_echo_list, t_echo_nested  # noqa: E402
+
+FAST = settings(max_examples=50, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+I64 = st.integers(-(2**63), 2**63 - 1)
+
+
+@given(I64)
+@FAST
+def test_int_roundtrip(v):
+    repo = Repository()
+    assert unmarshal(repo, marshal(repo, v, int), int) == v
+
+
+@given(st.binary(max_size=200))
+@FAST
+def test_bytes_roundtrip(b):
+    repo = Repository()
+    assert unmarshal(repo, marshal(repo, b, bytes), bytes) == b
+
+
+@given(st.text(max_size=80))
+@FAST
+def test_str_roundtrip(s):
+    repo = Repository()
+    assert unmarshal(repo, marshal(repo, s, str), str) == s
+
+
+@given(st.lists(I64, max_size=8))
+@FAST
+def test_list_roundtrip(xs):
+    repo = Repository()
+    assert unmarshal(repo, marshal(repo, xs, list[int]), list[int]) == xs
+
+
+@given(st.tuples(st.tuples(I64, st.binary(max_size=60)),
+                 st.text(max_size=20), st.booleans()))
+@FAST
+def test_nested_tuple_roundtrip(v):
+    repo = Repository()
+    assert unmarshal(repo, marshal(repo, v, NESTED), NESTED) == v
+
+
+@given(st.binary(min_size=31, max_size=100))
+@FAST
+def test_handle_passthrough(payload):
+    repo = Repository()
+    h = repo.put_blob(payload)
+    assert marshal(repo, h, bytes) is h
+    assert unmarshal(repo, h, Handle) is h
+
+
+@given(st.tuples(st.tuples(I64, st.binary(max_size=40)),
+                 st.text(max_size=12), st.booleans()))
+@FAST
+def test_echo_codelet_end_to_end(v):
+    with fix.local() as be:
+        assert be.run(t_echo_nested(v)) == v
+
+
+@given(st.lists(I64, max_size=6))
+@FAST
+def test_echo_list_end_to_end(xs):
+    with fix.local() as be:
+        assert be.run(t_echo_list(xs)) == xs
+
+
+@given(st.integers(0, 4), st.lists(st.binary(min_size=1, max_size=60),
+                                   min_size=5, max_size=5))
+@FAST
+def test_selection_sugar_matches_handbuilt(idx, payloads):
+    """lit(tree)[i] compiles to the exact hand-built pair-tree selection."""
+    import struct
+
+    repo = Repository()
+    tree = repo.put_tree([repo.put_blob(p) for p in payloads])
+    typed = fix.lit(tree)[idx].compile(repo)
+    pair = repo.put_tree([tree, repo.put_blob(struct.pack("<q", idx))])
+    assert typed.raw == pair.selection_of().raw

@@ -1,20 +1,16 @@
-"""Integration tests for the Fixpoint cluster runtime."""
-import struct
+"""Integration tests for the Fixpoint cluster runtime.
+
+Written against the ``repro.fix`` frontend (typed codelets + Backend) —
+which compiles to byte-identical Table-1 submissions, so these exercise
+exactly the same scheduler paths as the raw spelling.  The raw-core
+spelling stays pinned in tests/test_core.py and tests/test_transfers.py.
+"""
 import time
 
-import pytest
-
-from repro.core import Handle, Repository
-from repro.core.stdlib import combination
+import repro.fix as fix
+from repro.core import Handle
+from repro.core.stdlib import add, count_string, fib, fix_if, identity, inc_chain, slice_blob
 from repro.runtime import Cluster, Link, Network
-
-
-def _i(v: int) -> Handle:
-    return Handle.blob(v.to_bytes(8, "little", signed=True))
-
-
-def _int_of(repo: Repository, h: Handle) -> int:
-    return int.from_bytes(repo.get_blob(h), "little", signed=True)
 
 
 def make_cluster(**kw) -> Cluster:
@@ -28,40 +24,31 @@ class TestClusterBasics:
     def test_simple_add(self):
         c = make_cluster()
         try:
-            th = combination(c.client_repo, "add", _i(20), _i(22))
-            out = c.evaluate(th.strict(), timeout=30)
-            repo = c.fetch_result(out)
-            assert _int_of(repo, out) == 42
+            assert fix.on(c).run(add(20, 22), timeout=30) == 42
         finally:
             c.shutdown()
 
     def test_tail_call_chain_single_submission(self):
         c = make_cluster()
         try:
-            th = combination(c.client_repo, "inc_chain", _i(0), _i(100))
-            out = c.evaluate(th.strict(), timeout=60)
-            repo = c.fetch_result(out)
-            assert _int_of(repo, out) == 100
+            assert fix.on(c).run(inc_chain(0, 100), timeout=60) == 100
         finally:
             c.shutdown()
 
     def test_parallel_fanout_fib(self):
         c = make_cluster()
         try:
-            th = combination(c.client_repo, "fib", _i(12))
-            out = c.evaluate(th.strict(), timeout=60)
-            repo = c.fetch_result(out)
-            assert _int_of(repo, out) == 144
+            assert fix.on(c).run(fib(12), timeout=60) == 144
         finally:
             c.shutdown()
 
     def test_memoized_resubmission_is_instant(self):
         c = make_cluster()
         try:
-            th = combination(c.client_repo, "add", _i(1), _i(2))
-            c.evaluate(th.strict(), timeout=30)
+            be = fix.on(c)
+            be.evaluate(add(1, 2), timeout=30)
             t0 = time.perf_counter()
-            c.evaluate(th.strict(), timeout=30)
+            be.evaluate(add(1, 2), timeout=30)
             assert time.perf_counter() - t0 < 0.05  # memo hit, no re-execution
         finally:
             c.shutdown()
@@ -70,13 +57,12 @@ class TestClusterBasics:
         """fig 2: the untaken branch's minimum repository never moves."""
         c = make_cluster()
         try:
-            repo = c.client_repo
-            big = repo.put_blob(b"B" * 500_000)  # lives only on client
-            bomb = combination(repo, "identity", big)
-            good = combination(repo, "add", _i(5), _i(6))
-            th = combination(repo, "fix_if", _i(1), good, bomb)
-            out = c.evaluate(th.strict(), timeout=30)
-            assert _int_of(c.fetch_result(out), out) == 11
+            be = fix.on(c)
+            big = be.repo.put_blob(b"B" * 500_000)  # lives only on client
+            bomb = identity(big)
+            out = be.fetch(fix_if(True, add(5, 6), bomb),
+                           as_type=int, timeout=30)
+            assert out == 11
             # the 500 kB blob never left the client
             for n in c.worker_nodes():
                 assert not n.repo.contains(big)
@@ -88,12 +74,10 @@ class TestClusterBasics:
         32-byte-per-child node, not the children's data."""
         c = make_cluster()
         try:
-            repo = c.client_repo
-            kids = [repo.put_blob(bytes([i]) * 100_000) for i in range(8)]
-            tree = repo.put_tree(kids)
-            pair = repo.put_tree([tree, repo.put_blob(struct.pack("<q", 2))])
-            sel = pair.selection_of()
-            out = c.evaluate(sel.shallow(), timeout=30)
+            be = fix.on(c)
+            kids = [be.repo.put_blob(bytes([i]) * 100_000) for i in range(8)]
+            tree = be.repo.put_tree(kids)
+            out = be.evaluate(fix.lit(tree)[2].shallow(), timeout=30)
             assert out.is_ref() and out.size == 100_000
             # selection ran without moving any 100 kB child
             moved = sum(1 for n in c.worker_nodes() for k in kids if n.repo.contains(k))
@@ -106,13 +90,11 @@ class TestPlacement:
     def test_locality_places_near_data(self):
         c = make_cluster(n_nodes=4)
         try:
+            be = fix.on(c)
             # park a large shard on n2
             shard = Handle.blob(b"x" * 1_000_000)
             c.nodes["n2"].repo.put_blob(b"x" * 1_000_000)
-            needle = Handle.blob(b"xx")
-            th = combination(c.client_repo, "count_string", shard, needle)
-            out = c.evaluate(th.strict(), timeout=30)
-            assert _int_of(c.fetch_result(out), out) == 500_000
+            assert be.run(count_string(shard, b"xx"), timeout=30) == 500_000
             assert c.nodes["n2"].jobs_run >= 1  # ran where the data lives
             assert c.bytes_moved < 10_000  # the shard did not move
         finally:
@@ -123,9 +105,8 @@ class TestPlacement:
         try:
             c.nodes["n2"].repo.put_blob(b"y" * 1_000_000)
             shard = Handle.blob(b"y" * 1_000_000)
-            th = combination(c.client_repo, "count_string", shard, Handle.blob(b"yy"))
-            out = c.evaluate(th.strict(), timeout=30)
-            assert _int_of(c.fetch_result(out), out) == 500_000
+            out = fix.on(c).run(count_string(shard, b"yy"), timeout=30)
+            assert out == 500_000
         finally:
             c.shutdown()
 
@@ -135,15 +116,13 @@ class TestInternalIO:
         net = Network(Link(latency_s=0.02, gbps=10))
         c = make_cluster(n_nodes=2, io_mode="internal", network=net)
         try:
+            be = fix.on(c)
             c.nodes["n0"].repo.put_blob(b"z" * 100_000)
             shard = Handle.blob(b"z" * 100_000)
             # force remote work: submit several, some land off-node
-            outs = []
-            for i in range(8):
-                th = combination(c.client_repo, "count_string", shard,
-                                 Handle.blob(bytes([i % 3]) + b"zz"))
-                outs.append(c.submit(th.strict()))
-            for f in outs:
+            futs = [be.submit(count_string(shard, bytes([i % 3]) + b"zz"))
+                    for i in range(8)]
+            for f in futs:
                 f.result(timeout=30)
             starved = sum(n.starved_ns for n in c.worker_nodes())
             assert starved > 0  # slots were held during fetches
@@ -155,12 +134,11 @@ class TestFaultTolerance:
     def test_node_failure_reschedules(self):
         c = make_cluster(n_nodes=3)
         try:
-            th = combination(c.client_repo, "inc_chain", _i(0), _i(50))
-            fut = c.submit(th.strict())
+            fut = fix.on(c).submit(inc_chain(0, 50))
             time.sleep(0.02)
             c.kill_node("n0")
             out = fut.result(timeout=60)
-            assert _int_of(c.fetch_result(out), out) == 50
+            assert fix.on(c).fetch(out, as_type=int) == 50
         finally:
             c.shutdown()
 
@@ -169,26 +147,23 @@ class TestFaultTolerance:
         deterministically re-derived from their producing Encode."""
         c = make_cluster(n_nodes=3)
         try:
-            repo = c.client_repo
-            corpus = repo.put_blob(bytes(range(256)) * 1000)
-            sl = combination(repo, "slice_blob", corpus, _i(1000), _i(500))
-            out1 = c.evaluate(sl.strict(), timeout=30)
+            be = fix.on(c)
+            corpus = be.repo.put_blob(bytes(range(256)) * 1000)
+            out1 = be.evaluate(slice_blob(corpus, 1000, 500), timeout=30)
             # wipe the result from every node that holds it
             for n in c.worker_nodes():
                 n.repo._blobs.pop(out1.content_key(), None)
             # a consumer needing the slice forces recompute-from-lineage
-            th = combination(repo, "count_string", out1.as_object(), Handle.blob(bytes([232])))
-            out2 = c.evaluate(th.strict(), timeout=30)
-            assert _int_of(c.fetch_result(out2), out2) >= 1
+            out2 = be.run(count_string(out1.as_object(), bytes([232])),
+                          timeout=30)
+            assert out2 >= 1
         finally:
             c.shutdown()
 
     def test_straggler_duplicate_execution_safe(self):
         c = make_cluster(n_nodes=3, speculate_after_s=0.05)
         try:
-            th = combination(c.client_repo, "fib", _i(10))
-            out = c.evaluate(th.strict(), timeout=60)
-            assert _int_of(c.fetch_result(out), out) == 55
+            assert fix.on(c).run(fib(10), timeout=60) == 55
         finally:
             c.shutdown()
 
@@ -199,9 +174,7 @@ class TestDeterminismProperties:
         for seed in (0, 1):
             c = make_cluster(n_nodes=2 + seed, seed=seed)
             try:
-                th = combination(c.client_repo, "fib", _i(9))
-                out = c.evaluate(th.strict(), timeout=60)
-                results.append(_int_of(c.fetch_result(out), out))
+                results.append(fix.on(c).run(fib(9), timeout=60))
             finally:
                 c.shutdown()
         assert results[0] == results[1] == 34
