@@ -23,6 +23,7 @@ FIGS = {
     "9": figures.fig9_btree,
     "10": figures.fig10_burst_compile,
     "staging": figures.fig_staging,
+    "sweep": figures.fig_sweep,
 }
 
 

@@ -27,7 +27,6 @@ from __future__ import annotations
 import abc
 import queue
 import threading
-import time
 from typing import Any, Iterable, Optional
 
 from ..core import Evaluator, Repository
@@ -223,7 +222,7 @@ class ClusterBackend(Backend):
         if src is not None and src != "client":
             link = c.network.link(src, "client")
             size = c._deep_size(handle)
-            time.sleep(link.latency_s + link.serialized_s(size))
+            c.clock.sleep(link.latency_s + link.serialized_s(size))
             moved = c.nodes[src].repo.export(handle, into)
             if moved:
                 c._account_transfer(1, moved)

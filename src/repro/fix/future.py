@@ -23,6 +23,13 @@ class Future:
     ``result()`` returns the result *Handle* (use ``Backend.fetch`` to decode
     it into a Python value).  ``out_type`` carries the static result type the
     frontend inferred at submit time, if any — ``fetch`` uses it to decode.
+
+    ``_clock`` (set by the cluster at submit time, duck-typed — this module
+    must stay import-light) makes deadlines clock-aware: under a virtual
+    clock a ``timeout`` is *simulated* seconds, waited via the clock's
+    deterministic event loop, so a virtual-clock program can neither
+    wall-block on a timeout that never elapses in simulated time nor burn
+    real seconds waiting for one that does.
     """
 
     def __init__(self):
@@ -32,6 +39,7 @@ class Future:
         self._exc: Optional[BaseException] = None
         self._callbacks: list[Callable[["Future"], Any]] = []
         self.out_type = None  # static result type, set by the frontend
+        self._clock = None    # set by clock-owning backends (cluster)
 
     # ------------------------------------------------------------- setters
     def set(self, result) -> None:
@@ -60,15 +68,30 @@ class Future:
                 pass
 
     # ------------------------------------------------------------- getters
+    def _wait(self, timeout: Optional[float]) -> bool:
+        clk = self._clock
+        if clk is None or not getattr(clk, "is_virtual", False) or self._ev.is_set():
+            return self._ev.wait(timeout)
+        # Virtual clock: park on a clock event whose timeout elapses in
+        # *simulated* seconds — time advances straight to the deadline when
+        # the cluster is quiescent, and never before something earlier
+        # could happen.
+        waker = clk.make_event()
+        cb = lambda _f: waker.set()  # noqa: E731 — identity matters for removal
+        self.add_done_callback(cb)
+        waker.wait(timeout)
+        self._discard_callback(cb)  # a timed-out poll must not leak its waker
+        return self._ev.is_set()
+
     def result(self, timeout: Optional[float] = 120.0):
-        if not self._ev.wait(timeout):
+        if not self._wait(timeout):
             raise TimeoutError("fix job timed out")
         if self._exc is not None:
             raise self._exc
         return self._result
 
     def exception(self, timeout: Optional[float] = 120.0) -> Optional[BaseException]:
-        if not self._ev.wait(timeout):
+        if not self._wait(timeout):
             raise TimeoutError("fix job timed out")
         return self._exc
 
@@ -84,27 +107,68 @@ class Future:
                 return
         self._run_callbacks([fn])
 
+    def _discard_callback(self, fn: Callable[["Future"], Any]) -> None:
+        """Unregister a pending callback (timed-out waits must not leak)."""
+        with self._lock:
+            if fn in self._callbacks:
+                self._callbacks.remove(fn)
+
 
 def as_completed(futures: Iterable[Future],
                  timeout: Optional[float] = None) -> Iterator[Future]:
     """Yield futures as they finish, whichever order that happens in.
 
     ``timeout`` bounds the *total* wait; expiry raises :class:`TimeoutError`
-    with the futures still pending left unconsumed.
+    with the futures still pending left unconsumed.  When the futures carry
+    a virtual clock, the bound is *simulated* seconds (see
+    :meth:`Future._wait`).
     """
     futs = list(futures)
+    clk = next((f._clock for f in futs
+                if getattr(f._clock, "is_virtual", False)), None)
+    if clk is not None:
+        yield from _as_completed_virtual(clk, futs, timeout)
+        return
     done_q: "queue.Queue[Future]" = queue.Queue()
     for f in futs:
         f.add_done_callback(done_q.put)
     deadline = None if timeout is None else time.monotonic() + timeout
-    for _ in range(len(futs)):
-        if deadline is None:
-            yield done_q.get()
-        else:
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
+    try:
+        for _ in range(len(futs)):
+            if deadline is None:
+                yield done_q.get()
+            else:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError("as_completed timed out")
+                try:
+                    yield done_q.get(timeout=remaining)
+                except queue.Empty:
+                    raise TimeoutError("as_completed timed out") from None
+    finally:
+        for f in futs:  # a timed-out/abandoned iteration must not leak
+            f._discard_callback(done_q.put)
+
+
+def _as_completed_virtual(clk, futs: list, timeout: Optional[float]) -> Iterator[Future]:
+    """Completion-order iteration in simulated time: completions and the
+    (virtual) deadline land in one clock queue, so the expiry can only win
+    when nothing else can happen first."""
+    done_q = clk.make_queue()
+    expired = object()
+    for f in futs:
+        f.add_done_callback(done_q.put)
+    timer = None
+    if timeout is not None:
+        timer = clk.call_at(clk.now() + timeout, lambda: done_q.put(expired))
+    try:
+        for _ in range(len(futs)):
+            got = done_q.get()
+            if got is expired:
                 raise TimeoutError("as_completed timed out")
-            try:
-                yield done_q.get(timeout=remaining)
-            except queue.Empty:
-                raise TimeoutError("as_completed timed out") from None
+            yield got
+    finally:
+        if timer is not None:
+            timer.cancel()
+        for f in futs:
+            f._discard_callback(done_q.put)

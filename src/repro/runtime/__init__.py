@@ -1,7 +1,9 @@
 """Fixpoint runtime: multi-node execution engine for Fix programs."""
+from .clock import Clock, Timer, VirtualClock, WallClock
 from .cluster import Cluster, Future, Link, Network
 from .node import Node, WorkItem
 from .transfers import LocationIndex, TransferManager, TransferPlan
 
-__all__ = ["Cluster", "Future", "Link", "Network", "Node", "WorkItem",
+__all__ = ["Clock", "Cluster", "Future", "Link", "Network", "Node",
+           "Timer", "VirtualClock", "WallClock", "WorkItem",
            "LocationIndex", "TransferManager", "TransferPlan"]

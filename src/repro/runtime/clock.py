@@ -1,0 +1,594 @@
+"""Pluggable time for the cluster simulation: wall clock or virtual clock.
+
+Every time source in the runtime — link latency and serialization sleeps,
+delivery timers, speculation wakeups, job timestamps, worker accounting,
+Future deadlines — goes through a :class:`Clock`, so the same scheduler
+code runs in two regimes:
+
+* :class:`WallClock` — today's behaviour: ``sleep`` is ``time.sleep``,
+  ``now`` is ``time.monotonic``, timers run on one daemon thread.  Zero
+  semantic change from the pre-clock runtime.
+
+* :class:`VirtualClock` — simulated time is *free* and runs are
+  *bit-identical*.  The clock owns a run token: exactly one participating
+  thread executes at a time, and every blocking point in the runtime
+  (queue get, NIC lock, event wait, sleep) is a clock primitive that hands
+  the token to the next ready thread in deterministic FIFO order.  When no
+  thread is runnable — all participants are quiescent, blocked on clock
+  primitives — the clock pops the earliest ``(time, seq)`` entry from its
+  event heap and advances ``now`` to it.  Multi-second simulated
+  topologies therefore execute in milliseconds of wall time, and because
+  execution is fully serialized with deterministic handoff order, two runs
+  of the same program produce identical schedules, transfer counts and
+  makespans.
+
+The cost of determinism is cooperative scheduling: a virtual-clock cluster
+must be driven from the thread that created it (``Cluster.__init__``
+registers its caller as the driver).  Threads the runtime spawns register
+through :meth:`Clock.spawn`; foreign threads that touch a clock primitive
+are adopted for the duration of the wait and hand the token back
+afterwards — best-effort liveness (their wakeups ride the same event
+heap, which advances while the registered set keeps yielding or is idle;
+a driver that busy-spins outside clock primitives starves them) and no
+determinism guarantees outside the registered set.
+"""
+from __future__ import annotations
+
+import abc
+import heapq
+import itertools
+import queue
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Callable, Optional
+
+
+class Timer:
+    """Cancellation handle returned by :meth:`Clock.call_at`."""
+
+    __slots__ = ("fn", "cancelled")
+
+    def __init__(self, fn: Callable[[], None]):
+        self.fn = fn
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class Clock(abc.ABC):
+    """The runtime's one source of time, sleep, timers and blocking."""
+
+    is_virtual = False
+
+    # ------------------------------------------------------------- time
+    @abc.abstractmethod
+    def now(self) -> float:
+        """Monotonic seconds (simulated under a virtual clock)."""
+
+    @abc.abstractmethod
+    def ns(self) -> int:
+        """Monotonic nanoseconds, for worker busy/starved accounting."""
+
+    @abc.abstractmethod
+    def sleep(self, dt: float) -> None:
+        """Block the calling thread for ``dt`` clock-seconds."""
+
+    @abc.abstractmethod
+    def call_at(self, when: float, fn: Callable[[], None]) -> Timer:
+        """Run ``fn`` when the clock reaches ``when`` (absolute)."""
+
+    # ------------------------------------------------- blocking primitives
+    @abc.abstractmethod
+    def make_queue(self):
+        """A FIFO queue whose blocking ``get`` the clock understands."""
+
+    @abc.abstractmethod
+    def make_lock(self):
+        """A mutex (context manager) the clock understands — used for NIC
+        locks held across :meth:`sleep`."""
+
+    @abc.abstractmethod
+    def make_event(self):
+        """A one-shot event (``set``/``wait``/``is_set``) the clock
+        understands — used for clock-aware Future deadlines."""
+
+    # ------------------------------------------------------------ threads
+    @abc.abstractmethod
+    def spawn(self, target: Callable[[], None],
+              name: Optional[str] = None) -> threading.Thread:
+        """Start a daemon thread participating in this clock."""
+
+    def register_current(self) -> None:
+        """Make the calling thread a clock participant (the driver)."""
+
+    def unregister_current(self) -> None:
+        pass
+
+    @contextmanager
+    def external_wait(self):
+        """Mark a region where the calling participant blocks on something
+        the clock cannot see (e.g. ``Thread.join``), so the rest of the
+        runtime keeps running meanwhile."""
+        yield
+
+    def close(self) -> None:
+        pass
+
+
+# =========================================================== wall clock
+class _WallTimer:
+    """Single daemon thread firing callbacks at wall deadlines (moved here
+    from ``transfers._DeliveryTimer`` — now it also serves speculation
+    wakeups, so wall runs no longer poll-and-oversleep)."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._cv = threading.Condition()
+        self._seq = itertools.count()
+        self._stopped = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="fix-clock-timer")
+        self._thread.start()
+
+    def schedule(self, when: float, timer: Timer) -> None:
+        with self._cv:
+            heapq.heappush(self._heap, (when, next(self._seq), timer))
+            self._cv.notify()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify()
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                if self._stopped:
+                    return
+                if not self._heap:
+                    self._cv.wait()
+                    continue
+                when, _, timer = self._heap[0]
+                now = time.monotonic()
+                if when > now:
+                    self._cv.wait(when - now)
+                    continue
+                heapq.heappop(self._heap)
+            if timer.cancelled:
+                continue
+            try:
+                timer.fn()
+            except Exception:  # noqa: BLE001 — a callback must not kill the clock
+                pass
+
+
+class WallClock(Clock):
+    """Real time: the pre-clock runtime's exact behaviour."""
+
+    is_virtual = False
+
+    def __init__(self):
+        self._timer: Optional[_WallTimer] = None
+        self._timer_lock = threading.Lock()
+        self._closed = False
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def ns(self) -> int:
+        return time.perf_counter_ns()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+    def call_at(self, when: float, fn: Callable[[], None]) -> Timer:
+        t = Timer(fn)
+        with self._timer_lock:
+            if self._closed:
+                return t  # post-shutdown: pending deliveries are dropped,
+                #           exactly like the seed's stopped delivery timer
+            if self._timer is None:  # lazy: clusters that never schedule
+                self._timer = _WallTimer()  # timers get no extra thread
+            self._timer.schedule(when, t)
+        return t
+
+    def make_queue(self):
+        return queue.Queue()
+
+    def make_lock(self):
+        return threading.Lock()
+
+    def make_event(self):
+        return threading.Event()
+
+    def spawn(self, target, name=None) -> threading.Thread:
+        t = threading.Thread(target=target, daemon=True, name=name)
+        t.start()
+        return t
+
+    def close(self) -> None:
+        with self._timer_lock:
+            self._closed = True
+            if self._timer is not None:
+                self._timer.stop()
+                self._timer = None
+
+
+# ======================================================== virtual clock
+class _TState:
+    """Per-participant scheduling state (guarded by the clock's lock)."""
+
+    __slots__ = ("cv", "running", "ready", "adopted", "dead", "name")
+
+    def __init__(self, cv: threading.Condition, adopted: bool, name: str):
+        self.cv = cv
+        self.running = False   # holds the run token
+        self.ready = False     # queued for the token
+        self.adopted = adopted  # foreign thread: hand the token back after waits
+        self.dead = False      # unregistered; never grant it the token
+        self.name = name
+
+
+class VirtualClock(Clock):
+    """Deterministic simulated time over cooperative real threads.
+
+    Invariants (all transitions under ``self._lock``):
+
+    * at most one participant has ``running=True`` — it is the only
+      participant executing; everyone else is parked on its own condition
+      variable or queued in ``self._ready``;
+    * ``self._heap`` holds pending wakeups: ``('sleep', state)`` entries
+      re-ready a sleeping participant, ``('timer', Timer)`` entries are
+      executed in order on the internal timer participant;
+    * time advances **only** in :meth:`_dispatch`, and only when the ready
+      queue is empty — i.e. every participant is quiescent, so nothing
+      that could still happen "now" is outrun by the clock.  One event is
+      popped per advance, which serializes same-timestamp events in
+      deterministic ``seq`` order.
+    """
+
+    is_virtual = True
+
+    def __init__(self, start: float = 0.0):
+        self._lock = threading.Lock()
+        self._now = float(start)
+        self._seq = itertools.count()
+        self._heap: list = []          # (when, seq, kind, payload)
+        self._threads: dict[int, _TState] = {}
+        self._ready: deque[_TState] = deque()
+        self._running: Optional[_TState] = None
+        self._closed = False
+        self._timer_pending: deque[Timer] = deque()
+        self._timer_state: Optional[_TState] = None
+        started = threading.Event()
+        t = threading.Thread(target=self._timer_loop, args=(started,),
+                             daemon=True, name="fix-vclock-timer")
+        t.start()
+        started.wait()
+
+    # ------------------------------------------------------------- time
+    def now(self) -> float:
+        return self._now
+
+    def ns(self) -> int:
+        return int(round(self._now * 1e9))
+
+    def sleep(self, dt: float) -> None:
+        with self._lock:
+            st = self._adopt_locked()
+            heapq.heappush(self._heap,
+                           (self._now + max(dt, 0.0), next(self._seq),
+                            "sleep", st))
+            self._block_current(st)
+            self._release_if_adopted(st)
+
+    def call_at(self, when: float, fn: Callable[[], None]) -> Timer:
+        with self._lock:
+            return self._call_at_locked(when, fn)
+
+    def _call_at_locked(self, when: float, fn: Callable[[], None]) -> Timer:
+        t = Timer(fn)
+        heapq.heappush(self._heap, (when, next(self._seq), "timer", t))
+        if self._running is None:
+            self._dispatch()  # idle runtime: someone must advance
+        return t
+
+    # ------------------------------------------------- blocking primitives
+    def make_queue(self):
+        return _VQueue(self)
+
+    def make_lock(self):
+        return _VLock(self)
+
+    def make_event(self):
+        return _VEvent(self)
+
+    # ------------------------------------------------------------ threads
+    def spawn(self, target, name=None) -> threading.Thread:
+        started = threading.Event()
+
+        def body():
+            st = self._register_enqueue(adopted=False, name=name or "spawned")
+            started.set()
+            self._await_token(st)
+            try:
+                target()
+            finally:
+                self.unregister_current()
+
+        t = threading.Thread(target=body, daemon=True, name=name)
+        t.start()
+        started.wait()  # registration order == spawn order (determinism)
+        return t
+
+    def register_current(self) -> None:
+        st = self._register_enqueue(adopted=False,
+                                    name=threading.current_thread().name)
+        self._await_token(st)
+
+    def unregister_current(self) -> None:
+        with self._lock:
+            st = self._threads.pop(threading.get_ident(), None)
+            if st is None:
+                return
+            st.dead = True
+            was_running = st.running
+            st.running = False
+            if self._running is st:
+                self._running = None
+                if was_running:
+                    self._dispatch()
+
+    @contextmanager
+    def external_wait(self):
+        st = self._threads.get(threading.get_ident())
+        if st is None or not st.running:
+            yield
+            return
+        with self._lock:
+            st.running = False
+            if self._running is st:
+                self._running = None
+                self._dispatch()
+        try:
+            yield
+        finally:
+            with self._lock:
+                self._make_ready(st)
+                while not st.running:
+                    st.cv.wait()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            if self._timer_state is not None:
+                self._make_ready(self._timer_state)
+
+    # -------------------------------------------------------- internals
+    def _register_enqueue(self, adopted: bool, name: str) -> _TState:
+        with self._lock:
+            ident = threading.get_ident()
+            st = self._threads.get(ident)
+            if st is None:
+                st = _TState(threading.Condition(self._lock), adopted, name)
+                self._threads[ident] = st
+            elif not adopted:
+                st.adopted = False  # promotion to full participant sticks
+            if not st.running and not st.ready:
+                if self._running is None and not self._ready:
+                    st.running = True
+                    self._running = st
+                else:
+                    st.ready = True
+                    self._ready.append(st)
+            return st
+
+    def _await_token(self, st: _TState) -> None:
+        with self._lock:
+            while not st.running:
+                st.cv.wait()
+
+    def _adopt_locked(self) -> _TState:
+        """State for the calling thread, creating a token-less *adopted*
+        entry for foreign threads (lock held)."""
+        st = self._threads.get(threading.get_ident())
+        if st is None:
+            st = _TState(threading.Condition(self._lock), True,
+                         threading.current_thread().name)
+            self._threads[threading.get_ident()] = st
+        return st
+
+    def _release_if_adopted(self, st: _TState) -> None:
+        """Adopted threads give the token back after their wait so the
+        registered runtime keeps running (lock held)."""
+        if st.adopted and st.running:
+            st.running = False
+            if self._running is st:
+                self._running = None
+                self._dispatch()
+
+    def _make_ready(self, st: _TState) -> None:
+        if st.ready or st.running or st.dead:
+            return
+        st.ready = True
+        self._ready.append(st)
+        if self._running is None:
+            self._dispatch()
+
+    def _block_current(self, st: _TState) -> None:
+        """Give up the token, hand off / advance time, park until granted
+        again (lock held)."""
+        st.running = False
+        if self._running is st:
+            self._running = None
+            self._dispatch()
+        elif self._running is None:
+            # Idle runtime and a token-less (adopted) thread just queued a
+            # wakeup for itself: dispatch here, *after* running is cleared,
+            # so a self-grant is observed by the loop below instead of
+            # being overwritten (granting before parking deadlocks).
+            self._dispatch()
+        while not st.running:
+            st.cv.wait()
+
+    def _dispatch(self) -> None:
+        """Grant the token to the next ready participant; when nobody is
+        ready, advance virtual time one event at a time (lock held)."""
+        while self._running is None:
+            if self._ready:
+                nxt = self._ready.popleft()
+                nxt.ready = False
+                if nxt.dead:
+                    continue
+                nxt.running = True
+                self._running = nxt
+                nxt.cv.notify()
+                return
+            if self._closed or not self._heap:
+                return  # fully idle: an external put/set will re-dispatch
+            when, _, kind, payload = heapq.heappop(self._heap)
+            if kind == "timer" and payload.cancelled:
+                continue
+            if when > self._now:
+                self._now = when
+            if kind == "sleep":
+                self._make_ready(payload)
+            else:
+                self._timer_pending.append(payload)
+                if self._timer_state is not None:
+                    self._make_ready(self._timer_state)
+
+    def _timer_loop(self, started: threading.Event) -> None:
+        st = self._register_enqueue(adopted=False, name="fix-vclock-timer")
+        self._timer_state = st
+        started.set()
+        self._await_token(st)
+        while True:
+            with self._lock:
+                while not self._timer_pending:
+                    if self._closed:
+                        self._threads.pop(threading.get_ident(), None)
+                        st.running = False
+                        if self._running is st:
+                            self._running = None
+                            self._dispatch()
+                        return
+                    self._block_current(st)
+                timer = self._timer_pending.popleft()
+            if timer.cancelled:
+                continue
+            try:
+                timer.fn()
+            except Exception:  # noqa: BLE001 — a callback must not kill the clock
+                pass
+
+
+class _VQueue:
+    """FIFO queue whose blocking ``get`` participates in the clock."""
+
+    def __init__(self, clock: VirtualClock):
+        self._c = clock
+        self._items: deque = deque()
+        self._waiters: deque[_TState] = deque()
+
+    def put(self, item) -> None:
+        c = self._c
+        with c._lock:
+            self._items.append(item)
+            if self._waiters:
+                c._make_ready(self._waiters.popleft())
+
+    def get(self):
+        c = self._c
+        with c._lock:
+            st = c._adopt_locked()
+            while not self._items:
+                self._waiters.append(st)
+                c._block_current(st)
+            item = self._items.popleft()
+            c._release_if_adopted(st)
+            return item
+
+    def qsize(self) -> int:
+        return len(self._items)
+
+    def empty(self) -> bool:
+        return not self._items
+
+
+class _VLock:
+    """Mutex safe to hold across ``clock.sleep`` (NIC serialization)."""
+
+    def __init__(self, clock: VirtualClock):
+        self._c = clock
+        self._held = False
+        self._waiters: deque[_TState] = deque()
+
+    def acquire(self) -> None:
+        c = self._c
+        with c._lock:
+            st = c._adopt_locked()
+            while self._held:
+                self._waiters.append(st)
+                c._block_current(st)
+            self._held = True
+
+    def release(self) -> None:
+        c = self._c
+        with c._lock:
+            self._held = False
+            if self._waiters:
+                c._make_ready(self._waiters.popleft())
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class _VEvent:
+    """One-shot event; ``wait`` blocks — and times out — in clock time,
+    mirroring ``threading.Event.wait`` with simulated seconds."""
+
+    def __init__(self, clock: VirtualClock):
+        self._c = clock
+        self._flag = False
+        self._waiters: deque[_TState] = deque()
+
+    def set(self) -> None:
+        c = self._c
+        with c._lock:
+            self._flag = True
+            while self._waiters:
+                c._make_ready(self._waiters.popleft())
+
+    def is_set(self) -> bool:
+        return self._flag
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        c = self._c
+        with c._lock:
+            st = c._adopt_locked()
+            timer = None
+            expired = []
+            if timeout is not None and not self._flag:
+                def _expire():
+                    with c._lock:
+                        if not self._flag and st in self._waiters:
+                            expired.append(True)
+                            self._waiters.remove(st)
+                            c._make_ready(st)
+                timer = c._call_at_locked(c._now + timeout, _expire)
+            while not self._flag and not expired:
+                self._waiters.append(st)
+                c._block_current(st)
+            if timer is not None:
+                timer.cancel()
+            c._release_if_adopted(st)
+            return not expired

@@ -21,10 +21,21 @@ transfer threads only post events):
   needs start staging toward the tentatively placed node, overlapping
   child compute with data movement (the paper's fig-8 starvation-reduction
   mechanism).
-* **Dataflow-aware placement** — each job runs on the node minimizing bytes
-  moved, computed from the self-describing thunk via the scheduler's
-  location index (content key → nodes) — O(needs), no repository scans.
-  The ``placement="random"`` ablation reproduces "Fixpoint (no locality)".
+* **Dataflow-aware placement** — each job runs on the node minimizing the
+  *seconds* until its minimum repository is resident (per-link latency +
+  serialized time + transfer-queue backlog from the ``TransferManager``),
+  computed from the self-describing thunk via the scheduler's location
+  index (content key → nodes) — O(needs), no repository scans.  A far node
+  behind an idle fat pipe beats a near node behind a congested one.  The
+  ``placement="bytes"`` ablation keeps PR 1's bytes-missing score for A/B
+  runs; ``placement="random"`` reproduces "Fixpoint (no locality)".
+* **Pluggable time** — every sleep, timer, timestamp and deadline goes
+  through a :class:`~repro.runtime.clock.Clock`.  The default
+  ``WallClock`` behaves exactly like the pre-clock runtime; passing
+  ``clock=VirtualClock()`` runs the whole simulation in deterministic
+  virtual time, where multi-second topologies execute in milliseconds and
+  two identical runs produce identical schedules and accounting.  A
+  virtual-clock cluster must be driven from the thread that created it.
 * **Tail calls** — a codelet returning a Thunk yields a *new* job that is
   re-placed from scratch: 500-deep chains need one client submission.
 * **Determinism dividends** — results are memoized first-write-wins, so
@@ -34,10 +45,7 @@ transfer threads only post events):
 from __future__ import annotations
 
 import itertools
-import queue
 import random
-import threading
-import time
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -46,8 +54,9 @@ from ..core.handle import APPLICATION, BLOB, IDENTIFICATION, SELECTION, STRICT, 
 from ..core.repository import walk_object_closure
 from ..fix.backend import ClusterBackend
 from ..fix.future import Future
+from .clock import Clock, WallClock
 from .node import Node, WorkItem
-from .transfers import LocationIndex, TransferManager
+from .transfers import LocationIndex, TransferManager, single_transfer
 
 
 # ----------------------------------------------------------------- network
@@ -93,6 +102,7 @@ class Job:
     result: Optional[Handle] = None
     started_at: float = 0.0
     duplicated: bool = False
+    spec_timer: Optional[object] = None                  # pending speculation wakeup
     on_complete: list = field(default_factory=list)      # callbacks (scheduler thread)
 
 
@@ -104,7 +114,8 @@ class Cluster:
         n_nodes: int = 4,
         workers_per_node: int = 2,
         network: Optional[Network] = None,
-        placement: str = "locality",      # "locality" | "random"
+        placement: str = "locality",      # "locality" (seconds-to-stage)
+        #                                  | "bytes" (PR-1 score) | "random"
         io_mode: str = "external",        # "external" | "internal"
         oversubscribe: int = 1,            # internal-mode CPU oversubscription
         storage_nodes: tuple = (),         # ids of 0-worker data-only nodes
@@ -113,23 +124,32 @@ class Cluster:
         node_ram: int = 64 << 30,
         transfer_mode: str = "batched",    # "batched" | "per_handle" (seed A/B)
         prefetch: bool = True,             # stage known needs during WAIT_CHILDREN
+        clock: Optional[Clock] = None,     # WallClock (default) | VirtualClock
     ):
+        if placement not in ("locality", "bytes", "random"):
+            raise ValueError(f"unknown placement {placement!r}")
         self.network = network or Network()
         self.placement = placement
         self.io_mode = io_mode
         self.prefetch = prefetch
         self.rng = random.Random(seed)
+        self._own_clock = clock is None  # we close only what we created
+        self.clock = clock if clock is not None else WallClock()
+        # Under a virtual clock the creating thread becomes the registered
+        # driver: its blocking waits (Future deadlines, fetches) participate
+        # in the deterministic token handoff.  No-op for WallClock.
+        self.clock.register_current()
         workers = workers_per_node * (oversubscribe if io_mode == "internal" else 1)
         self.nodes: dict[str, Node] = {}
         for i in range(n_nodes):
-            self.nodes[f"n{i}"] = Node(f"n{i}", workers, node_ram)
+            self.nodes[f"n{i}"] = Node(f"n{i}", workers, node_ram, clock=self.clock)
         for sid in storage_nodes:
-            self.nodes[sid] = Node(sid, 0, node_ram)
-        self.client = Node("client", 0, node_ram)
+            self.nodes[sid] = Node(sid, 0, node_ram, clock=self.clock)
+        self.client = Node("client", 0, node_ram, clock=self.clock)
         self.nodes["client"] = self.client
         self.speculate_after_s = speculate_after_s
 
-        self._events: "queue.Queue[tuple]" = queue.Queue()
+        self._events = self.clock.make_queue()
         self._jobs: dict[int, Job] = {}
         self._by_encode: dict[bytes, int] = {}
         self._memo: dict[bytes, Handle] = {}            # encode raw -> result
@@ -137,7 +157,6 @@ class Cluster:
         self._inflight: dict[tuple, list] = {}           # (node, raw) -> waiter ids
         self._reach: dict[bytes, tuple] = {}             # handle raw -> object closure
         self._ids = itertools.count()
-        self._stop = False
         self.transfers = 0
         self.bytes_moved = 0
 
@@ -150,21 +169,21 @@ class Cluster:
                 lambda h, _name=name: self._locs.add(h.content_key(), _name))
         self._xfer = TransferManager(
             self.network, self.nodes, self._events.put,
-            account=self._account_transfer, mode=transfer_mode)
+            account=self._account_transfer, mode=transfer_mode,
+            clock=self.clock)
 
         # The user-facing surface: Cluster.submit/evaluate/fetch_result are
         # thin delegates to this Backend (repro.fix), which owns program
         # compilation, fetch accounting and decode.
         self.backend = ClusterBackend(self)
 
-        self._sched = threading.Thread(target=self._loop, daemon=True, name="fix-sched")
-        self._sched.start()
+        self._sched = self.clock.spawn(self._loop, name="fix-sched")
         for n in self.nodes.values():
             n.start(self._on_worker_done, fetcher=self._blocking_fetch)
-        self._ticker = None
-        if speculate_after_s is not None:
-            self._ticker = threading.Thread(target=self._tick_loop, daemon=True)
-            self._ticker.start()
+        # Straggler speculation is event-driven: each run schedules one
+        # clock wakeup at its speculation deadline (see _enqueue_run) — no
+        # polling thread to spin under a virtual clock or oversleep under
+        # the wall clock.
 
     # --------------------------------------------------------------- public
     @property
@@ -190,6 +209,7 @@ class Cluster:
     def _submit_encode(self, encode: Handle) -> Future:
         """Raw submission path the Backend compiles down to."""
         fut = Future()
+        fut._clock = self.clock  # clock-aware deadlines (virtual timeouts)
         self._events.put(("submit", encode, fut, None, False))
         return fut
 
@@ -225,11 +245,14 @@ class Cluster:
         }
 
     def shutdown(self) -> None:
-        self._stop = True
         self._events.put(("stop",))
         self._xfer.stop()
         for n in self.nodes.values():
             n.stop()
+        if self._own_clock:
+            # A caller-provided clock (e.g. two clusters sharing one
+            # simulated timeline) outlives us; its creator closes it.
+            self.clock.close()
 
     # ------------------------------------------------------ scheduler loop
     def _loop(self) -> None:
@@ -250,7 +273,7 @@ class Cluster:
                 elif kind == "node_failed":
                     self._on_node_failed(ev[1])
                 elif kind == "tick":
-                    self._on_tick()
+                    self._on_tick(ev[1])
             except Exception as e:  # noqa: BLE001 — fail the affected job only
                 self._scope_failure(kind, ev, e)
 
@@ -276,8 +299,10 @@ class Cluster:
                 jids.update(self._inflight.pop((node_id, raw), []))
         elif kind == "ran":
             jids.add(ev[2].job_id)
+        elif kind == "tick":
+            jids.add(ev[1])  # job-targeted speculation wakeup
         else:
-            # node_failed / tick touch many jobs; no single owner to blame.
+            # node_failed touches many jobs; no single owner to blame.
             self._fail_all(exc)
             return
         for jid in jids:
@@ -287,6 +312,7 @@ class Cluster:
         if job is None or job.phase == DONE:
             return
         job.phase = DONE
+        self._cancel_speculation(job)
         for f in job.futures:
             f.set_exception(exc)
         self._notify_parents_exc(job, exc)
@@ -297,6 +323,7 @@ class Cluster:
                 for f in job.futures:
                     f.set_exception(exc)
                 job.phase = DONE
+                self._cancel_speculation(job)
 
     # ------------------------------------------------------------- events
     def _on_submit(self, encode: Handle, fut: Optional[Future],
@@ -446,8 +473,27 @@ class Cluster:
         fetches = [(h, 0.0) for h in (internal or [])]
         item = WorkItem(job.id, job.epoch, job.thunk, internal_fetches=fetches)
         job.phase = RUNNING
-        job.started_at = time.monotonic()
+        job.started_at = self.clock.now()
+        self._arm_speculation(job)
         node.queue.put(item)
+
+    def _arm_speculation(self, job: Job) -> None:
+        """One clock wakeup at this run's straggler deadline (replaces the
+        seed's sleep(speculate/4) polling thread): the tick fires exactly
+        when the job *could* first be overdue, and not before.  The timer
+        is cancelled when the job finishes so long-lived clusters don't
+        accumulate spurious global ticks."""
+        if self.speculate_after_s is None or job.duplicated:
+            return
+        self._cancel_speculation(job)
+        job.spec_timer = self.clock.call_at(
+            job.started_at + self.speculate_after_s,
+            lambda jid=job.id: self._events.put(("tick", jid)))
+
+    def _cancel_speculation(self, job: Job) -> None:
+        if job.spec_timer is not None:
+            job.spec_timer.cancel()
+            job.spec_timer = None
 
     # ---------------------------------------------------------- strictify
     def _begin_strictify(self, job: Job) -> None:
@@ -517,13 +563,15 @@ class Cluster:
             return
         item = WorkItem(job.id, job.epoch, None, strict_target=job.whnf)
         job.phase = RUNNING
-        job.started_at = time.monotonic()
+        job.started_at = self.clock.now()
+        self._arm_speculation(job)  # strictify ops can straggle too
         node.queue.put(item)
 
     # ----------------------------------------------------------- finalize
     def _finalize(self, job: Job, result: Handle) -> None:
         job.result = result
         job.phase = DONE
+        self._cancel_speculation(job)
         self._memo.setdefault(job.encode.raw, result)
         if job.node:
             repo = self.nodes[job.node].repo
@@ -617,26 +665,84 @@ class Cluster:
             raise RuntimeError("no live worker nodes")
         if self.placement == "random":
             return self.rng.choice(candidates)
-        # Cost of running on node n = bytes of `needs` n does not hold.
-        # The location index inverts the seed's O(nodes × needs) repo scans:
-        # walk each handle's (few) replica sites and credit those nodes.
-        total = 0
-        credit: dict[str, int] = {}
+        # One pass over `needs`: size + live replica sites per handle, via
+        # the location index — O(needs) walks of each handle's (few)
+        # replica sites, no repository scans.
+        infos: list[tuple[int, list[str]]] = []
         seen: set[bytes] = set()
         for h in needs:
             if h.is_literal or h.raw in seen:
                 continue
             seen.add(h.raw)
             size = h.size if h.content_type == BLOB else 32 * h.size
+            sites = [name for name in self._locs.nodes_for(h.content_key())
+                     if (n := self.nodes.get(name)) is not None
+                     and n.alive and n.repo.contains(h)]
+            infos.append((size, sites))
+        if self.placement == "bytes":
+            return self._place_bytes_missing(candidates, infos)
+        return self._place_seconds_to_stage(candidates, infos)
+
+    def _place_bytes_missing(self, candidates: list[Node],
+                             infos: list) -> Node:
+        """PR 1's cost model, kept as the ``placement="bytes"`` ablation:
+        run where the fewest bytes of `needs` are missing."""
+        total = 0
+        credit: dict[str, int] = {}
+        for size, sites in infos:
             total += size
-            for name in self._locs.nodes_for(h.content_key()):
-                n = self.nodes.get(name)
-                if n is not None and n.alive and n.n_workers > 0 and n.repo.contains(h):
+            for name in sites:
+                if self.nodes[name].n_workers > 0:
                     credit[name] = credit.get(name, 0) + size
         best, best_cost = None, None
         for n in candidates:
             cost = total - credit.get(n.id, 0)
             cost += n.queue.qsize() * 16  # mild load-balancing tiebreak
+            if best_cost is None or cost < best_cost:
+                best, best_cost = n, cost
+        return best
+
+    def _place_seconds_to_stage(self, candidates: list[Node],
+                                infos: list) -> Node:
+        """Score each candidate by estimated *seconds* until the job's
+        minimum repository is resident there, not bytes missing:
+
+        * per missing handle, pick the cheapest live replica source —
+          NIC backlog already queued at that source (TransferManager
+          bytes-awaiting-serialization) + link latency + serialized time;
+        * transfers from distinct sources ride distinct link workers in
+          parallel, so the node's staging cost is the max over sources,
+          with per-link queued plans charging their pipelined latency;
+        * a µs-scale run-queue term breaks exact ties toward idle nodes.
+
+        Bytes-missing cannot distinguish a near congested node from a far
+        one behind an idle fat pipe; this model can.
+        """
+        src_backlog, link_depth = self._xfer.backlog_snapshot()
+        best, best_cost = None, None
+        for n in candidates:
+            per_src: dict[str, int] = {}
+            for size, sites in infos:
+                if n.id in sites:
+                    continue  # already resident: free
+                src, src_cost = None, None
+                for s in sites:
+                    link = self.network.link(s, n.id)
+                    c = (link.serialized_s(src_backlog.get(s, 0) + size)
+                         + link.latency_s)
+                    if src_cost is None or c < src_cost:
+                        src, src_cost = s, c
+                if src is None:
+                    continue  # no live replica: recomputed, not staged
+                per_src[src] = per_src.get(src, 0) + size
+            cost = 0.0
+            for s, nbytes in per_src.items():
+                link = self.network.link(s, n.id)
+                t = (link.serialized_s(src_backlog.get(s, 0) + nbytes)
+                     + link.latency_s * (1 + link_depth.get((s, n.id), 0)))
+                if t > cost:
+                    cost = t
+            cost += n.queue.qsize() * 1e-6
             if best_cost is None or cost < best_cost:
                 best, best_cost = n, cost
         return best
@@ -687,7 +793,7 @@ class Cluster:
         toward the (tentative) placement so data motion overlaps compute.
         Externalized locality mode only — the ablations must keep their
         seed behaviour — and never toward a dead node."""
-        if not self.prefetch or self.io_mode != "external" or self.placement != "locality":
+        if not self.prefetch or self.io_mode != "external" or self.placement == "random":
             return
         cands = [h for h in needs if not h.is_literal]
         if not cands:
@@ -739,22 +845,19 @@ class Cluster:
 
     def _blocking_fetch(self, node: Node, h: Handle) -> None:
         """Internal-I/O mode: the worker performs the fetch while holding
-        its slot (this is the starvation conventional platforms suffer)."""
+        its slot (this is the starvation conventional platforms suffer).
+        The wire choreography is the shared per-handle helper — the same
+        one ``transfer_mode="per_handle"`` replays."""
         if node.repo.contains(h):
             return
         src = self._find_source_name(h, exclude=node.id)
         if src is None:
             raise MissingData(h)
         size = h.size if h.content_type == BLOB else 32 * h.size
-        link = self.network.link(src, node.id)
-        src_node = self.nodes[src]
-        payload = src_node.repo.raw_payload(h)
-        time.sleep(link.latency_s)
-        with src_node.nic_lock:
-            time.sleep(link.serialized_s(size))
-        self.transfers += 1
-        self.bytes_moved += size
-        node.repo.put_handle_data(h, payload)
+        payload = self.nodes[src].repo.raw_payload(h)
+        single_transfer(self.clock, self.network, self.nodes,
+                        src, node.id, h, payload, size)
+        self._account_transfer(1, size)
 
     def _account_transfer(self, n_transfers: int, n_bytes: int) -> None:
         self.transfers += n_transfers
@@ -781,37 +884,45 @@ class Cluster:
             self._inflight.pop(key, None)
 
     # ----------------------------------------------------------- straggler
-    def _tick_loop(self) -> None:
-        while not self._stop:
-            time.sleep(self.speculate_after_s / 4)
-            self._events.put(("tick",))
-
-    def _on_tick(self) -> None:
-        now = time.monotonic()
-        for job in self._jobs.values():
-            if (job.phase == RUNNING and not job.duplicated and job.thunk is not None
-                    and now - job.started_at > self.speculate_after_s):
-                others = [n for n in self.worker_nodes() if n.id != job.node]
-                if not others:
-                    continue
-                job.duplicated = True
-                dup = self.rng.choice(others)
-                needs, children, memo_pairs = self._step_needs(job.thunk)
-                if any(self._memo.get(c.raw) is None for c in children):
-                    continue
-                for enc in children:
-                    res = self._memo[enc.raw]
-                    memo_pairs.append((enc, res))
-                    needs.extend(self._deep_object_handles(res))
-                for enc, res in memo_pairs:
-                    dup.repo.memo_put(enc, res)
-                    dup.repo.memo_put(enc.unwrap_encode(), res)
-                missing = [h for h in needs if not dup.repo.contains(h)]
-                for h in missing:
-                    src = self._find_source_name(h, exclude=dup.id)
-                    if src is not None:
-                        self.nodes[src].repo.export(h, dup.repo)
-                dup.queue.put(WorkItem(job.id, job.epoch, job.thunk))
+    def _on_tick(self, jid: int) -> None:
+        """One job's speculation deadline fired: duplicate its run if it is
+        still (over)due.  Ticks are job-targeted — O(1) per deadline, not a
+        rescan of the ever-growing job table."""
+        job = self._jobs.get(jid)
+        if (job is None or job.phase != RUNNING or job.duplicated
+                or job.thunk is None):
+            return
+        now = self.clock.now()
+        # 1e-9 slack: the wakeup fires at exactly started_at + after on a
+        # virtual clock, where float round-trip must still count as due.
+        if now - job.started_at < self.speculate_after_s - 1e-9:
+            return  # re-placed since armed; the newer run has its own timer
+        others = [n for n in self.worker_nodes() if n.id != job.node]
+        if not others:
+            # no duplicate target *yet*: poll again, like the seed's
+            # quarter-period ticker
+            job.spec_timer = self.clock.call_at(
+                now + self.speculate_after_s / 4,
+                lambda jid=jid: self._events.put(("tick", jid)))
+            return
+        job.duplicated = True
+        dup = self.rng.choice(others)
+        needs, children, memo_pairs = self._step_needs(job.thunk)
+        if any(self._memo.get(c.raw) is None for c in children):
+            return
+        for enc in children:
+            res = self._memo[enc.raw]
+            memo_pairs.append((enc, res))
+            needs.extend(self._deep_object_handles(res))
+        for enc, res in memo_pairs:
+            dup.repo.memo_put(enc, res)
+            dup.repo.memo_put(enc.unwrap_encode(), res)
+        missing = [h for h in needs if not dup.repo.contains(h)]
+        for h in missing:
+            src = self._find_source_name(h, exclude=dup.id)
+            if src is not None:
+                self.nodes[src].repo.export(h, dup.repo)
+        dup.queue.put(WorkItem(job.id, job.epoch, job.thunk))
 
     # ------------------------------------------------------------- lookups
     def _find_source_name(self, h: Handle, exclude: Optional[str] = None) -> Optional[str]:

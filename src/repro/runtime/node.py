@@ -7,16 +7,19 @@ back to the cluster scheduler, which may re-place them (paper §4.2.2).
 Accounting distinguishes *busy* (codelet running), *starved* (worker slot
 occupied while waiting on "internal" I/O — the ablation mode), and idle,
 mirroring the paper's /proc/stat (idle+iowait) measurements in fig 8b.
+Durations are measured on the cluster's clock: real nanoseconds under a
+``WallClock``, simulated nanoseconds under a ``VirtualClock`` (where codelet
+compute is instantaneous and only modeled I/O takes time — which is what
+makes utilization fractions reproducible bit-for-bit).
 """
 from __future__ import annotations
 
-import queue
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from ..core import Evaluator, Handle, Repository
+from .clock import Clock, WallClock
 
 
 @dataclass
@@ -32,14 +35,16 @@ class WorkItem:
 
 
 class Node:
-    def __init__(self, node_id: str, n_workers: int, ram_bytes: int = 64 << 30):
+    def __init__(self, node_id: str, n_workers: int, ram_bytes: int = 64 << 30,
+                 clock: Optional[Clock] = None):
         self.id = node_id
+        self.clock = clock if clock is not None else WallClock()
         self.repo = Repository(node_id)
         self.evaluator = Evaluator(self.repo)
         self.n_workers = n_workers
         self.ram_bytes = ram_bytes
-        self.queue: "queue.Queue[Optional[WorkItem]]" = queue.Queue()
-        self.nic_lock = threading.Lock()  # serializes the bandwidth share
+        self.queue = self.clock.make_queue()
+        self.nic_lock = self.clock.make_lock()  # serializes the bandwidth share
         self.alive = True
         self.busy_ns = 0
         self.starved_ns = 0
@@ -55,18 +60,16 @@ class Node:
         only; externalized mode never passes fetches to workers)."""
         self._fetcher = fetcher
         for i in range(self.n_workers):
-            t = threading.Thread(
-                target=self._worker_loop, args=(on_done,), daemon=True,
-                name=f"{self.id}-w{i}",
-            )
-            t.start()
+            t = self.clock.spawn(lambda cb=on_done: self._worker_loop(cb),
+                                 name=f"{self.id}-w{i}")
             self._threads.append(t)
 
     def stop(self) -> None:
         for _ in self._threads:
             self.queue.put(None)
-        for t in self._threads:
-            t.join(timeout=5)
+        with self.clock.external_wait():  # workers need the clock to drain
+            for t in self._threads:
+                t.join(timeout=5)
         self._threads.clear()
 
     def kill(self) -> None:
@@ -86,12 +89,12 @@ class Node:
             if item.internal_fetches and self._fetcher is not None:
                 # "internal" I/O: the slot is held while dependencies arrive —
                 # this is the starvation the paper measures in fig 8a/8b.
-                t0 = time.perf_counter_ns()
+                t0 = self.clock.ns()
                 for handle, _cost in item.internal_fetches:
                     self._fetcher(self, handle)
                 with self._acct_lock:
-                    self.starved_ns += time.perf_counter_ns() - t0
-            t0 = time.perf_counter_ns()
+                    self.starved_ns += self.clock.ns() - t0
+            t0 = self.clock.ns()
             try:
                 if item.thunk is None:
                     result = self.evaluator.strictify(item.strict_target)
@@ -99,7 +102,7 @@ class Node:
                     result = self.evaluator.think(item.thunk)
             except Exception as e:  # noqa: BLE001 — reported to scheduler
                 result = e
-            dt = time.perf_counter_ns() - t0
+            dt = self.clock.ns() - t0
             with self._acct_lock:
                 self.busy_ns += dt
                 self.jobs_run += 1

@@ -17,13 +17,22 @@ the platform owns network I/O, so it can schedule it):
   payload.
 * :class:`TransferManager` — a small pool of *persistent* per-link worker
   threads executing plans.  Serialization holds the source NIC; propagation
-  latency is handed to a shared delivery timer so consecutive plans on a
-  link pipeline (plan N+1 serializes while plan N is in flight).
+  latency is handed to the clock's timer so consecutive plans on a link
+  pipeline (plan N+1 serializes while plan N is in flight).
   ``mode="per_handle"`` reproduces the seed's thread-per-handle behaviour
   for A/B benchmarking (see ``benchmarks --fig staging``).
-* :class:`LocationIndex` — content key → node-id set, maintained from
+* **Backlog accounting** — the manager tracks outstanding serialization
+  bytes per source NIC and queued plans per link, read (lock-free-ish,
+  under a small mutex) by the scheduler's *seconds-to-stage* placement
+  model: a far node with an idle fat pipe beats a near congested one.
+* :class:`LocationIndex` — content key → node ids, maintained from
   repository put notifications and transfer deliveries, so source lookup
   and locality placement are O(needs) instead of O(nodes × graph walk).
+
+All waiting — link worker queues, NIC locks, serialization sleeps,
+delivery timers — goes through the cluster's :class:`~repro.runtime.clock.
+Clock`, so the same code runs in real time (``WallClock``) or simulated
+time (``VirtualClock``, deterministic and near-instant).
 
 Cross-job dedup (two jobs staging the same blob to the same node share one
 wire transfer) lives in the scheduler's in-flight table; this module only
@@ -31,41 +40,40 @@ ever sees already-deduplicated batches.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-import queue
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from ..core import Handle
+from .clock import Clock, WallClock
 
 
 # ----------------------------------------------------------- location index
 class LocationIndex:
-    """Which nodes hold which content (content key → set of node ids).
+    """Which nodes hold which content (content key → node ids).
 
     Entries are *hints*: data can vanish under us (node failure, explicit
     eviction), so readers must verify residency with the node's repository
     before trusting a hit.  Writers are repository put listeners (worker
-    and transfer threads) plus the scheduler, hence the lock.
+    and transfer threads) plus the scheduler, hence the lock.  Node ids are
+    kept in insertion order (dict keys, not a set) so iteration — and with
+    it source choice and placement — is deterministic across runs.
     """
 
     def __init__(self):
-        self._locs: dict[bytes, set[str]] = {}
+        self._locs: dict[bytes, dict[str, None]] = {}
         self._lock = threading.Lock()
 
     def add(self, key: bytes, node_id: str) -> None:
         with self._lock:
-            self._locs.setdefault(key, set()).add(node_id)
+            self._locs.setdefault(key, {})[node_id] = None
 
     def drop_node(self, node_id: str) -> None:
         """A node died (fail-stop): forget everything it held."""
         with self._lock:
             empty = []
             for key, nodes in self._locs.items():
-                nodes.discard(node_id)
+                nodes.pop(node_id, None)
                 if not nodes:
                     empty.append(key)
             for key in empty:
@@ -104,53 +112,30 @@ class TransferPlan:
         return tuple(h.raw for h, _, _ in self.items)
 
 
-# ------------------------------------------------------------ delivery timer
-class _DeliveryTimer:
-    """Single thread firing callbacks at deadlines (propagation latency).
+# ----------------------------------------------------- one-handle transfer
+def single_transfer(clock: Clock, network, nodes: dict, src_id: str,
+                    dst_id: str, h: Handle, payload, size: int) -> bool:
+    """Move ONE handle src → dst, paying link latency then the NIC-locked
+    serialization share — the seed's per-handle wire model, shared by the
+    cluster's internal-I/O blocking fetch and the ``per_handle`` transfer
+    mode (previously two copies of the same sleep choreography).
 
-    Link workers hand completed serializations here so the *next* plan can
-    start serializing while the previous one is still propagating — the
-    pipelining that makes batched latency per-plan instead of per-handle
-    without giving up wall-clock overlap.
+    Returns False when the destination died before install (the bytes were
+    still burned — that is the point of the fail-stop model).
     """
-
-    def __init__(self):
-        self._heap: list = []
-        self._cv = threading.Condition()
-        self._seq = itertools.count()
-        self._stopped = False
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name="fix-xfer-timer")
-        self._thread.start()
-
-    def schedule(self, when: float, fn: Callable[[], None]) -> None:
-        with self._cv:
-            heapq.heappush(self._heap, (when, next(self._seq), fn))
-            self._cv.notify()
-
-    def stop(self) -> None:
-        with self._cv:
-            self._stopped = True
-            self._cv.notify()
-
-    def _run(self) -> None:
-        while True:
-            with self._cv:
-                if self._stopped:
-                    return
-                if not self._heap:
-                    self._cv.wait()
-                    continue
-                when, _, fn = self._heap[0]
-                now = time.monotonic()
-                if when > now:
-                    self._cv.wait(when - now)
-                    continue
-                heapq.heappop(self._heap)
-            try:
-                fn()
-            except Exception:  # noqa: BLE001 — a delivery must never kill the clock
-                pass
+    link = network.link(src_id, dst_id)
+    clock.sleep(link.latency_s)
+    src_node = nodes.get(src_id)
+    if src_node is not None:
+        with src_node.nic_lock:  # serialize on the source NIC
+            clock.sleep(link.serialized_s(size))
+    else:
+        clock.sleep(link.serialized_s(size))
+    dst = nodes.get(dst_id)
+    if dst is not None and dst.alive:
+        dst.repo.put_handle_data(h, payload)
+        return True
+    return False
 
 
 # -------------------------------------------------------------- link worker
@@ -161,27 +146,31 @@ class _LinkWorker:
         self.manager = manager
         self.src = src
         self.dst = dst
-        self.q: "queue.Queue[Optional[TransferPlan]]" = queue.Queue()
-        self._thread = threading.Thread(target=self._run, daemon=True,
-                                        name=f"fix-xfer-{src}-{dst}")
-        self._thread.start()
+        self.q = manager.clock.make_queue()
+        self._thread = manager.clock.spawn(self._run,
+                                           name=f"fix-xfer-{src}-{dst}")
 
     def stop(self) -> None:
         self.q.put(None)
 
     def _run(self) -> None:
         mgr = self.manager
+        clock = mgr.clock
         while True:
             plan = self.q.get()
             if plan is None:
                 return
             link = mgr.network.link(plan.src, plan.dst)
             src_node = mgr.nodes.get(plan.src)
-            nic = src_node.nic_lock if src_node is not None else threading.Lock()
-            with nic:  # the source NIC serializes the summed payload once
-                time.sleep(link.serialized_s(plan.total_bytes))
-            mgr._timer.schedule(time.monotonic() + link.latency_s,
-                                lambda p=plan: mgr._deliver(p))
+            nbytes = plan.total_bytes
+            if src_node is not None:
+                with src_node.nic_lock:  # the source NIC serializes the
+                    clock.sleep(link.serialized_s(nbytes))  # summed payload once
+            else:
+                clock.sleep(link.serialized_s(nbytes))
+            mgr._serialized(plan.src, nbytes)
+            clock.call_at(clock.now() + link.latency_s,
+                          lambda p=plan: mgr._deliver(p))
 
 
 # ---------------------------------------------------------- transfer manager
@@ -195,16 +184,47 @@ class TransferManager:
     """
 
     def __init__(self, network, nodes: dict, post_event: Callable,
-                 account: Optional[Callable] = None, mode: str = "batched"):
+                 account: Optional[Callable] = None, mode: str = "batched",
+                 clock: Optional[Clock] = None):
         if mode not in ("batched", "per_handle"):
             raise ValueError(f"unknown transfer mode {mode!r}")
         self.network = network
         self.nodes = nodes
         self.mode = mode
+        self.clock = clock if clock is not None else WallClock()
         self._post = post_event
         self._account = account or (lambda n, b: None)
-        self._timer = _DeliveryTimer()
         self._workers: dict[tuple[str, str], _LinkWorker] = {}
+        # Backlog state for the placement cost model (mutated by the
+        # scheduler on submit and by link workers / deliveries; read by
+        # placement, hence the mutex).
+        self._backlog_lock = threading.Lock()
+        self._src_pending: dict[str, int] = {}        # bytes awaiting NIC
+        self._link_pending: dict[tuple, int] = {}     # plans in flight
+
+    # --------------------------------------------------------------- backlog
+    def src_backlog_bytes(self, src_id: str) -> int:
+        """Bytes submitted toward ``src_id``'s NIC not yet serialized — the
+        queueing delay a new plan from this source would sit behind."""
+        with self._backlog_lock:
+            return self._src_pending.get(src_id, 0)
+
+    def link_queue_depth(self, src_id: str, dst_id: str) -> int:
+        """Plans submitted on (src → dst) not yet delivered."""
+        with self._backlog_lock:
+            return self._link_pending.get((src_id, dst_id), 0)
+
+    def backlog_snapshot(self) -> tuple[dict, dict]:
+        """One consistent read of (src pending bytes, link pending plans)
+        for a whole placement pass — one mutex grab instead of one per
+        candidate × handle × replica."""
+        with self._backlog_lock:
+            return dict(self._src_pending), dict(self._link_pending)
+
+    def _serialized(self, src_id: str, nbytes: int) -> None:
+        with self._backlog_lock:
+            left = self._src_pending.get(src_id, 0) - nbytes
+            self._src_pending[src_id] = max(left, 0)
 
     # ---------------------------------------------------------------- submit
     def submit(self, src_id: str, dst_id: str, items: list) -> None:
@@ -217,14 +237,17 @@ class TransferManager:
             # and one scheduler event *per handle* — kept for A/B runs.
             self._account(len(plan.items), plan.total_bytes)
             for h, payload, size in plan.items:
-                threading.Thread(
-                    target=self._per_handle_xfer,
-                    args=(plan.src, plan.dst, h, payload, size),
-                    daemon=True,
-                ).start()
+                self.clock.spawn(
+                    lambda s=plan.src, d=plan.dst, hh=h, p=payload, z=size:
+                        self._per_handle_xfer(s, d, hh, p, z),
+                    name=f"fix-xfer1-{plan.src}-{plan.dst}")
             return
         self._account(1, plan.total_bytes)
         key = (src_id, dst_id)
+        with self._backlog_lock:
+            self._src_pending[src_id] = (
+                self._src_pending.get(src_id, 0) + plan.total_bytes)
+            self._link_pending[key] = self._link_pending.get(key, 0) + 1
         worker = self._workers.get(key)
         if worker is None:
             worker = self._workers[key] = _LinkWorker(self, src_id, dst_id)
@@ -242,20 +265,20 @@ class TransferManager:
             # waiting jobs must unblock (an undelivered handle re-misses and
             # fails the job with the real error) and the scheduler's
             # in-flight table must be reaped.
+            with self._backlog_lock:
+                key = (plan.src, plan.dst)
+                left = self._link_pending.get(key, 0) - 1
+                if left > 0:
+                    self._link_pending[key] = left
+                else:
+                    self._link_pending.pop(key, None)
             self._post(("transfer_done", plan.dst, plan.raws))
 
     def _per_handle_xfer(self, src_id: str, dst_id: str, h: Handle,
                          payload, size: int) -> None:
-        link = self.network.link(src_id, dst_id)
-        src_node = self.nodes.get(src_id)
-        time.sleep(link.latency_s)
-        nic = src_node.nic_lock if src_node is not None else threading.Lock()
-        with nic:
-            time.sleep(link.serialized_s(size))
         try:
-            dst = self.nodes.get(dst_id)
-            if dst is not None and dst.alive:
-                dst.repo.put_handle_data(h, payload)
+            single_transfer(self.clock, self.network, self.nodes,
+                            src_id, dst_id, h, payload, size)
         finally:
             self._post(("transfer_done", dst_id, (h.raw,)))
 
@@ -263,4 +286,3 @@ class TransferManager:
     def stop(self) -> None:
         for w in self._workers.values():
             w.stop()
-        self._timer.stop()

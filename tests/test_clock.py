@@ -1,0 +1,328 @@
+"""Virtual-clock engine tests: primitive semantics, run-to-run determinism,
+wall/virtual equivalence, clock-aware deadlines, and the seconds-to-stage
+placement model the clock makes affordable to exercise."""
+import time
+
+import pytest
+
+import repro.fix as fix
+from repro.core import Handle
+from repro.core.stdlib import add, checksum_tree, fib, inc_chain
+from repro.fix.future import Future, as_completed
+from repro.runtime import Cluster, Link, Network, VirtualClock
+
+
+def _staged_jobs(c: Cluster, n_jobs: int, inputs_per_job: int = 6,
+                 blob_kb: int = 24):
+    """Per-job private input trees parked on s0 (placement-independent
+    bytes: everything ships from storage whatever the schedule)."""
+    store = c.nodes["s0"].repo
+    jobs = []
+    for j in range(n_jobs):
+        blobs = [store.put_blob(bytes([j % 251, i % 251]) + b"v" * (blob_kb * 1024 - 2))
+                 for i in range(inputs_per_job)]
+        jobs.append(checksum_tree(store.put_tree(blobs)))
+    return jobs
+
+
+def _run_staged(c: Cluster, n_jobs: int = 8) -> dict:
+    try:
+        be = fix.on(c)
+        jobs = _staged_jobs(c, n_jobs)
+        c.reset_accounting()
+        t0 = c.clock.now()
+        futs = [be.submit(j) for j in jobs]
+        results = [f.result(timeout=120) for f in futs]
+        makespan = c.clock.now() - t0
+        util = c.utilization(makespan)
+        return {
+            "makespan": makespan,
+            "transfers": c.transfers,
+            "bytes_moved": c.bytes_moved,
+            "busy_frac": util["busy_frac"],
+            "starved_frac": util["starved_frac"],
+            "idle_frac": util["idle_iowait_frac"],
+            "results": tuple(h.raw for h in results),
+        }
+    finally:
+        c.shutdown()
+        if c.clock.is_virtual:
+            c.clock.close()
+
+
+class TestVirtualClockPrimitives:
+    def test_sleep_advances_simulated_time_instantly(self):
+        clk = VirtualClock()
+        clk.register_current()
+        t0 = time.perf_counter()
+        clk.sleep(30.0)
+        assert time.perf_counter() - t0 < 1.0  # real time: none of the 30 s
+        assert clk.now() == pytest.approx(30.0)
+        clk.close()
+
+    def test_call_at_fires_in_time_then_seq_order(self):
+        clk = VirtualClock()
+        clk.register_current()
+        fired = []
+        clk.call_at(2.0, lambda: fired.append("b"))
+        clk.call_at(1.0, lambda: fired.append("a"))
+        clk.call_at(2.0, lambda: fired.append("c"))  # same time: submit order
+        clk.sleep(5.0)  # quiescent; the heap drains in (time, seq) order
+        assert fired == ["a", "b", "c"]
+        assert clk.now() == pytest.approx(5.0)
+        clk.close()
+
+    def test_cancelled_timer_does_not_fire(self):
+        clk = VirtualClock()
+        clk.register_current()
+        fired = []
+        t = clk.call_at(1.0, lambda: fired.append("x"))
+        t.cancel()
+        clk.sleep(2.0)
+        assert fired == []
+        clk.close()
+
+    def test_event_wait_timeout_in_simulated_seconds(self):
+        clk = VirtualClock()
+        clk.register_current()
+        ev = clk.make_event()
+        t0 = time.perf_counter()
+        assert ev.wait(timeout=10.0) is False  # expires in simulated time
+        assert clk.now() == pytest.approx(10.0)
+        assert time.perf_counter() - t0 < 1.0
+        clk.call_at(12.0, ev.set)
+        assert ev.wait(timeout=100.0) is True  # set beats the deadline
+        assert clk.now() == pytest.approx(12.0)
+        clk.close()
+
+    def test_spawned_thread_sleeps_in_virtual_time(self):
+        clk = VirtualClock()
+        clk.register_current()
+        log = []
+        def worker():
+            clk.sleep(1.0)
+            log.append(("worker", clk.now()))
+        clk.spawn(worker, name="t")
+        clk.sleep(2.0)
+        log.append(("main", clk.now()))
+        assert log == [("worker", 1.0), ("main", 2.0)]
+        clk.close()
+
+    def test_foreign_thread_sleep_on_idle_clock_does_not_hang(self):
+        """A never-registered thread sleeping while every participant is
+        quiescent must still wake (adopted threads ride the event heap)."""
+        import threading
+        clk = VirtualClock()
+        woke = []
+        t = threading.Thread(target=lambda: (clk.sleep(0.5), woke.append(clk.now())),
+                             daemon=True)
+        t.start()
+        t.join(timeout=5)
+        assert woke == [0.5] and not t.is_alive()
+        clk.close()
+
+    def test_register_after_adoption_promotes_instead_of_hanging(self):
+        """A thread adopted by an earlier primitive wait can later register
+        as the driver (e.g. two clusters built on one shared clock)."""
+        clk = VirtualClock()
+        clk.sleep(0.25)       # adopts the calling thread
+        clk.register_current()  # must promote, not deadlock
+        clk.sleep(0.25)       # and the promoted driver still participates
+        assert clk.now() == pytest.approx(0.5)
+        clk.close()
+
+    def test_shutdown_leaves_shared_clock_running(self):
+        """One clock, two clusters: the first shutdown must not freeze the
+        second cluster's timeline."""
+        clk = VirtualClock()
+        c1 = Cluster(n_nodes=1, clock=clk)
+        c2 = Cluster(n_nodes=2, clock=clk)
+        try:
+            assert fix.on(c1).run(add(1, 2), timeout=30) == 3
+            c1.shutdown()
+            assert fix.on(c2).run(add(20, 22), timeout=30) == 42
+        finally:
+            c2.shutdown()
+            clk.close()
+
+
+class TestDeterminism:
+    def test_identical_virtual_runs_bit_identical(self):
+        """Two runs of the same workload on fresh virtual clusters agree on
+        makespan, transfer count, bytes moved, utilization fractions and
+        results — exactly, not approximately."""
+        runs = []
+        for _ in range(2):
+            net = Network(Link(latency_s=0.002, gbps=0.5),
+                          overrides={("s0", "n1"): Link(0.02, 0.1)})
+            c = Cluster(n_nodes=3, workers_per_node=1, storage_nodes=("s0",),
+                        network=net, clock=VirtualClock())
+            runs.append(_run_staged(c))
+        assert runs[0] == runs[1]
+        assert runs[0]["makespan"] > 0
+
+    def test_internal_io_starvation_deterministic(self):
+        """Virtual starved-time accounting (slots held during modeled
+        fetches) reproduces exactly across runs."""
+        runs = []
+        for _ in range(2):
+            net = Network(Link(latency_s=0.01, gbps=0.5))
+            c = Cluster(n_nodes=2, workers_per_node=1, storage_nodes=("s0",),
+                        io_mode="internal", network=net, clock=VirtualClock())
+            runs.append(_run_staged(c, n_jobs=6))
+        assert runs[0] == runs[1]
+        assert runs[0]["starved_frac"] > 0
+
+
+class TestWallEquivalence:
+    def test_same_transfer_schedule_wall_vs_virtual(self):
+        """A small topology moves exactly the same bytes in the same number
+        of wire transfers whether time is real or simulated."""
+        outs = {}
+        for label, clock in (("wall", None), ("virtual", VirtualClock())):
+            net = Network(Link(latency_s=0.002, gbps=1.0))
+            c = Cluster(n_nodes=2, workers_per_node=1, storage_nodes=("s0",),
+                        network=net, clock=clock)
+            outs[label] = _run_staged(c, n_jobs=6)
+        assert outs["wall"]["transfers"] == outs["virtual"]["transfers"]
+        assert outs["wall"]["bytes_moved"] == outs["virtual"]["bytes_moved"]
+        assert outs["wall"]["results"] == outs["virtual"]["results"]
+
+
+class TestClockAwareDeadlines:
+    def test_future_timeout_elapses_in_simulated_time(self):
+        """A timeout on a never-completing future fires after *simulated*
+        seconds — immediately in real time — instead of wall-blocking."""
+        clk = VirtualClock()
+        c = Cluster(n_nodes=1, clock=clk)
+        try:
+            fut = Future()
+            fut._clock = clk
+            t0 = time.perf_counter()
+            with pytest.raises(TimeoutError):
+                fut.result(timeout=75.0)
+            assert time.perf_counter() - t0 < 2.0
+            assert clk.now() >= 75.0
+        finally:
+            c.shutdown()
+
+    def test_as_completed_timeout_elapses_in_simulated_time(self):
+        clk = VirtualClock()
+        c = Cluster(n_nodes=1, clock=clk)
+        try:
+            done = Future()
+            done._clock = clk
+            done.set(Handle.blob(b"x"))
+            never = Future()
+            never._clock = clk
+            t0 = time.perf_counter()
+            got = []
+            with pytest.raises(TimeoutError):
+                for f in as_completed([done, never], timeout=30.0):
+                    got.append(f)
+            assert got == [done]  # finished futures still yielded first
+            assert time.perf_counter() - t0 < 2.0
+        finally:
+            c.shutdown()
+
+    def test_timed_out_waits_leak_no_callbacks(self):
+        """Polling result()/as_completed in a retry loop must not grow the
+        pending future's callback list."""
+        clk = VirtualClock()
+        c = Cluster(n_nodes=1, clock=clk)
+        try:
+            never = Future()
+            never._clock = clk
+            for _ in range(3):
+                with pytest.raises(TimeoutError):
+                    never.result(timeout=1.0)
+                with pytest.raises(TimeoutError):
+                    list(as_completed([never], timeout=1.0))
+            assert never._callbacks == []
+        finally:
+            c.shutdown()
+            clk.close()
+
+    def test_completed_future_beats_timeout(self):
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, clock=clk)
+        try:
+            be = fix.on(c)
+            assert be.run(add(20, 22), timeout=60.0) == 42
+            assert clk.now() < 60.0  # deadline timer never had to fire
+        finally:
+            c.shutdown()
+
+
+class TestVirtualCluster:
+    def test_programs_run_under_virtual_clock(self):
+        c = Cluster(n_nodes=3, clock=VirtualClock())
+        try:
+            be = fix.on(c)
+            assert be.run(fib(10), timeout=60) == 55
+            assert be.run(inc_chain(0, 40), timeout=60) == 40
+        finally:
+            c.shutdown()
+
+    def test_speculation_wakeups_under_virtual_clock(self):
+        """Clock-scheduled speculation ticks neither spin nor hang a
+        virtual run (the seed's sleep-loop poller would livelock it)."""
+        c = Cluster(n_nodes=2, speculate_after_s=0.05, clock=VirtualClock())
+        try:
+            assert fix.on(c).run(fib(8), timeout=60) == 21
+        finally:
+            c.shutdown()
+
+
+class TestSecondsToStagePlacement:
+    def _hetero_cluster(self, placement: str) -> Cluster:
+        """n0 behind a fat 10 Gb/s pipe, n1 an edge site behind a thin
+        0.05 Gb/s pipe to everyone."""
+        thin = Link(latency_s=0.005, gbps=0.05)
+        overrides = {}
+        for other in ("n0", "s0", "client"):
+            overrides[("n1", other)] = thin
+            overrides[(other, "n1")] = thin
+        net = Network(Link(latency_s=0.001, gbps=10.0), overrides=overrides)
+        return Cluster(n_nodes=2, workers_per_node=1, storage_nodes=("s0",),
+                       network=net, placement=placement, clock=VirtualClock())
+
+    def _anchored_job(self, c: Cluster):
+        """Bulk inputs on s0, one small anchor blob on the thin node — the
+        bytes-missing bait."""
+        store = c.nodes["s0"].repo
+        blobs = [store.put_blob(bytes([i]) * 200_000) for i in range(4)]
+        blobs.append(c.nodes["n1"].repo.put_blob(b"a" * 50_000))
+        return checksum_tree(store.put_tree(blobs))
+
+    def test_bytes_missing_takes_the_bait(self):
+        c = self._hetero_cluster("bytes")
+        try:
+            fix.on(c).evaluate(self._anchored_job(c), timeout=120)
+            assert c.nodes["n1"].jobs_run >= 1  # ran behind the thin pipe
+        finally:
+            c.shutdown()
+
+    def test_seconds_to_stage_prefers_idle_fat_pipe(self):
+        c = self._hetero_cluster("locality")
+        try:
+            fix.on(c).evaluate(self._anchored_job(c), timeout=120)
+            assert c.nodes["n0"].jobs_run >= 1
+            assert c.nodes["n1"].jobs_run == 0  # thin node never ran it
+        finally:
+            c.shutdown()
+
+    def test_seconds_to_stage_beats_bytes_on_makespan(self):
+        makespans = {}
+        for placement in ("bytes", "locality"):
+            c = self._hetero_cluster(placement)
+            try:
+                be = fix.on(c)
+                jobs = [self._anchored_job(c) for _ in range(1)]
+                t0 = c.clock.now()
+                for f in [be.submit(j) for j in jobs]:
+                    f.result(timeout=120)
+                makespans[placement] = c.clock.now() - t0
+            finally:
+                c.shutdown()
+        assert makespans["locality"] < makespans["bytes"]
