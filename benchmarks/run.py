@@ -24,6 +24,7 @@ FIGS = {
     "10": figures.fig10_burst_compile,
     "staging": figures.fig_staging,
     "sweep": figures.fig_sweep,
+    "waterfall": figures.fig_waterfall,
 }
 
 

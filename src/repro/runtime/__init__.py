@@ -2,8 +2,23 @@
 from .clock import Clock, Timer, VirtualClock, WallClock
 from .cluster import Cluster, Future, Link, Network
 from .node import Node, WorkItem
+from .trace import (
+    TraceDiff,
+    TraceEvent,
+    TraceRecorder,
+    diff_traces,
+    link_utilization,
+    load_trace,
+    replay_check,
+    starvation_intervals,
+    verify_invariants,
+    waterfall,
+)
 from .transfers import LocationIndex, TransferManager, TransferPlan
 
 __all__ = ["Clock", "Cluster", "Future", "Link", "Network", "Node",
            "Timer", "VirtualClock", "WallClock", "WorkItem",
-           "LocationIndex", "TransferManager", "TransferPlan"]
+           "LocationIndex", "TransferManager", "TransferPlan",
+           "TraceDiff", "TraceEvent", "TraceRecorder", "diff_traces",
+           "link_utilization", "load_trace", "replay_check",
+           "starvation_intervals", "verify_invariants", "waterfall"]

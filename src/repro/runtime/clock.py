@@ -143,6 +143,9 @@ class _WallTimer:
             self._stopped = True
             self._cv.notify()
 
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout)
+
     def _run(self) -> None:
         while True:
             with self._cv:
@@ -213,9 +216,10 @@ class WallClock(Clock):
     def close(self) -> None:
         with self._timer_lock:
             self._closed = True
-            if self._timer is not None:
-                self._timer.stop()
-                self._timer = None
+            timer, self._timer = self._timer, None
+        if timer is not None:
+            timer.stop()
+            timer.join(timeout=5)  # no thread outlives the clock
 
 
 # ======================================================== virtual clock
@@ -265,9 +269,10 @@ class VirtualClock(Clock):
         self._timer_pending: deque[Timer] = deque()
         self._timer_state: Optional[_TState] = None
         started = threading.Event()
-        t = threading.Thread(target=self._timer_loop, args=(started,),
-                             daemon=True, name="fix-vclock-timer")
-        t.start()
+        self._timer_thread = threading.Thread(
+            target=self._timer_loop, args=(started,),
+            daemon=True, name="fix-vclock-timer")
+        self._timer_thread.start()
         started.wait()
 
     # ------------------------------------------------------------- time
@@ -367,6 +372,16 @@ class VirtualClock(Clock):
             self._closed = True
             if self._timer_state is not None:
                 self._make_ready(self._timer_state)
+        # Drain the internal timer participant so no thread outlives the
+        # clock (the flake guard in tests/conftest.py pins this).  If the
+        # caller is the running participant it must hand the token over
+        # while it (real-)waits for the timer thread to exit.
+        st = self._threads.get(threading.get_ident())
+        if st is not None and st.running:
+            with self.external_wait():
+                self._timer_thread.join(timeout=5)
+        else:
+            self._timer_thread.join(timeout=5)
 
     # -------------------------------------------------------- internals
     def _register_enqueue(self, adopted: bool, name: str) -> _TState:
@@ -472,6 +487,8 @@ class VirtualClock(Clock):
                 while not self._timer_pending:
                     if self._closed:
                         self._threads.pop(threading.get_ident(), None)
+                        st.dead = True  # a late _make_ready must skip us,
+                        #                 or the token would park on a corpse
                         st.running = False
                         if self._running is st:
                             self._running = None

@@ -36,6 +36,13 @@ transfer threads only post events):
   virtual time, where multi-second topologies execute in milliseconds and
   two identical runs produce identical schedules and accounting.  A
   virtual-clock cluster must be driven from the thread that created it.
+* **Trace capture** — ``Cluster(trace=TraceRecorder())`` records every
+  scheduling decision (submit/place/start/finish, transfer enqueue/
+  link-acquire/deliver, prefetch, speculation, starvation intervals,
+  repository puts) as a typed event stream; under a ``VirtualClock`` two
+  runs serialize to byte-identical JSONL, which is what makes golden-trace
+  regression tests and the randomized invariant fuzz suite possible (see
+  ``runtime/trace.py``).  Opt-in and zero-cost when off.
 * **Tail calls** — a codelet returning a Thunk yields a *new* job that is
   re-placed from scratch: 500-deep chains need one client submission.
 * **Determinism dividends** — results are memoized first-write-wins, so
@@ -56,6 +63,7 @@ from ..fix.backend import ClusterBackend
 from ..fix.future import Future
 from .clock import Clock, WallClock
 from .node import Node, WorkItem
+from .trace import TraceRecorder
 from .transfers import LocationIndex, TransferManager, single_transfer
 
 
@@ -125,6 +133,7 @@ class Cluster:
         transfer_mode: str = "batched",    # "batched" | "per_handle" (seed A/B)
         prefetch: bool = True,             # stage known needs during WAIT_CHILDREN
         clock: Optional[Clock] = None,     # WallClock (default) | VirtualClock
+        trace: Optional[TraceRecorder] = None,  # opt-in event capture
     ):
         if placement not in ("locality", "bytes", "random"):
             raise ValueError(f"unknown placement {placement!r}")
@@ -135,6 +144,12 @@ class Cluster:
         self.rng = random.Random(seed)
         self._own_clock = clock is None  # we close only what we created
         self.clock = clock if clock is not None else WallClock()
+        # Trace capture is opt-in and zero-cost when off: no recorder, no
+        # listeners, and every emit site guards on `is None`.  Timestamps
+        # are this cluster's clock (deterministic under a VirtualClock).
+        self.trace = trace
+        if trace is not None:
+            trace.bind(self.clock)
         # Under a virtual clock the creating thread becomes the registered
         # driver: its blocking waits (Future deadlines, fetches) participate
         # in the deterministic token handoff.  No-op for WallClock.
@@ -142,10 +157,12 @@ class Cluster:
         workers = workers_per_node * (oversubscribe if io_mode == "internal" else 1)
         self.nodes: dict[str, Node] = {}
         for i in range(n_nodes):
-            self.nodes[f"n{i}"] = Node(f"n{i}", workers, node_ram, clock=self.clock)
+            self.nodes[f"n{i}"] = Node(f"n{i}", workers, node_ram,
+                                       clock=self.clock, trace=trace)
         for sid in storage_nodes:
-            self.nodes[sid] = Node(sid, 0, node_ram, clock=self.clock)
-        self.client = Node("client", 0, node_ram, clock=self.clock)
+            self.nodes[sid] = Node(sid, 0, node_ram,
+                                   clock=self.clock, trace=trace)
+        self.client = Node("client", 0, node_ram, clock=self.clock, trace=trace)
         self.nodes["client"] = self.client
         self.speculate_after_s = speculate_after_s
 
@@ -167,10 +184,20 @@ class Cluster:
         for name, n in self.nodes.items():
             n.repo.add_put_listener(
                 lambda h, _name=name: self._locs.add(h.content_key(), _name))
+            if trace is not None:
+                # residency stream: every content arrival (worker results,
+                # client puts, transfer deliveries) becomes a "put" event,
+                # which is what the invariant checker and starvation
+                # attribution consume.
+                n.repo.add_put_listener(
+                    lambda h, _name=name: trace.emit(
+                        "put", node=_name, key=h.content_key().hex(),
+                        nbytes=h.size if h.content_type == BLOB
+                        else 32 * h.size))
         self._xfer = TransferManager(
             self.network, self.nodes, self._events.put,
             account=self._account_transfer, mode=transfer_mode,
-            clock=self.clock)
+            clock=self.clock, trace=trace)
 
         # The user-facing surface: Cluster.submit/evaluate/fetch_result are
         # thin delegates to this Backend (repro.fix), which owns program
@@ -229,13 +256,25 @@ class Cluster:
         partition the window: *busy* (codelet running), *starved* (slot held
         while internal-mode I/O completes — the paper's iowait), and
         *idle_iowait* (the remainder: slots with nothing bound).  Starvation
-        is no longer double-counted into the idle fraction."""
+        is no longer double-counted into the idle fraction.
+
+        Degenerate windows are well-defined: a zero-length (or negative)
+        window — e.g. a virtual-clock workload whose jobs finish in the
+        same simulated instant they start — contains no slot-time, so it
+        reports all-idle rather than dividing by ~0.  Fractions are
+        clamped to [0, 1]; no input produces NaN or a negative fraction."""
         busy = sum(n.busy_ns for n in self.worker_nodes()) * 1e-9
         starved = sum(n.starved_ns for n in self.worker_nodes()) * 1e-9
         slots = sum(n.n_workers for n in self.worker_nodes())
-        denom = max(slots * window_s, 1e-9)
-        busy_frac = busy / denom
-        starved_frac = starved / denom
+        denom = slots * window_s
+        if denom <= 0.0:
+            busy_frac = starved_frac = 0.0  # empty window: nothing measurable
+        else:
+            busy_frac = min(busy / denom, 1.0)
+            # starved takes what headroom busy left, so the three fractions
+            # always partition the window (sum == 1) even when the window
+            # undercounts accumulated slot-time
+            starved_frac = min(starved / denom, 1.0 - busy_frac)
         return {
             "busy_frac": busy_frac,
             "starved_frac": starved_frac,
@@ -246,6 +285,12 @@ class Cluster:
 
     def shutdown(self) -> None:
         self._events.put(("stop",))
+        # Join the scheduler FIRST: transfer submissions are scheduler-
+        # thread-only, so once it drains to the stop sentinel no new link
+        # workers or per-handle threads can race TransferManager.stop()'s
+        # join snapshot.
+        with self.clock.external_wait():  # scheduler needs the clock to drain
+            self._sched.join(timeout=5)
         self._xfer.stop()
         for n in self.nodes.values():
             n.stop()
@@ -312,6 +357,9 @@ class Cluster:
         if job is None or job.phase == DONE:
             return
         job.phase = DONE
+        if self.trace is not None:
+            self.trace.emit("job_fail", job=job.id,
+                            error=type(exc).__name__)
         self._cancel_speculation(job)
         for f in job.futures:
             f.set_exception(exc)
@@ -323,14 +371,20 @@ class Cluster:
                 for f in job.futures:
                     f.set_exception(exc)
                 job.phase = DONE
+                if self.trace is not None:
+                    self.trace.emit("job_fail", job=job.id,
+                                    error=type(exc).__name__)
                 self._cancel_speculation(job)
 
     # ------------------------------------------------------------- events
     def _on_submit(self, encode: Handle, fut: Optional[Future],
                    parent: Optional[int], ignore_memo: bool) -> None:
+        tr = self.trace
         if not ignore_memo:
             memo = self._memo.get(encode.raw)
             if memo is not None and self._find_source_name(memo) is not None:
+                if tr is not None:
+                    tr.emit("job_memo_hit", encode=encode.raw.hex())
                 if fut is not None:
                     fut.set(memo)
                 if parent is not None:
@@ -354,6 +408,9 @@ class Cluster:
         self._jobs[jid] = job
         if not ignore_memo:
             self._by_encode[encode.raw] = jid
+        if tr is not None:
+            tr.emit("job_submit", job=jid, encode=encode.raw.hex(),
+                    strict=job.strict, parent=parent, recompute=ignore_memo)
         self._advance(job)
 
     def _on_child_done(self, parent_id: int, child_encode: Handle) -> None:
@@ -390,6 +447,9 @@ class Cluster:
             for f in job.futures:
                 f.set_exception(result)
             job.phase = DONE
+            if self.trace is not None:
+                self.trace.emit("job_fail", job=job.id,
+                                error=type(result).__name__)
             self._notify_parents_exc(job, result)
             return
         if item.thunk is None:  # strictify op completed
@@ -457,6 +517,12 @@ class Cluster:
             node.repo.memo_put(enc, res)
             node.repo.memo_put(enc.unwrap_encode(), res)
         missing = [h for h in needs if not node.repo.contains(h)]
+        if self.trace is not None:
+            self.trace.emit(
+                "job_place", job=job.id, node=node.id, epoch=job.epoch,
+                n_missing=len(missing),
+                missing_nbytes=sum(h.size if h.content_type == BLOB
+                                   else 32 * h.size for h in missing))
         if self.io_mode == "internal":
             self._enqueue_run(job, internal=missing)
             return
@@ -474,6 +540,9 @@ class Cluster:
         item = WorkItem(job.id, job.epoch, job.thunk, internal_fetches=fetches)
         job.phase = RUNNING
         job.started_at = self.clock.now()
+        if self.trace is not None:
+            self.trace.emit("job_start", job=job.id, node=job.node,
+                            epoch=job.epoch, op="run", internal=len(fetches))
         self._arm_speculation(job)
         node.queue.put(item)
 
@@ -564,6 +633,9 @@ class Cluster:
         item = WorkItem(job.id, job.epoch, None, strict_target=job.whnf)
         job.phase = RUNNING
         job.started_at = self.clock.now()
+        if self.trace is not None:
+            self.trace.emit("job_start", job=job.id, node=job.node,
+                            epoch=job.epoch, op="strictify", internal=0)
         self._arm_speculation(job)  # strictify ops can straggle too
         node.queue.put(item)
 
@@ -571,6 +643,9 @@ class Cluster:
     def _finalize(self, job: Job, result: Handle) -> None:
         job.result = result
         job.phase = DONE
+        if self.trace is not None:
+            self.trace.emit("job_finish", job=job.id, node=job.node,
+                            result=result.raw.hex())
         self._cancel_speculation(job)
         self._memo.setdefault(job.encode.raw, result)
         if job.node:
@@ -593,6 +668,9 @@ class Cluster:
                 for f in parent.futures:
                     f.set_exception(exc)
                 parent.phase = DONE
+                if self.trace is not None:
+                    self.trace.emit("job_fail", job=parent.id,
+                                    error=type(exc).__name__)
                 self._notify_parents_exc(parent, exc)
 
     # ----------------------------------------------------------- stepneeds
@@ -764,24 +842,37 @@ class Cluster:
         batches: dict[str, list] = {}
         pending: set[bytes] = set()
         waiters = [job_id] if job_id is not None else []
+        tr = self.trace
         for h in handles:
             if node.repo.contains(h):
                 continue
             key = (node.id, h.raw)
+            size = h.size if h.content_type == BLOB else 32 * h.size
             if key in self._inflight:  # shared wire transfer: join it
                 self._inflight[key].extend(waiters)
                 pending.add(h.raw)
+                if tr is not None:
+                    tr.emit("stage_request", job=job_id, dst=node.id,
+                            key=h.content_key().hex(), nbytes=size,
+                            action="join")
                 continue
             src = self._find_source_name(h, exclude=node.id)
             if src is None:
                 if recompute:
                     pending.add(h.raw)
+                    if tr is not None:
+                        tr.emit("stage_request", job=job_id, dst=node.id,
+                                key=h.content_key().hex(), nbytes=size,
+                                action="recompute")
                     self._recompute_for(node, h, job_id)
                 continue
-            size = h.size if h.content_type == BLOB else 32 * h.size
             payload = self.nodes[src].repo.raw_payload(h)
             self._inflight[key] = list(waiters)
             pending.add(h.raw)
+            if tr is not None:
+                tr.emit("stage_request", job=job_id, dst=node.id,
+                        key=h.content_key().hex(), nbytes=size,
+                        action="enqueue", src=src)
             batches.setdefault(src, []).append((h, payload, size))
         for src, items in batches.items():
             self._xfer.submit(src, node.id, items)
@@ -807,6 +898,8 @@ class Cluster:
                 return
         if node is None or not node.alive or node.n_workers == 0:
             return
+        if self.trace is not None:
+            self.trace.emit("prefetch", node=node.id, n=len(cands))
         self._stage_missing(node, cands, None, recompute=False)
 
     def _recompute_for(self, node: Node, h: Handle, job_id: Optional[int]) -> None:
@@ -821,6 +914,10 @@ class Cluster:
         self._inflight[key] = list(waiters)
         jid = next(self._ids)
         rejob = Job(jid, enc, enc.unwrap_encode(), enc.interp == STRICT, ignore_memo=True)
+        if self.trace is not None:
+            self.trace.emit("job_submit", job=jid, encode=enc.raw.hex(),
+                            strict=rejob.strict, parent=job_id,
+                            recompute=True)
         rejob.on_complete.append(
             lambda _j, node=node, h=h, key=key: self._retry_transfer(node, h, key)
         )
@@ -856,7 +953,8 @@ class Cluster:
         size = h.size if h.content_type == BLOB else 32 * h.size
         payload = self.nodes[src].repo.raw_payload(h)
         single_transfer(self.clock, self.network, self.nodes,
-                        src, node.id, h, payload, size)
+                        src, node.id, h, payload, size,
+                        trace=self.trace, via="blocking")
         self._account_transfer(1, size)
 
     def _account_transfer(self, n_transfers: int, n_bytes: int) -> None:
@@ -892,6 +990,8 @@ class Cluster:
         if (job is None or job.phase != RUNNING or job.duplicated
                 or job.thunk is None):
             return
+        if self.trace is not None:
+            self.trace.emit("spec_wakeup", job=jid)
         now = self.clock.now()
         # 1e-9 slack: the wakeup fires at exactly started_at + after on a
         # virtual clock, where float round-trip must still count as due.
@@ -907,6 +1007,8 @@ class Cluster:
             return
         job.duplicated = True
         dup = self.rng.choice(others)
+        if self.trace is not None:
+            self.trace.emit("spec_duplicate", job=jid, node=dup.id)
         needs, children, memo_pairs = self._step_needs(job.thunk)
         if any(self._memo.get(c.raw) is None for c in children):
             return

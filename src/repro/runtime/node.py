@@ -36,9 +36,10 @@ class WorkItem:
 
 class Node:
     def __init__(self, node_id: str, n_workers: int, ram_bytes: int = 64 << 30,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None, trace=None):
         self.id = node_id
         self.clock = clock if clock is not None else WallClock()
+        self.trace = trace  # cluster's TraceRecorder (None = tracing off)
         self.repo = Repository(node_id)
         self.evaluator = Evaluator(self.repo)
         self.n_workers = n_workers
@@ -89,11 +90,29 @@ class Node:
             if item.internal_fetches and self._fetcher is not None:
                 # "internal" I/O: the slot is held while dependencies arrive —
                 # this is the starvation the paper measures in fig 8a/8b.
+                # A failing fetch (e.g. no surviving source) is reported to
+                # the scheduler like any run error: the slot survives, the
+                # starved window is accounted, and the traced starve_begin
+                # always gets its starve_end.
+                tr = self.trace
+                if tr is not None:
+                    tr.emit("starve_begin", node=self.id, job=item.job_id,
+                            declared=[h.content_key().hex()
+                                      for h, _ in item.internal_fetches])
                 t0 = self.clock.ns()
-                for handle, _cost in item.internal_fetches:
-                    self._fetcher(self, handle)
+                fetch_exc = None
+                try:
+                    for handle, _cost in item.internal_fetches:
+                        self._fetcher(self, handle)
+                except Exception as e:  # noqa: BLE001 — reported to scheduler
+                    fetch_exc = e
                 with self._acct_lock:
                     self.starved_ns += self.clock.ns() - t0
+                if tr is not None:
+                    tr.emit("starve_end", node=self.id, job=item.job_id)
+                if fetch_exc is not None:
+                    on_done(self, item, fetch_exc)
+                    continue
             t0 = self.clock.ns()
             try:
                 if item.thunk is None:

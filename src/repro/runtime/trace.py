@@ -1,0 +1,337 @@
+"""Deterministic trace capture, replay verification and schedule analysis.
+
+The virtual clock (PR 3) serializes every runtime event deterministically;
+this module *records* them.  A :class:`TraceRecorder` passed to
+``Cluster(trace=...)`` captures a typed, ordered event stream from
+instrumentation points threaded through the scheduler, the transfer
+manager, the worker pools and the blocking-fetch path.  Tracing is opt-in
+and zero-cost when off: every emit site is guarded by an ``is None`` check
+and no recorder object exists unless the caller made one.
+
+Event vocabulary (``kind`` + fields; keys are content-key hex, ``nbytes``
+counts blob bytes / 32 bytes per tree child, like the rest of the runtime):
+
+===================  ======================================================
+``job_submit``       new job created: ``job``, ``encode``, ``strict``,
+                     ``parent`` (submitting job id or null), ``recompute``
+``job_memo_hit``     a submission satisfied from the cluster memo table
+``job_place``        placement decision: ``job``, ``node``, ``epoch``,
+                     ``n_missing``, ``missing_nbytes``
+``job_start``        run bound to a worker queue: ``job``, ``node``,
+                     ``epoch``, ``op`` ("run" | "strictify"), ``internal``
+``job_finish``       result finalized: ``job``, ``node``, ``result``
+``job_fail``         job failed: ``job``, ``error`` (exception type name)
+``put``              content landed in a node repository: ``node``,
+                     ``key``, ``nbytes``
+``stage_request``    scheduler wants a handle moved: ``job`` (null for
+                     prefetch), ``dst``, ``key``, ``nbytes``, ``action``
+                     ("enqueue" | "join" | "recompute"), ``src`` (enqueue)
+``transfer_enqueue`` a TransferPlan submitted: ``src``, ``dst``, ``n``,
+                     ``nbytes``, ``keys``, ``mode``
+``link_acquire``     source NIC acquired, serialization starts: ``src``,
+                     ``dst``, ``nbytes``, ``ser_s``, ``via``
+``transfer_deliver`` payload installed at the destination: ``src``,
+                     ``dst``, ``n``, ``nbytes``, ``keys``, ``ok``, ``via``
+                     (``via``: "batched" | "per_handle" | "blocking")
+``prefetch``         a prefetch pass staged toward ``node``: ``n`` handles
+``spec_wakeup``      a speculation deadline fired for ``job``
+``spec_duplicate``   a straggler run duplicated onto ``node``
+``starve_begin``     internal-I/O worker slot blocks on fetches: ``node``,
+                     ``job``, ``declared`` (keys the job needs)
+``starve_end``       the slot's fetches completed: ``node``, ``job``
+===================  ======================================================
+
+Serialization is JSONL with sorted keys and no whitespace, so *identical
+schedules produce byte-identical files* — the double-run determinism the
+property suite (tests/test_trace_properties.py) pins, and what makes the
+committed golden fixture (tests/fixtures/quickstart_trace.jsonl) a
+regression net for every later scheduler change.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+from collections import Counter, defaultdict
+from dataclasses import dataclass
+from typing import Callable, Iterable, Optional, Union
+
+
+# ------------------------------------------------------------------ events
+@dataclass(frozen=True)
+class TraceEvent:
+    """One runtime event: global sequence number, clock time, kind, fields."""
+
+    seq: int
+    t: float
+    kind: str
+    fields: dict
+
+    def to_dict(self) -> dict:
+        d = {"seq": self.seq, "t": self.t, "kind": self.kind}
+        d.update(self.fields)
+        return d
+
+
+def _as_dict(ev: Union[TraceEvent, dict]) -> dict:
+    return ev.to_dict() if isinstance(ev, TraceEvent) else ev
+
+
+def event_dicts(events: Iterable[Union[TraceEvent, dict]]) -> list[dict]:
+    """Normalize a trace (live events or loaded JSONL rows) to dicts."""
+    return [_as_dict(e) for e in events]
+
+
+# ---------------------------------------------------------------- recorder
+class TraceRecorder:
+    """Collects :class:`TraceEvent`s from every runtime layer.
+
+    ``Cluster(trace=recorder)`` binds the recorder to the cluster's clock
+    (timestamps are ``clock.now()`` — simulated seconds under a
+    ``VirtualClock``, where two identical runs yield byte-identical
+    traces).  ``emit`` is called from scheduler, worker, link-worker and
+    timer threads; the lock makes the sequence numbering atomic, and under
+    a virtual clock the cooperative run token already serializes callers,
+    so event order is deterministic.
+    """
+
+    def __init__(self):
+        self.events: list[TraceEvent] = []
+        self._lock = threading.Lock()
+        self._seq = itertools.count()
+        self._clock = None
+
+    def bind(self, clock) -> None:
+        """Timestamps come from ``clock.now()`` from here on."""
+        self._clock = clock
+
+    def emit(self, kind: str, **fields) -> None:
+        t = self._clock.now() if self._clock is not None else 0.0
+        with self._lock:
+            self.events.append(TraceEvent(next(self._seq), t, kind, fields))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    # ------------------------------------------------------- serialization
+    def to_jsonl(self) -> str:
+        """Byte-stable JSONL: sorted keys, no whitespace, one event/line."""
+        return "".join(
+            json.dumps(e.to_dict(), sort_keys=True, separators=(",", ":"))
+            + "\n"
+            for e in self.events)
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+
+
+def load_trace(path) -> list[dict]:
+    """Load a JSONL trace file back into event dicts."""
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+# -------------------------------------------------------------------- diff
+@dataclass
+class TraceDiff:
+    """First divergence between two traces (``identical`` when none)."""
+
+    index: Optional[int]          # first differing event index, or None
+    left: Optional[dict]          # event at that index (None = missing)
+    right: Optional[dict]
+    len_left: int
+    len_right: int
+
+    @property
+    def identical(self) -> bool:
+        return self.index is None
+
+    def __bool__(self) -> bool:  # truthy == "there IS a difference"
+        return not self.identical
+
+    def explain(self) -> str:
+        if self.identical:
+            return f"traces identical ({self.len_left} events)"
+        return (f"traces diverge at event {self.index} "
+                f"(lengths {self.len_left} vs {self.len_right}):\n"
+                f"  left : {self.left}\n"
+                f"  right: {self.right}")
+
+
+def diff_traces(left: Iterable, right: Iterable) -> TraceDiff:
+    a, b = event_dicts(left), event_dicts(right)
+    for i, (x, y) in enumerate(zip(a, b)):
+        if x != y:
+            return TraceDiff(i, x, y, len(a), len(b))
+    if len(a) != len(b):
+        i = min(len(a), len(b))
+        return TraceDiff(i, a[i] if i < len(a) else None,
+                         b[i] if i < len(b) else None, len(a), len(b))
+    return TraceDiff(None, None, None, len(a), len(b))
+
+
+def replay_check(run: Callable[[TraceRecorder], object],
+                 golden: Union[str, Iterable]) -> TraceDiff:
+    """Re-run a workload and diff its trace against a recorded one.
+
+    ``run(recorder)`` must build its own ``VirtualClock`` cluster with
+    ``trace=recorder`` and drive the workload to completion (see
+    tests/workloads.py for the canonical shape).  ``golden`` is a JSONL
+    path or an iterable of events.  Returns the :class:`TraceDiff`;
+    ``diff.identical`` is the replay assertion.
+    """
+    rec = TraceRecorder()
+    run(rec)
+    want = load_trace(golden) if isinstance(golden, str) else golden
+    return diff_traces(rec.events, want)
+
+
+# ---------------------------------------------------------------- analysis
+def waterfall(events: Iterable) -> dict[str, list[dict]]:
+    """Per-lane schedule intervals derived from a trace.
+
+    Node lanes (``"n0"``...) carry job intervals: ``phase="stage"`` from
+    placement to run start, ``phase="run"`` from run start to finish.
+    Link lanes (``"n0->n1"``) carry ``phase="xfer"`` serialization
+    intervals from ``link_acquire`` events.  This is the data behind
+    ``benchmarks --fig waterfall``.
+    """
+    lanes: dict[str, list[dict]] = defaultdict(list)
+    placed: dict[int, tuple[float, str]] = {}
+    started: dict[int, tuple[float, str]] = {}
+    for ev in event_dicts(events):
+        k = ev["kind"]
+        if k == "job_place":
+            placed[ev["job"]] = (ev["t"], ev["node"])
+        elif k == "job_start":
+            job = ev["job"]
+            if job in placed and placed[job][1] == ev["node"]:
+                t0 = placed.pop(job)[0]
+                if ev["t"] > t0:
+                    lanes[ev["node"]].append(
+                        {"job": job, "phase": "stage",
+                         "start": t0, "end": ev["t"]})
+            started[job] = (ev["t"], ev["node"])
+        elif k == "job_finish":
+            job = ev["job"]
+            if job in started:
+                t0, node = started.pop(job)
+                lanes[node].append({"job": job, "phase": "run",
+                                    "start": t0, "end": ev["t"]})
+        elif k == "link_acquire":
+            lanes[f"{ev['src']}->{ev['dst']}"].append(
+                {"phase": "xfer", "start": ev["t"],
+                 "end": ev["t"] + ev["ser_s"], "nbytes": ev["nbytes"]})
+    return dict(lanes)
+
+
+def link_utilization(events: Iterable, horizon_s: float) -> dict[str, float]:
+    """Fraction of ``horizon_s`` each (src → dst) link spent serializing."""
+    busy: dict[str, float] = defaultdict(float)
+    for ev in event_dicts(events):
+        if ev["kind"] == "link_acquire":
+            busy[f"{ev['src']}->{ev['dst']}"] += ev["ser_s"]
+    if horizon_s <= 0:
+        return {k: 0.0 for k in busy}
+    return {k: min(v / horizon_s, 1.0) for k, v in busy.items()}
+
+
+def starvation_intervals(events: Iterable) -> list[dict]:
+    """Starvation windows (internal-I/O slots held during fetches), each
+    attributed to the blob arrivals that ended it.
+
+    ``attributed`` is the key of the last *declared* blob that landed on
+    the starved node inside the window — the arrival that released the
+    slot.  A window with no arrivals (every declared handle was already
+    resident) has ``attributed=None`` and ~zero duration.
+    """
+    open_: dict[tuple[str, int], dict] = {}
+    out: list[dict] = []
+    for ev in event_dicts(events):
+        k = ev["kind"]
+        if k == "starve_begin":
+            open_[(ev["node"], ev["job"])] = {
+                "node": ev["node"], "job": ev["job"], "start": ev["t"],
+                "declared": set(ev["declared"]), "arrivals": []}
+        elif k == "put":
+            for iv in open_.values():
+                if iv["node"] == ev["node"]:
+                    iv["arrivals"].append((ev["t"], ev["key"]))
+        elif k == "starve_end":
+            iv = open_.pop((ev["node"], ev["job"]), None)
+            if iv is None:
+                continue
+            iv["end"] = ev["t"]
+            attributed = None
+            for _t, key in iv["arrivals"]:
+                if key in iv["declared"]:
+                    attributed = key
+            iv["attributed"] = attributed
+            iv["declared"] = sorted(iv["declared"])
+            out.append(iv)
+    return out
+
+
+# -------------------------------------------------------------- invariants
+def verify_invariants(events: Iterable) -> list[str]:
+    """Check a (failure-free) run's trace against schedule invariants.
+
+    Returns a list of human-readable violations (empty == all hold):
+
+    * **no redundant transfer** — no handle is enqueued toward a node
+      where its content was already resident at enqueue time;
+    * **conservation** — bytes delivered by the transfer subsystem equal
+      bytes the scheduler enqueued (requested minus dedup joins and
+      recomputes), and each (dst, key) enqueue has exactly one delivery;
+    * **completeness** — every submitted job finishes or fails;
+    * **starvation attribution** — every starvation interval of positive
+      duration ends with the arrival of a blob the job declared.
+    """
+    violations: list[str] = []
+    resident: dict[str, set] = defaultdict(set)
+    enq_counts: Counter = Counter()
+    del_counts: Counter = Counter()
+    enq_bytes = 0
+    del_bytes = 0
+    submitted: set[int] = set()
+    completed: set[int] = set()
+    evs = event_dicts(events)
+    for ev in evs:
+        k = ev["kind"]
+        if k == "put":
+            resident[ev["node"]].add(ev["key"])
+        elif k == "stage_request" and ev["action"] == "enqueue":
+            if ev["key"] in resident[ev["dst"]]:
+                violations.append(
+                    f"seq {ev['seq']}: transfer enqueued for key "
+                    f"{ev['key'][:12]}… already resident at {ev['dst']}")
+            enq_bytes += ev["nbytes"]
+            enq_counts[(ev["dst"], ev["key"])] += 1
+        elif k == "transfer_deliver" and ev.get("via") != "blocking":
+            del_bytes += ev["nbytes"]
+            for key in ev["keys"]:
+                del_counts[(ev["dst"], key)] += 1
+        elif k == "job_submit":
+            submitted.add(ev["job"])
+        elif k in ("job_finish", "job_fail"):
+            completed.add(ev["job"])
+    if enq_bytes != del_bytes:
+        violations.append(
+            f"bytes delivered ({del_bytes}) != bytes enqueued ({enq_bytes})")
+    if enq_counts != del_counts:
+        missing = set(enq_counts) - set(del_counts)
+        extra = set(del_counts) - set(enq_counts)
+        violations.append(
+            f"per-(dst,key) enqueue/delivery mismatch: "
+            f"{len(missing)} undelivered, {len(extra)} unrequested")
+    unfinished = submitted - completed
+    if unfinished:
+        violations.append(f"jobs never completed: {sorted(unfinished)}")
+    for iv in starvation_intervals(evs):
+        if iv["end"] - iv["start"] > 0 and iv["attributed"] is None:
+            violations.append(
+                f"starvation interval on {iv['node']} (job {iv['job']}, "
+                f"{iv['start']:.6f}→{iv['end']:.6f}) not ended by a "
+                f"declared blob arrival")
+    return violations

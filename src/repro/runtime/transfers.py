@@ -114,28 +114,40 @@ class TransferPlan:
 
 # ----------------------------------------------------- one-handle transfer
 def single_transfer(clock: Clock, network, nodes: dict, src_id: str,
-                    dst_id: str, h: Handle, payload, size: int) -> bool:
+                    dst_id: str, h: Handle, payload, size: int,
+                    trace=None, via: str = "per_handle") -> bool:
     """Move ONE handle src → dst, paying link latency then the NIC-locked
     serialization share — the seed's per-handle wire model, shared by the
-    cluster's internal-I/O blocking fetch and the ``per_handle`` transfer
-    mode (previously two copies of the same sleep choreography).
+    cluster's internal-I/O blocking fetch (``via="blocking"``) and the
+    ``per_handle`` transfer mode (previously two copies of the same sleep
+    choreography).
 
     Returns False when the destination died before install (the bytes were
     still burned — that is the point of the fail-stop model).
     """
     link = network.link(src_id, dst_id)
+    ser_s = link.serialized_s(size)
     clock.sleep(link.latency_s)
     src_node = nodes.get(src_id)
     if src_node is not None:
         with src_node.nic_lock:  # serialize on the source NIC
-            clock.sleep(link.serialized_s(size))
+            if trace is not None:
+                trace.emit("link_acquire", src=src_id, dst=dst_id,
+                           nbytes=size, ser_s=ser_s, via=via)
+            clock.sleep(ser_s)
     else:
-        clock.sleep(link.serialized_s(size))
+        if trace is not None:
+            trace.emit("link_acquire", src=src_id, dst=dst_id,
+                       nbytes=size, ser_s=ser_s, via=via)
+        clock.sleep(ser_s)
     dst = nodes.get(dst_id)
-    if dst is not None and dst.alive:
+    ok = dst is not None and dst.alive
+    if ok:
         dst.repo.put_handle_data(h, payload)
-        return True
-    return False
+    if trace is not None:
+        trace.emit("transfer_deliver", src=src_id, dst=dst_id, n=1,
+                   nbytes=size, keys=[h.content_key().hex()], ok=ok, via=via)
+    return ok
 
 
 # -------------------------------------------------------------- link worker
@@ -163,11 +175,19 @@ class _LinkWorker:
             link = mgr.network.link(plan.src, plan.dst)
             src_node = mgr.nodes.get(plan.src)
             nbytes = plan.total_bytes
+            ser_s = link.serialized_s(nbytes)
+            tr = mgr.trace
             if src_node is not None:
                 with src_node.nic_lock:  # the source NIC serializes the
-                    clock.sleep(link.serialized_s(nbytes))  # summed payload once
+                    if tr is not None:   # summed payload once
+                        tr.emit("link_acquire", src=plan.src, dst=plan.dst,
+                                nbytes=nbytes, ser_s=ser_s, via="batched")
+                    clock.sleep(ser_s)
             else:
-                clock.sleep(link.serialized_s(nbytes))
+                if tr is not None:
+                    tr.emit("link_acquire", src=plan.src, dst=plan.dst,
+                            nbytes=nbytes, ser_s=ser_s, via="batched")
+                clock.sleep(ser_s)
             mgr._serialized(plan.src, nbytes)
             clock.call_at(clock.now() + link.latency_s,
                           lambda p=plan: mgr._deliver(p))
@@ -185,16 +205,18 @@ class TransferManager:
 
     def __init__(self, network, nodes: dict, post_event: Callable,
                  account: Optional[Callable] = None, mode: str = "batched",
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None, trace=None):
         if mode not in ("batched", "per_handle"):
             raise ValueError(f"unknown transfer mode {mode!r}")
         self.network = network
         self.nodes = nodes
         self.mode = mode
         self.clock = clock if clock is not None else WallClock()
+        self.trace = trace
         self._post = post_event
         self._account = account or (lambda n, b: None)
         self._workers: dict[tuple[str, str], _LinkWorker] = {}
+        self._adhoc: list = []  # per_handle threads, joined on stop()
         # Backlog state for the placement cost model (mutated by the
         # scheduler on submit and by link workers / deliveries; read by
         # placement, hence the mutex).
@@ -232,15 +254,22 @@ class TransferManager:
         if not items:
             return
         plan = TransferPlan(src_id, dst_id, list(items))
+        if self.trace is not None:
+            self.trace.emit(
+                "transfer_enqueue", src=src_id, dst=dst_id,
+                n=len(plan.items), nbytes=plan.total_bytes,
+                keys=[h.content_key().hex() for h, _, _ in plan.items],
+                mode=self.mode)
         if self.mode == "per_handle":
             # Seed behaviour: one thread, one latency charge, one NIC grab
             # and one scheduler event *per handle* — kept for A/B runs.
             self._account(len(plan.items), plan.total_bytes)
+            self._adhoc = [t for t in self._adhoc if t.is_alive()]
             for h, payload, size in plan.items:
-                self.clock.spawn(
+                self._adhoc.append(self.clock.spawn(
                     lambda s=plan.src, d=plan.dst, hh=h, p=payload, z=size:
                         self._per_handle_xfer(s, d, hh, p, z),
-                    name=f"fix-xfer1-{plan.src}-{plan.dst}")
+                    name=f"fix-xfer1-{plan.src}-{plan.dst}"))
             return
         self._account(1, plan.total_bytes)
         key = (src_id, dst_id)
@@ -257,9 +286,16 @@ class TransferManager:
     def _deliver(self, plan: TransferPlan) -> None:
         try:
             dst = self.nodes.get(plan.dst)
-            if dst is not None and dst.alive:
+            ok = dst is not None and dst.alive
+            if ok:
                 for h, payload, _size in plan.items:
                     dst.repo.put_handle_data(h, payload)
+            if self.trace is not None:
+                self.trace.emit(
+                    "transfer_deliver", src=plan.src, dst=plan.dst,
+                    n=len(plan.items), nbytes=plan.total_bytes,
+                    keys=[h.content_key().hex() for h, _, _ in plan.items],
+                    ok=ok, via="batched")
         finally:
             # ALWAYS post, even toward a dead node or past a failed install:
             # waiting jobs must unblock (an undelivered handle re-misses and
@@ -278,7 +314,8 @@ class TransferManager:
                          payload, size: int) -> None:
         try:
             single_transfer(self.clock, self.network, self.nodes,
-                            src_id, dst_id, h, payload, size)
+                            src_id, dst_id, h, payload, size,
+                            trace=self.trace, via="per_handle")
         finally:
             self._post(("transfer_done", dst_id, (h.raw,)))
 
@@ -286,3 +323,8 @@ class TransferManager:
     def stop(self) -> None:
         for w in self._workers.values():
             w.stop()
+        threads = [w._thread for w in self._workers.values()] + self._adhoc
+        with self.clock.external_wait():  # workers need the clock to drain
+            for t in threads:
+                t.join(timeout=5)
+        self._adhoc = []

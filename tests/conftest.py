@@ -1,0 +1,35 @@
+"""Shared fixtures for the runtime test suite."""
+import threading
+import time
+
+import pytest
+
+
+@pytest.fixture
+def no_thread_leaks():
+    """Flake guard: every thread a test starts must be joinable by the end
+    of that test.
+
+    Clusters and clocks now drain their workers on ``shutdown()``/
+    ``close()`` (scheduler, node workers, link workers, per-handle
+    transfer threads, wall/virtual timer threads); this fixture pins that
+    contract so a leaked thread fails the leaking test instead of
+    corrupting a later one (the cross-test interference that makes
+    cooperative-scheduling suites flaky).
+
+    Opt in per module with
+    ``pytestmark = pytest.mark.usefixtures("no_thread_leaks")`` — it is
+    deliberately not autouse: jax/XLA tests keep process-lifetime thread
+    pools that are not leaks.
+    """
+    before = set(threading.enumerate())
+    yield
+    deadline = time.monotonic() + 10.0
+    leaked = []
+    for t in threading.enumerate():
+        if t in before or t is threading.current_thread():
+            continue
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+        if t.is_alive():
+            leaked.append(t.name)
+    assert not leaked, f"threads leaked across test boundary: {leaked}"

@@ -1,6 +1,12 @@
 """Virtual-clock engine tests: primitive semantics, run-to-run determinism,
 wall/virtual equivalence, clock-aware deadlines, and the seconds-to-stage
-placement model the clock makes affordable to exercise."""
+placement model the clock makes affordable to exercise.
+
+Every test here runs under the shared ``no_thread_leaks`` flake guard
+(tests/conftest.py): clusters and clocks must drain all of their threads —
+scheduler, node workers, link workers, timer threads — before the test
+ends, so one test's parked participants can never corrupt another's
+timeline."""
 import time
 
 import pytest
@@ -10,6 +16,8 @@ from repro.core import Handle
 from repro.core.stdlib import add, checksum_tree, fib, inc_chain
 from repro.fix.future import Future, as_completed
 from repro.runtime import Cluster, Link, Network, VirtualClock
+
+pytestmark = pytest.mark.usefixtures("no_thread_leaks")
 
 
 def _staged_jobs(c: Cluster, n_jobs: int, inputs_per_job: int = 6,
@@ -205,6 +213,7 @@ class TestClockAwareDeadlines:
             assert clk.now() >= 75.0
         finally:
             c.shutdown()
+            clk.close()
 
     def test_as_completed_timeout_elapses_in_simulated_time(self):
         clk = VirtualClock()
@@ -224,6 +233,7 @@ class TestClockAwareDeadlines:
             assert time.perf_counter() - t0 < 2.0
         finally:
             c.shutdown()
+            clk.close()
 
     def test_timed_out_waits_leak_no_callbacks(self):
         """Polling result()/as_completed in a retry loop must not grow the
@@ -252,26 +262,31 @@ class TestClockAwareDeadlines:
             assert clk.now() < 60.0  # deadline timer never had to fire
         finally:
             c.shutdown()
+            clk.close()
 
 
 class TestVirtualCluster:
     def test_programs_run_under_virtual_clock(self):
-        c = Cluster(n_nodes=3, clock=VirtualClock())
+        clk = VirtualClock()
+        c = Cluster(n_nodes=3, clock=clk)
         try:
             be = fix.on(c)
             assert be.run(fib(10), timeout=60) == 55
             assert be.run(inc_chain(0, 40), timeout=60) == 40
         finally:
             c.shutdown()
+            clk.close()
 
     def test_speculation_wakeups_under_virtual_clock(self):
         """Clock-scheduled speculation ticks neither spin nor hang a
         virtual run (the seed's sleep-loop poller would livelock it)."""
-        c = Cluster(n_nodes=2, speculate_after_s=0.05, clock=VirtualClock())
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, speculate_after_s=0.05, clock=clk)
         try:
             assert fix.on(c).run(fib(8), timeout=60) == 21
         finally:
             c.shutdown()
+            clk.close()
 
 
 class TestSecondsToStagePlacement:
@@ -302,6 +317,7 @@ class TestSecondsToStagePlacement:
             assert c.nodes["n1"].jobs_run >= 1  # ran behind the thin pipe
         finally:
             c.shutdown()
+            c.clock.close()
 
     def test_seconds_to_stage_prefers_idle_fat_pipe(self):
         c = self._hetero_cluster("locality")
@@ -311,6 +327,7 @@ class TestSecondsToStagePlacement:
             assert c.nodes["n1"].jobs_run == 0  # thin node never ran it
         finally:
             c.shutdown()
+            c.clock.close()
 
     def test_seconds_to_stage_beats_bytes_on_makespan(self):
         makespans = {}
@@ -325,4 +342,5 @@ class TestSecondsToStagePlacement:
                 makespans[placement] = c.clock.now() - t0
             finally:
                 c.shutdown()
+                c.clock.close()
         assert makespans["locality"] < makespans["bytes"]

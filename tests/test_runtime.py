@@ -5,12 +5,13 @@ which compiles to byte-identical Table-1 submissions, so these exercise
 exactly the same scheduler paths as the raw spelling.  The raw-core
 spelling stays pinned in tests/test_core.py and tests/test_transfers.py.
 """
+import math
 import time
 
 import repro.fix as fix
 from repro.core import Handle
 from repro.core.stdlib import add, count_string, fib, fix_if, identity, inc_chain, slice_blob
-from repro.runtime import Cluster, Link, Network
+from repro.runtime import Cluster, Link, Network, VirtualClock
 
 
 def make_cluster(**kw) -> Cluster:
@@ -130,6 +131,23 @@ class TestInternalIO:
             c.shutdown()
 
 
+class TestInternalIOFetchFailure:
+    def test_unsourceable_fetch_fails_job_not_worker(self):
+        """A blocking fetch with no surviving source must surface as the
+        job's error — the worker slot survives and keeps serving."""
+        c = make_cluster(n_nodes=1, io_mode="internal")
+        try:
+            be = fix.on(c)
+            ghost = Handle.blob(b"never-put-anywhere" * 100)  # no replica
+            fut = be.submit(count_string(ghost, b"x"))
+            exc = fut.exception(timeout=30)
+            assert exc is not None  # MissingData reported, not a dead thread
+            # the slot that hit the failure still runs new work
+            assert be.run(add(1, 2), timeout=30) == 3
+        finally:
+            c.shutdown()
+
+
 class TestFaultTolerance:
     def test_node_failure_reschedules(self):
         c = make_cluster(n_nodes=3)
@@ -166,6 +184,95 @@ class TestFaultTolerance:
             assert fix.on(c).run(fib(10), timeout=60) == 55
         finally:
             c.shutdown()
+
+
+def _assert_fractions_sane(util: dict) -> None:
+    for key in ("busy_frac", "starved_frac", "idle_iowait_frac"):
+        frac = util[key]
+        assert not math.isnan(frac), f"{key} is NaN"
+        assert 0.0 <= frac <= 1.0, f"{key}={frac} outside [0, 1]"
+    assert (util["busy_frac"] + util["starved_frac"]
+            + util["idle_iowait_frac"]) <= 1.0 + 1e-9
+
+
+class TestUtilizationAccounting:
+    """Edge cases surfaced by tracing: degenerate windows must yield
+    well-defined fractions, never NaN, negatives or >1 blowups."""
+
+    def test_zero_window_reports_all_idle(self):
+        c = make_cluster()
+        try:
+            assert fix.on(c).run(add(1, 2), timeout=30) == 3
+            util = c.utilization(0.0)
+            _assert_fractions_sane(util)
+            assert util["busy_frac"] == 0.0
+            assert util["starved_frac"] == 0.0
+            assert util["idle_iowait_frac"] == 1.0
+        finally:
+            c.shutdown()
+
+    def test_negative_window_reports_all_idle(self):
+        c = make_cluster()
+        try:
+            _assert_fractions_sane(c.utilization(-1.0))
+        finally:
+            c.shutdown()
+
+    def test_window_smaller_than_busy_time_clamps(self):
+        """A window much shorter than accumulated busy time (measurement
+        slop, or resetting mid-run) must clamp to 1.0, not report a
+        1e9× 'fraction'."""
+        c = make_cluster(n_nodes=1)
+        try:
+            be = fix.on(c)
+            corpus = be.repo.put_blob(bytes(range(256)) * 4000)
+            assert be.run(count_string(corpus, bytes([7])), timeout=30) == 4000
+            util = c.utilization(1e-12)
+            _assert_fractions_sane(util)
+            assert util["busy_frac"] == 1.0
+            assert util["idle_iowait_frac"] == 0.0
+        finally:
+            c.shutdown()
+
+    def test_busy_plus_starved_clamp_partitions_window(self):
+        """Even when the window undercounts accumulated busy AND starved
+        slot-time, the three fractions must still partition it (sum 1.0),
+        not clamp independently to 2.0."""
+        net = Network(Link(latency_s=0.02, gbps=10))
+        c = make_cluster(n_nodes=2, io_mode="internal", network=net)
+        try:
+            be = fix.on(c)
+            c.nodes["n0"].repo.put_blob(b"z" * 100_000)
+            shard = Handle.blob(b"z" * 100_000)
+            futs = [be.submit(count_string(shard, bytes([i % 3]) + b"zz"))
+                    for i in range(8)]
+            for f in futs:
+                f.result(timeout=30)
+            assert sum(n.starved_ns for n in c.worker_nodes()) > 0
+            util = c.utilization(1e-9)  # window ≪ accumulated slot-time
+            _assert_fractions_sane(util)
+            assert util["busy_frac"] + util["starved_frac"] \
+                + util["idle_iowait_frac"] == 1.0
+        finally:
+            c.shutdown()
+
+    def test_instant_virtual_job_zero_makespan_window(self):
+        """Under a virtual clock a job over literal inputs starts and
+        finishes in the same simulated instant: makespan is exactly 0.0
+        and utilization over it must stay well-defined."""
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, clock=clk)
+        try:
+            be = fix.on(c)
+            be.evaluate(add(20, 22), timeout=60)  # warm: stages + memoizes
+            t0 = clk.now()
+            assert be.run(add(20, 22), timeout=60) == 42
+            makespan = clk.now() - t0
+            assert makespan == 0.0  # memo hit: zero simulated seconds
+            _assert_fractions_sane(c.utilization(makespan))
+        finally:
+            c.shutdown()
+            clk.close()
 
 
 class TestDeterminismProperties:

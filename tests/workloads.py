@@ -1,0 +1,268 @@
+"""Seeded workload + topology generator for the trace/fuzz test harness.
+
+Two things live here:
+
+* :func:`run_quickstart` — the fixed 4-node quickstart workload behind the
+  committed golden trace (tests/fixtures/quickstart_trace.jsonl).  When a
+  scheduler change *intentionally* alters the schedule, regenerate with::
+
+      PYTHONPATH=src python tests/workloads.py --regen
+
+* a randomized generator (:func:`make_spec` / :func:`run_workload`): from
+  one integer seed it derives a heterogeneous topology (fat/thin links),
+  a blob layout (inputs scattered across storage and worker nodes, some
+  replicated), and a job mix (fan-out ``checksum_tree`` trees, optionally
+  fan-in merged pairwise) — then runs it under a ``VirtualClock`` with
+  tracing on.  tests/test_trace_properties.py fuzzes schedules with it and
+  checks the invariants in :mod:`repro.runtime.trace`.
+
+Everything is derived from the seed with ``random.Random`` — no ambient
+entropy — so any failing seed reproduces exactly (the CI fuzz job prints
+its rotating seed for this reason).
+"""
+from __future__ import annotations
+
+import random
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import repro.fix as fix  # noqa: E402
+from repro.core.stdlib import add, checksum_tree, fib, inc_chain, merge_counts  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    Cluster,
+    Link,
+    Network,
+    TraceRecorder,
+    VirtualClock,
+)
+
+FIXTURE = str(Path(__file__).resolve().parent / "fixtures"
+              / "quickstart_trace.jsonl")
+
+
+# ------------------------------------------------------------- quickstart
+def run_quickstart(trace: TraceRecorder | None = None) -> dict:
+    """The golden-trace workload: a fixed 4-node topology (one slow edge
+    node, one storage node) running the quickstart mix — a staged
+    checksum over storage-resident blobs, a parallel fib fan-out, a
+    tail-call chain and a memo-hit resubmission."""
+    net = Network(Link(latency_s=0.001, gbps=1.0),
+                  overrides={("s0", "n3"): Link(0.01, 0.1),
+                             ("n3", "s0"): Link(0.01, 0.1)})
+    clk = VirtualClock()
+    c = Cluster(n_nodes=4, workers_per_node=1, storage_nodes=("s0",),
+                network=net, clock=clk, seed=0, trace=trace)
+    try:
+        be = fix.on(c)
+        store = c.nodes["s0"].repo
+        blobs = [store.put_blob(bytes([i]) * 16384) for i in range(6)]
+        tree = store.put_tree(blobs)
+        futs = [be.submit(checksum_tree(tree)),
+                be.submit(fib(8)),
+                be.submit(inc_chain(0, 10)),
+                be.submit(add(20, 22))]
+        results = [f.result(timeout=300) for f in futs]
+        be.submit(add(20, 22)).result(timeout=300)  # memo-hit path
+        return {
+            "makespan": clk.now(),
+            "transfers": c.transfers,
+            "bytes_moved": c.bytes_moved,
+            "results": tuple(h.raw.hex() for h in results),
+        }
+    finally:
+        c.shutdown()
+        clk.close()
+
+
+# -------------------------------------------------------------- generator
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Everything a randomized case needs, derived from one seed."""
+
+    seed: int
+    n_nodes: int
+    workers_per_node: int
+    n_jobs: int
+    inputs_per_job: int
+    blob_kb: int
+    fanin: bool          # merge checksum results pairwise (fan-in trees)
+    replica_p: float     # probability an input blob gets a second replica
+    io_mode: str = "external"
+    transfer_mode: str = "batched"
+
+
+def make_spec(seed: int, io_mode: str = "external") -> WorkloadSpec:
+    rng = random.Random(seed * 9176 + 11)
+    return WorkloadSpec(
+        seed=seed,
+        n_nodes=rng.randint(2, 5),
+        workers_per_node=rng.randint(1, 2),
+        n_jobs=rng.randint(4, 8),
+        inputs_per_job=rng.randint(2, 5),
+        blob_kb=rng.choice((4, 16, 40)),
+        fanin=rng.random() < 0.5,
+        replica_p=rng.random() * 0.5,
+        io_mode=io_mode,
+        transfer_mode="per_handle" if rng.random() < 0.2 else "batched",
+    )
+
+
+def build_network(spec: WorkloadSpec, rng: random.Random) -> Network:
+    """Heterogeneous links: each node draws a NIC class; a pair's link is
+    the slower of the two ends (a thin edge node is thin to everyone)."""
+    classes = [(0.005, 0.1), (0.002, 0.5), (0.001, 2.0), (0.0005, 10.0)]
+    names = [f"n{i}" for i in range(spec.n_nodes)] + ["s0", "client"]
+    draw = {name: rng.choice(classes) for name in names}
+    overrides = {}
+    for a in names:
+        for b in names:
+            if a == b:
+                continue
+            lat_a, g_a = draw[a]
+            lat_b, g_b = draw[b]
+            overrides[(a, b)] = Link(latency_s=max(lat_a, lat_b),
+                                     gbps=min(g_a, g_b))
+    return Network(Link(latency_s=0.001, gbps=1.0), overrides=overrides)
+
+
+def _blob_payload(spec: WorkloadSpec, j: int, i: int) -> bytes:
+    head = bytes([spec.seed % 251, j % 251, i % 251, 17])
+    return head + b"\x5a" * (spec.blob_kb * 1024 - len(head))
+
+
+def run_workload(spec: WorkloadSpec, *, placement: str = "locality",
+                 trace: TraceRecorder | None = None) -> dict:
+    """Run one generated case under a ``VirtualClock``; returns the
+    schedule summary (and fills ``trace`` when given).  Internal-I/O
+    specs park every input on storage so each job's fetches are
+    guaranteed remote (that is the starvation being measured)."""
+    rng = random.Random(spec.seed)
+    net = build_network(spec, rng)
+    clk = VirtualClock()
+    c = Cluster(n_nodes=spec.n_nodes, workers_per_node=spec.workers_per_node,
+                storage_nodes=("s0",), network=net, placement=placement,
+                io_mode=spec.io_mode, transfer_mode=spec.transfer_mode,
+                clock=clk, seed=spec.seed, trace=trace)
+    try:
+        be = fix.on(c)
+        store = c.nodes["s0"]
+        homes = [store] if spec.io_mode == "internal" else (
+            [store] + c.worker_nodes())
+        jobs = []
+        for j in range(spec.n_jobs):
+            blobs = []
+            for i in range(spec.inputs_per_job):
+                payload = _blob_payload(spec, j, i)
+                home = rng.choice(homes)
+                blobs.append(home.repo.put_blob(payload))
+                if rng.random() < spec.replica_p:
+                    rng.choice(homes).repo.put_blob(payload)  # a replica
+            jobs.append(checksum_tree(store.repo.put_tree(blobs)))
+        if spec.fanin:
+            merged = [merge_counts(jobs[i], jobs[i + 1])
+                      for i in range(0, len(jobs) - 1, 2)]
+            if len(jobs) % 2:
+                merged.append(jobs[-1])
+            jobs = merged
+        t0 = clk.now()
+        futs = [be.submit(j) for j in jobs]
+        results = [f.result(timeout=600) for f in futs]
+        makespan = clk.now() - t0
+        util = c.utilization(makespan)
+        return {
+            "makespan": makespan,
+            "transfers": c.transfers,
+            "bytes_moved": c.bytes_moved,
+            "busy_frac": util["busy_frac"],
+            "starved_frac": util["starved_frac"],
+            "results": tuple(h.raw.hex() for h in results),
+        }
+    finally:
+        c.shutdown()
+        clk.close()
+
+
+# ------------------------------------------------------- placement A/B gen
+def run_ab_case(seed: int, placement: str,
+                trace: TraceRecorder | None = None) -> dict:
+    """One anchored heterogeneous case for the bytes-vs-locality A/B: odd
+    worker nodes sit behind thin pipes and hold each job's small "anchor"
+    input — bait that bytes-missing placement chases behind the congested
+    link while seconds-to-stage routes the bulk bytes around it (the PR-3
+    result, pinned as a property across seeds)."""
+    rng = random.Random(seed * 7919 + 3)
+    n_nodes = rng.choice((3, 4, 5, 6))
+    thin = Link(latency_s=0.005, gbps=rng.choice((0.05, 0.1, 0.2)))
+    fat = Link(latency_s=0.001, gbps=10.0)
+    names = [f"n{i}" for i in range(n_nodes)] + ["s0", "client"]
+    overrides = {}
+    for i in range(1, n_nodes, 2):
+        for other in names:
+            if other == f"n{i}":
+                continue
+            overrides[(f"n{i}", other)] = thin
+            overrides[(other, f"n{i}")] = thin
+    net = Network(fat, overrides=overrides)
+    clk = VirtualClock()
+    c = Cluster(n_nodes=n_nodes, workers_per_node=1, storage_nodes=("s0",),
+                network=net, placement=placement, clock=clk, seed=seed,
+                trace=trace)
+    try:
+        be = fix.on(c)
+        store = c.nodes["s0"].repo
+        thin_nodes = [c.nodes[f"n{i}"] for i in range(1, n_nodes, 2)]
+        n_jobs = rng.randint(3, 2 * n_nodes)
+        inputs = rng.randint(3, 6)
+        blob_kb = rng.choice((32, 64, 128))
+        jobs = []
+        for j in range(n_jobs):
+            blobs = [store.put_blob(bytes([seed % 251, j % 251, i % 251, 9])
+                                    + b"\xa5" * (blob_kb * 1024 - 4))
+                     for i in range(inputs)]
+            anchor = thin_nodes[j % len(thin_nodes)].repo.put_blob(
+                bytes([seed % 251, j % 251, 201]) + b"\x3c" * (8 * 1024 - 3))
+            blobs.append(anchor)
+            jobs.append(checksum_tree(store.put_tree(blobs)))
+        t0 = clk.now()
+        futs = [be.submit(j) for j in jobs]
+        [f.result(timeout=600) for f in futs]
+        return {"makespan": clk.now() - t0, "transfers": c.transfers,
+                "bytes_moved": c.bytes_moved}
+    finally:
+        c.shutdown()
+        clk.close()
+
+
+# -------------------------------------------------------------------- CLI
+def main(argv: list[str]) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="regenerate the golden quickstart trace fixture")
+    ap.add_argument("--regen", nargs="?", const=FIXTURE, default=None,
+                    metavar="PATH",
+                    help=f"record the quickstart workload twice, verify the "
+                         f"traces are bit-identical, and write the fixture "
+                         f"(default: {FIXTURE})")
+    args = ap.parse_args(argv)
+    if args.regen is None:
+        ap.print_help()
+        return 2
+    rec1, rec2 = TraceRecorder(), TraceRecorder()
+    run_quickstart(rec1)
+    run_quickstart(rec2)
+    if rec1.to_jsonl() != rec2.to_jsonl():
+        print("FATAL: two recordings disagree — schedule is nondeterministic",
+              file=sys.stderr)
+        return 1
+    Path(args.regen).parent.mkdir(parents=True, exist_ok=True)
+    rec1.save(args.regen)
+    print(f"wrote {len(rec1)} events to {args.regen}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
