@@ -25,6 +25,7 @@ FIGS = {
     "staging": figures.fig_staging,
     "sweep": figures.fig_sweep,
     "waterfall": figures.fig_waterfall,
+    "chaos": figures.fig_chaos,
 }
 
 

@@ -29,13 +29,13 @@ from .procedures import (
     registered_names,
     resolve,
 )
-from .repository import Footprint, MissingData, Repository
+from .repository import CorruptData, Footprint, MissingData, Repository
 
 __all__ = [
     "AccessViolation", "FixAPI", "Evaluator", "FixError", "Handle",
     "BLOB", "TREE", "OBJECT", "REF", "APPLICATION", "IDENTIFICATION",
     "SELECTION", "STRICT", "SHALLOW",
-    "Footprint", "MissingData", "Repository",
+    "CorruptData", "Footprint", "MissingData", "Repository",
     "register", "resolve", "handle_for", "name_of", "procedure_blob",
     "registered_names", "make_limits", "parse_limits",
 ]

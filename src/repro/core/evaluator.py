@@ -41,7 +41,7 @@ from .handle import (
     TREE,
 )
 from .procedures import resolve, name_of
-from .repository import MissingData, Repository
+from .repository import CorruptData, MissingData, Repository
 
 
 class FixError(RuntimeError):
@@ -161,8 +161,8 @@ class Evaluator:
         t0 = time.perf_counter_ns()
         try:
             out = fn(api, resolved)
-        except (MissingData, FixError):
-            raise
+        except (MissingData, CorruptData, FixError):
+            raise  # runtime faults pass through for the scheduler to handle
         except Exception as e:  # noqa: BLE001 — codelet fault, not runtime fault
             raise FixError(f"codelet {name_of(proc)!r} failed: {e!r}") from e
         self.codelet_seconds += (time.perf_counter_ns() - t0) * 1e-9

@@ -63,6 +63,17 @@ class MissingData(KeyError):
         self.handle = handle
 
 
+class CorruptData(RuntimeError):
+    """A read-time content verification failed: the resident bytes no longer
+    hash to the handle's digest (at-rest corruption).  Only raised when the
+    repository's ``verify_reads`` flag is on — the fault-injection plane
+    enables it so a rotted blob can never silently feed a computation."""
+
+    def __init__(self, handle: Handle):
+        super().__init__(repr(handle))
+        self.handle = handle
+
+
 def walk_object_closure(root: Handle, memo_get: Callable,
                         tree_children: Callable, cache: dict) -> tuple:
     """Every non-literal handle reachable as an Object from ``root``.
@@ -130,6 +141,9 @@ class Repository:
         self._memo: dict[bytes, Handle] = {}
         self._lock = threading.RLock()
         self._blob_bytes = 0  # maintained counter; stats() stays O(1)
+        # Content keys evicted after failing verification; never served as
+        # a transfer source until a verified replacement lands.
+        self.quarantined: set[bytes] = set()
         # Put listeners: called with the new content's Handle after every
         # insert (blob/tree, local or network).  The cluster's location
         # index subscribes here so source lookup never scans repositories.
@@ -141,6 +155,10 @@ class Repository:
         # memoized) can never change — no invalidation needed.
         self._fp_cache: dict[tuple[bytes, bool], Footprint] = {}
         self._reach_cache: dict[bytes, tuple[Handle, ...]] = {}
+        # Re-hash blob content on every read; CorruptData on mismatch.  Off
+        # by default (content is immutable), switched on by the cluster when
+        # a fault schedule can corrupt blobs at rest.
+        self.verify_reads = False
 
     # -------------------------------------------------------------- listeners
     def add_put_listener(self, fn: Callable[[Handle], None]) -> None:
@@ -177,14 +195,23 @@ class Repository:
             self._notify_put(h)
         return h
 
-    def put_handle_data(self, handle: Handle, payload) -> None:
-        """Install data received from elsewhere (network worker path)."""
+    def put_handle_data(self, handle: Handle, payload, *,
+                        verify: bool = True) -> bool:
+        """Install data received from elsewhere (network worker path).
+
+        With ``verify`` (the default) the payload is hashed and checked
+        against the handle before it lands — content addressing makes the
+        handle its own checksum, so a delivery corrupted on the wire is
+        *rejected* here rather than silently poisoning the store.  Returns
+        True when the content is resident after the call (installed now or
+        already present), False when the payload was rejected."""
         if handle.is_literal:
-            return
+            return True
+        if verify and not self._payload_matches(handle, payload):
+            return False
         key = handle.content_key()
         with self._lock:
             if handle.content_type == BLOB:
-                assert isinstance(payload, (bytes, bytearray))
                 fresh = key not in self._blobs
                 if fresh:
                     self._blobs[key] = bytes(payload)
@@ -193,8 +220,74 @@ class Repository:
                 fresh = key not in self._trees
                 if fresh:
                     self._trees[key] = tuple(payload)
+            self.quarantined.discard(key)  # verified bytes clear quarantine
         if fresh:
             self._notify_put(handle)
+        return True
+
+    @staticmethod
+    def _payload_matches(handle: Handle, payload) -> bool:
+        """Does ``payload`` hash to ``handle``'s digest (and size)?"""
+        try:
+            if handle.content_type == BLOB:
+                if not isinstance(payload, (bytes, bytearray)):
+                    return False
+                return (Handle.blob(bytes(payload)).digest == handle.digest
+                        and len(payload) == handle.size)
+            kids = tuple(payload)
+            if not all(isinstance(k, Handle) for k in kids):
+                return False
+            return (Handle.tree(kids).digest == handle.digest
+                    and len(kids) == handle.size)
+        except (ValueError, TypeError):
+            return False
+
+    def verify_resident(self, handle: Handle) -> bool:
+        """Re-hash this handle's *resident* content against its digest.
+
+        False means at-rest corruption (or absence) — the caller should
+        :meth:`quarantine` the entry so it is never served as a source."""
+        if handle.is_literal:
+            return True
+        with self._lock:
+            key = handle.content_key()
+            payload = (self._blobs.get(key) if handle.content_type == BLOB
+                       else self._trees.get(key))
+        if payload is None:
+            return False
+        return self._payload_matches(handle, payload)
+
+    def quarantine(self, handle: Handle) -> None:
+        """Evict content that failed verification and remember its key so
+        trace checkers can assert it is never served again (until a
+        verified replacement lands)."""
+        if handle.is_literal:
+            return
+        key = handle.content_key()
+        with self._lock:
+            if handle.content_type == BLOB:
+                dropped = self._blobs.pop(key, None)
+                if dropped is not None:
+                    self._blob_bytes -= len(dropped)
+            else:
+                self._trees.pop(key, None)
+            self.quarantined.add(key)
+
+    def corrupt_nth_blob(self, index: int) -> Optional[bytes]:
+        """Fault injection: flip the first byte of the ``index``-th resident
+        blob (stable key order).  Returns the content key, or None when no
+        blobs are resident.  Test/chaos harness use only."""
+        with self._lock:
+            if not self._blobs:
+                return None
+            keys = sorted(self._blobs)
+            key = keys[index % len(keys)]
+            data = bytearray(self._blobs[key])
+            if not data:
+                return None
+            data[0] ^= 0xFF
+            self._blobs[key] = bytes(data)
+        return key
 
     # ------------------------------------------------------------------ get
     def get_blob(self, handle: Handle) -> bytes:
@@ -203,9 +296,12 @@ class Repository:
         if handle.is_literal:
             return handle.literal_payload()
         try:
-            return self._blobs[handle.content_key()]
+            payload = self._blobs[handle.content_key()]
         except KeyError:
             raise MissingData(handle) from None
+        if self.verify_reads and not self._payload_matches(handle, payload):
+            raise CorruptData(handle)
+        return payload
 
     def get_tree(self, handle: Handle) -> tuple[Handle, ...]:
         if handle.content_type != TREE:
@@ -409,4 +505,5 @@ class Repository:
             "trees": len(self._trees),
             "memos": len(self._memo),
             "blob_bytes": self._blob_bytes,  # maintained counter, O(1)
+            "quarantined": len(self.quarantined),
         }

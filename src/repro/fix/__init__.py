@@ -36,14 +36,14 @@ Quickstart::
 """
 from .backend import Backend, ClusterBackend, LocalBackend, local, on
 from .codelet import DEFAULT_LIMITS, TypedCodelet, codelet
-from .future import Future, as_completed
+from .future import CancelledError, DeadlineExceeded, Future, as_completed
 from .lazy import Lazy, lit
 from .marshal import MarshalError
 
 __all__ = [
     "Backend", "ClusterBackend", "LocalBackend", "local", "on",
     "TypedCodelet", "codelet", "DEFAULT_LIMITS",
-    "Future", "as_completed",
+    "Future", "as_completed", "CancelledError", "DeadlineExceeded",
     "Lazy", "lit",
     "MarshalError",
 ]

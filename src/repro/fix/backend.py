@@ -31,7 +31,7 @@ from typing import Any, Iterable, Optional
 
 from ..core import Evaluator, Repository
 from ..core.handle import Handle
-from .future import Future, as_completed
+from .future import DeadlineExceeded, Future, as_completed
 from .lazy import Lazy
 from .marshal import MarshalError, unmarshal
 
@@ -48,8 +48,13 @@ class Backend(abc.ABC):
         """The client repository programs compile against."""
 
     @abc.abstractmethod
-    def submit(self, program) -> Future:
-        """Compile ``program`` (Lazy or Handle) and start evaluating it."""
+    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
+        """Compile ``program`` (Lazy or Handle) and start evaluating it.
+
+        ``deadline_s`` bounds the whole job in backend-clock seconds from
+        submission (simulated seconds on a virtual-clock cluster): expiry
+        fails the future with :class:`~repro.fix.future.DeadlineExceeded`
+        and — where the backend can — cancels orphaned child work."""
 
     def evaluate(self, program, timeout: Optional[float] = 120.0) -> Handle:
         """Submit and wait; returns the result Handle."""
@@ -145,12 +150,22 @@ class LocalBackend(Backend):
     def repo(self) -> Repository:
         return self._repo
 
-    def submit(self, program) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
         if self._closed:
             raise RuntimeError("backend is closed")
         encode, out_type = self._compile(program)
         fut = Future()
         fut.out_type = out_type
+        if deadline_s is not None:
+            # Local evaluation is uninterruptible (one synchronous
+            # evaluator call), so a deadline can only fail the future;
+            # the worker skips items whose future already completed.
+            timer = threading.Timer(
+                deadline_s, lambda: fut.set_exception(
+                    DeadlineExceeded("job deadline exceeded")))
+            timer.daemon = True
+            timer.start()
+            fut.add_done_callback(lambda _f: timer.cancel())
         self._q.put((encode, fut))
         return fut
 
@@ -173,6 +188,8 @@ class LocalBackend(Backend):
             if item is None:
                 return
             encode, fut = item
+            if fut.done():
+                continue  # deadline expired (or cancelled) while queued
             try:
                 fut.set(self.evaluator.evaluate(encode))
             except BaseException as e:  # noqa: BLE001 — delivered via the future
@@ -200,9 +217,9 @@ class ClusterBackend(Backend):
     def repo(self) -> Repository:
         return self.cluster.client_repo
 
-    def submit(self, program) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
         encode, out_type = self._compile(program)
-        fut = self.cluster._submit_encode(encode)
+        fut = self.cluster._submit_encode(encode, deadline_s=deadline_s)
         fut.out_type = out_type
         return fut
 

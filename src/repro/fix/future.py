@@ -17,6 +17,19 @@ import time
 from typing import Any, Callable, Iterable, Iterator, Optional
 
 
+class CancelledError(RuntimeError):
+    """The future's job was cancelled before producing a result."""
+
+
+class DeadlineExceeded(TimeoutError):
+    """The job's submit-time deadline elapsed before it finished.
+
+    Unlike the plain :class:`TimeoutError` from ``result(timeout=...)`` —
+    which only bounds the *caller's wait* — a deadline cancels the job
+    itself: orphaned child work is pruned and the future is failed with
+    this error on every waiter."""
+
+
 class Future:
     """Result of a submitted Fix program.
 
@@ -40,6 +53,12 @@ class Future:
         self._callbacks: list[Callable[["Future"], Any]] = []
         self.out_type = None  # static result type, set by the frontend
         self._clock = None    # set by clock-owning backends (cluster)
+        # Backends that can prune in-flight work install a canceller:
+        # ``_canceller(future)`` must eventually fail the future (the
+        # cluster routes it through the scheduler thread so child
+        # submissions are pruned too).  Without one, cancel() just fails
+        # the future in place.
+        self._canceller: Optional[Callable[["Future"], Any]] = None
 
     # ------------------------------------------------------------- setters
     def set(self, result) -> None:
@@ -97,6 +116,24 @@ class Future:
 
     def done(self) -> bool:
         return self._ev.is_set()
+
+    # ------------------------------------------------------------ cancel
+    def cancel(self) -> bool:
+        """Request cancellation.  Returns False if the future already
+        completed; True once cancellation is underway (the future will
+        complete with :class:`CancelledError`, possibly asynchronously —
+        the cluster prunes orphaned child jobs on its scheduler thread)."""
+        if self.done():
+            return False
+        canceller = self._canceller
+        if canceller is not None:
+            canceller(self)
+        else:
+            self.set_exception(CancelledError("future cancelled"))
+        return True
+
+    def cancelled(self) -> bool:
+        return self.done() and isinstance(self._exc, CancelledError)
 
     def add_done_callback(self, fn: Callable[["Future"], Any]) -> None:
         """``fn(future)`` runs when the future completes (immediately if it

@@ -1,6 +1,13 @@
 """Fixpoint runtime: multi-node execution engine for Fix programs."""
 from .clock import Clock, Timer, VirtualClock, WallClock
 from .cluster import Cluster, Future, Link, Network
+from .faults import (
+    DataUnrecoverable,
+    Fault,
+    FaultError,
+    FaultSchedule,
+    TransferFailed,
+)
 from .node import Node, WorkItem
 from .trace import (
     TraceDiff,
@@ -19,6 +26,8 @@ from .transfers import LocationIndex, TransferManager, TransferPlan
 __all__ = ["Clock", "Cluster", "Future", "Link", "Network", "Node",
            "Timer", "VirtualClock", "WallClock", "WorkItem",
            "LocationIndex", "TransferManager", "TransferPlan",
+           "Fault", "FaultSchedule", "FaultError", "TransferFailed",
+           "DataUnrecoverable",
            "TraceDiff", "TraceEvent", "TraceRecorder", "diff_traces",
            "link_utilization", "load_trace", "replay_check",
            "starvation_intervals", "verify_invariants", "waterfall"]

@@ -80,6 +80,10 @@ class Clock(abc.ABC):
     def call_at(self, when: float, fn: Callable[[], None]) -> Timer:
         """Run ``fn`` when the clock reaches ``when`` (absolute)."""
 
+    def call_later(self, dt: float, fn: Callable[[], None]) -> Timer:
+        """Run ``fn`` after ``dt`` clock-seconds (relative convenience)."""
+        return self.call_at(self.now() + dt, fn)
+
     # ------------------------------------------------- blocking primitives
     @abc.abstractmethod
     def make_queue(self):

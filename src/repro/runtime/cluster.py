@@ -56,12 +56,13 @@ import random
 from dataclasses import dataclass, field
 from typing import Optional
 
-from ..core import Handle, MissingData, Repository
+from ..core import CorruptData, Handle, MissingData, Repository
 from ..core.handle import APPLICATION, BLOB, IDENTIFICATION, SELECTION, STRICT, TREE
 from ..core.repository import walk_object_closure
 from ..fix.backend import ClusterBackend
-from ..fix.future import Future
+from ..fix.future import CancelledError, DeadlineExceeded, Future
 from .clock import Clock, WallClock
+from .faults import DataUnrecoverable, FaultState, TransferFailed
 from .node import Node, WorkItem
 from .trace import TraceRecorder
 from .transfers import LocationIndex, TransferManager, single_transfer
@@ -112,6 +113,7 @@ class Job:
     duplicated: bool = False
     spec_timer: Optional[object] = None                  # pending speculation wakeup
     on_complete: list = field(default_factory=list)      # callbacks (scheduler thread)
+    on_fail: list = field(default_factory=list)          # cb(job, exc) on failure
 
 
 class Cluster:
@@ -134,6 +136,10 @@ class Cluster:
         prefetch: bool = True,             # stage known needs during WAIT_CHILDREN
         clock: Optional[Clock] = None,     # WallClock (default) | VirtualClock
         trace: Optional[TraceRecorder] = None,  # opt-in event capture
+        faults=None,                       # FaultSchedule: seeded injections
+        transfer_retries: int = 4,         # per-(node, key) staging attempts
+        retry_backoff_s: float = 0.05,     # first retry delay (doubles)
+        retry_backoff_max_s: float = 1.0,  # backoff cap
     ):
         if placement not in ("locality", "bytes", "random"):
             raise ValueError(f"unknown placement {placement!r}")
@@ -155,6 +161,17 @@ class Cluster:
         # in the deterministic token handoff.  No-op for WallClock.
         self.clock.register_current()
         workers = workers_per_node * (oversubscribe if io_mode == "internal" else 1)
+        self._workers_per_node = workers   # default for nodes joining later
+        self._node_ram = node_ram
+        self.transfer_retries = transfer_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_max_s = retry_backoff_max_s
+        # Live link-fault state (down links, degradation, drop/corrupt
+        # budgets): shared with the TransferManager's link workers.  None
+        # when fault injection is off — every fault-path check guards on it,
+        # so no-fault runs keep byte-identical traces.
+        self._fstate: Optional[FaultState] = (
+            FaultState() if faults is not None else None)
         self.nodes: dict[str, Node] = {}
         for i in range(n_nodes):
             self.nodes[f"n{i}"] = Node(f"n{i}", workers, node_ram,
@@ -172,6 +189,9 @@ class Cluster:
         self._memo: dict[bytes, Handle] = {}            # encode raw -> result
         self._lineage: dict[bytes, Handle] = {}          # content key -> encode
         self._inflight: dict[tuple, list] = {}           # (node, raw) -> waiter ids
+        self._retry: dict[tuple, int] = {}               # (node, raw) -> attempts
+        self._retry_src: dict[tuple, str] = {}           # (node, raw) -> failed src
+        self._pending_retries = 0                        # armed backoff timers
         self._reach: dict[bytes, tuple] = {}             # handle raw -> object closure
         self._ids = itertools.count()
         self.transfers = 0
@@ -182,22 +202,11 @@ class Cluster:
         # never scan node repositories.
         self._locs = LocationIndex()
         for name, n in self.nodes.items():
-            n.repo.add_put_listener(
-                lambda h, _name=name: self._locs.add(h.content_key(), _name))
-            if trace is not None:
-                # residency stream: every content arrival (worker results,
-                # client puts, transfer deliveries) becomes a "put" event,
-                # which is what the invariant checker and starvation
-                # attribution consume.
-                n.repo.add_put_listener(
-                    lambda h, _name=name: trace.emit(
-                        "put", node=_name, key=h.content_key().hex(),
-                        nbytes=h.size if h.content_type == BLOB
-                        else 32 * h.size))
+            self._wire_node(name, n)
         self._xfer = TransferManager(
             self.network, self.nodes, self._events.put,
             account=self._account_transfer, mode=transfer_mode,
-            clock=self.clock, trace=trace)
+            clock=self.clock, trace=trace, faults=self._fstate)
 
         # The user-facing surface: Cluster.submit/evaluate/fetch_result are
         # thin delegates to this Backend (repro.fix), which owns program
@@ -212,6 +221,35 @@ class Cluster:
         # polling thread to spin under a virtual clock or oversleep under
         # the wall clock.
 
+        # Fault injection: one clock timer per schedule entry, armed at
+        # startup so injections land at exact (virtual) instants and the
+        # whole run — faults, recoveries and all — replays bit-identically.
+        if faults is not None:
+            start = self.clock.now()
+            for f in faults.expanded():
+                self.clock.call_at(start + f.t,
+                                   lambda ff=f: self._events.put(("fault", ff)))
+
+    def _wire_node(self, name: str, node: Node) -> None:
+        """Attach the location-index and trace put listeners to a node's
+        (possibly reborn) repository.  Listeners live on the Repository
+        object, which ``Node.kill()`` replaces — so a rejoining node must
+        be rewired or its puts become invisible to the scheduler."""
+        if self._fstate is not None:
+            node.repo.verify_reads = True  # kill() replaces the repo object
+        node.repo.add_put_listener(
+            lambda h, _name=name: self._locs.add(h.content_key(), _name))
+        if self.trace is not None:
+            # residency stream: every content arrival (worker results,
+            # client puts, transfer deliveries) becomes a "put" event,
+            # which is what the invariant checker and starvation
+            # attribution consume.
+            node.repo.add_put_listener(
+                lambda h, _name=name: self.trace.emit(
+                    "put", node=_name, key=h.content_key().hex(),
+                    nbytes=h.size if h.content_type == BLOB
+                    else 32 * h.size))
+
     # --------------------------------------------------------------- public
     @property
     def client_repo(self) -> Repository:
@@ -220,10 +258,13 @@ class Cluster:
     def worker_nodes(self) -> list[Node]:
         return [n for n in self.nodes.values() if n.n_workers > 0 and n.alive]
 
-    def submit(self, program) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
         """Thin delegate: accepts a Lazy program or a Handle (thunks are
-        strict-wrapped), compiled by the Backend against the client repo."""
-        return self.backend.submit(program)
+        strict-wrapped), compiled by the Backend against the client repo.
+        ``deadline_s`` bounds the job itself (clock-seconds from submit):
+        expiry fails the future with DeadlineExceeded and cancels orphaned
+        child work."""
+        return self.backend.submit(program, deadline_s=deadline_s)
 
     def evaluate(self, program, timeout: float = 120.0) -> Handle:
         return self.backend.evaluate(program, timeout)
@@ -233,11 +274,15 @@ class Cluster:
         (see ClusterBackend.fetch_result)."""
         return self.backend.fetch_result(handle, into)
 
-    def _submit_encode(self, encode: Handle) -> Future:
+    def _submit_encode(self, encode: Handle,
+                       deadline_s: Optional[float] = None) -> Future:
         """Raw submission path the Backend compiles down to."""
         fut = Future()
         fut._clock = self.clock  # clock-aware deadlines (virtual timeouts)
-        self._events.put(("submit", encode, fut, None, False))
+        # cancel() routes through the scheduler thread, which owns job
+        # state and can prune orphaned child submissions
+        fut._canceller = lambda f: self._events.put(("cancel", f))
+        self._events.put(("submit", encode, fut, None, False, deadline_s))
         return fut
 
     def kill_node(self, node_id: str) -> None:
@@ -301,26 +346,65 @@ class Cluster:
 
     # ------------------------------------------------------ scheduler loop
     def _loop(self) -> None:
+        draining = False
         while True:
             ev = self._events.get()
             kind = ev[0]
             try:
                 if kind == "stop":
-                    return
+                    # Graceful drain: keep processing until every in-flight
+                    # transfer has delivered (or dropped) and every armed
+                    # retry timer has fired, so recovery plays out fully and
+                    # traces end quiescent.  Bounded by the retry caps.
+                    if self._quiet():
+                        return
+                    draining = True
+                    continue
                 elif kind == "submit":
                     self._on_submit(*ev[1:])
                 elif kind == "child_done":
                     self._on_child_done(*ev[1:])
                 elif kind == "transfer_done":
                     self._on_transfer_done(*ev[1:])
+                elif kind == "transfer_failed":
+                    self._on_transfer_failed(*ev[1:])
+                elif kind == "retry_stage":
+                    self._pending_retries -= 1
+                    self._on_retry_stage(ev[1])
+                elif kind == "recompute":
+                    self._on_retry_stage(ev[1], parent=ev[2])
                 elif kind == "ran":
                     self._on_ran(*ev[1:])
                 elif kind == "node_failed":
                     self._on_node_failed(ev[1])
+                elif kind == "fault":
+                    self._on_fault(ev[1])
+                elif kind == "cancel":
+                    self._on_cancel(ev[1])
+                elif kind == "deadline":
+                    self._on_deadline(ev[1])
+                elif kind == "source_suspect":
+                    self._check_source(ev[1], (ev[2],))
                 elif kind == "tick":
                     self._on_tick(ev[1])
             except Exception as e:  # noqa: BLE001 — fail the affected job only
                 self._scope_failure(kind, ev, e)
+            if draining and self._quiet():
+                return
+
+    def _quiet(self) -> bool:
+        """True when no transfer is in flight, no retry timer is armed, no
+        event is queued and no job is running on a live worker — safe to
+        exit the scheduler loop.  (A RUNNING job on a *dead* node never
+        posts "ran"; the crash handler re-places it, so it can't persist.)"""
+        return (self._events.qsize() == 0
+                and self._pending_retries == 0
+                and self._xfer.pending() == 0
+                and not any(j.phase == RUNNING
+                            and j.node is not None
+                            and j.node in self.nodes
+                            and self.nodes[j.node].alive
+                            for j in self._jobs.values()))
 
     def _scope_failure(self, kind: str, ev: tuple, exc: BaseException) -> None:
         """A handler blew up: fail the job(s) the event belonged to (and
@@ -328,7 +412,7 @@ class Cluster:
         in-flight job — alive."""
         jids: set[int] = set()
         if kind == "submit":
-            _, encode, fut, parent, _ignore = ev
+            _, encode, fut, parent, _ignore, _deadline = ev
             if fut is not None and not fut.done():
                 fut.set_exception(exc)
             if parent is not None:
@@ -338,16 +422,27 @@ class Cluster:
                 jids.add(jid)
         elif kind == "child_done":
             jids.add(ev[1])
-        elif kind == "transfer_done":
+        elif kind in ("transfer_done", "transfer_failed"):
             node_id, raws = ev[1], ev[2]
             for raw in raws:
                 jids.update(self._inflight.pop((node_id, raw), []))
+        elif kind in ("retry_stage", "recompute"):
+            jids.update(self._inflight.pop(ev[1], []))
+        elif kind in ("cancel", "deadline"):
+            fut = ev[1]
+            if not fut.done():
+                fut.set_exception(exc)
+            jid = getattr(fut, "_jid", None)
+            if jid is not None:
+                jids.add(jid)
+        elif kind == "source_suspect":
+            return  # advisory only; no job to blame
         elif kind == "ran":
             jids.add(ev[2].job_id)
         elif kind == "tick":
             jids.add(ev[1])  # job-targeted speculation wakeup
         else:
-            # node_failed touches many jobs; no single owner to blame.
+            # node_failed / fault touch many jobs; no single owner to blame.
             self._fail_all(exc)
             return
         for jid in jids:
@@ -363,6 +458,7 @@ class Cluster:
         self._cancel_speculation(job)
         for f in job.futures:
             f.set_exception(exc)
+        self._run_on_fail(job, exc)
         self._notify_parents_exc(job, exc)
 
     def _fail_all(self, exc: BaseException) -> None:
@@ -375,11 +471,30 @@ class Cluster:
                     self.trace.emit("job_fail", job=job.id,
                                     error=type(exc).__name__)
                 self._cancel_speculation(job)
+                self._run_on_fail(job, exc)
+
+    def _run_on_fail(self, job: Job, exc: BaseException) -> None:
+        """Failure callbacks (scheduler thread): recompute jobs use these
+        so waiters blocked on them fail attributed instead of hanging."""
+        callbacks, job.on_fail = job.on_fail, []
+        for cb in callbacks:
+            try:
+                cb(job, exc)
+            except Exception:  # noqa: BLE001 — a callback must not cascade
+                pass
 
     # ------------------------------------------------------------- events
     def _on_submit(self, encode: Handle, fut: Optional[Future],
-                   parent: Optional[int], ignore_memo: bool) -> None:
+                   parent: Optional[int], ignore_memo: bool,
+                   deadline_s: Optional[float] = None) -> None:
         tr = self.trace
+        if fut is not None and deadline_s is not None:
+            # the deadline runs on the cluster clock (virtual deadlines are
+            # simulated seconds); completing first cancels the timer so the
+            # residual no-op fire never outlives the job
+            timer = self.clock.call_later(
+                deadline_s, lambda f=fut: self._events.put(("deadline", f)))
+            fut.add_done_callback(lambda _f, t=timer: t.cancel())
         if not ignore_memo:
             memo = self._memo.get(encode.raw)
             if memo is not None and self._find_source_name(memo) is not None:
@@ -394,6 +509,7 @@ class Cluster:
             if existing is not None and self._jobs[existing].phase != DONE:
                 job = self._jobs[existing]
                 if fut is not None:
+                    fut._jid = existing
                     job.futures.append(fut)
                 if parent is not None:
                     job.parents.append(parent)
@@ -402,6 +518,7 @@ class Cluster:
         job = Job(jid, encode, encode.unwrap_encode(), encode.interp == STRICT,
                   ignore_memo=ignore_memo)
         if fut is not None:
+            fut._jid = jid
             job.futures.append(fut)
         if parent is not None:
             job.parents.append(parent)
@@ -427,30 +544,187 @@ class Cluster:
 
     def _on_transfer_done(self, node_id: str, raws: tuple) -> None:
         for raw in raws:
-            waiters = self._inflight.pop((node_id, raw), [])
-            for jid in waiters:
-                job = self._jobs.get(jid)
-                if job is None or job.phase not in (STAGING, STRICT_STAGE):
-                    continue
-                job.staging.discard(raw)
-                if not job.staging:
-                    if job.phase == STAGING:
-                        self._enqueue_run(job)
-                    else:
-                        self._enqueue_strictify(job)
+            self._complete_stage(node_id, raw)
+
+    def _complete_stage(self, node_id: str, raw: bytes) -> None:
+        """A staged handle is settled for ``node_id`` (delivered, or its
+        plan toward a dead node was reaped): clear retry state and unblock
+        waiting jobs."""
+        key = (node_id, raw)
+        self._retry.pop(key, None)
+        self._retry_src.pop(key, None)
+        waiters = self._inflight.pop(key, [])
+        for jid in waiters:
+            job = self._jobs.get(jid)
+            if job is None or job.phase not in (STAGING, STRICT_STAGE):
+                continue
+            job.staging.discard(raw)
+            if not job.staging:
+                if job.phase == STAGING:
+                    self._enqueue_run(job)
+                else:
+                    self._enqueue_strictify(job)
+
+    # ------------------------------------------------------ fault recovery
+    def _live_waiter(self, jid: int, raw: bytes) -> bool:
+        """Is this waiter still a job actually blocked on ``raw``?  Jobs
+        re-placed after a node failure leave stale ids in the in-flight
+        table; retrying (or failing!) on their behalf would be wrong."""
+        job = self._jobs.get(jid)
+        return (job is not None and job.phase in (STAGING, STRICT_STAGE)
+                and raw in job.staging)
+
+    def _on_transfer_failed(self, node_id: str, raws: tuple, reason: str,
+                            src: Optional[str]) -> None:
+        """A plan (or single handle) was lost to a fault: retry with capped
+        exponential backoff, switching source when one is suspect."""
+        if reason == "corrupt" and src is not None:
+            self._check_source(src, raws)
+        node = self.nodes.get(node_id)
+        for raw in raws:
+            key = (node_id, raw)
+            h = Handle(raw)
+            if node is None or not node.alive:
+                # dst died anyway — the node-failure path re-places waiters
+                self._inflight.pop(key, None)
+                self._retry.pop(key, None)
+                self._retry_src.pop(key, None)
+                continue
+            if node.repo.contains(h):  # a parallel replica already landed
+                self._complete_stage(node_id, raw)
+                continue
+            if not any(self._live_waiter(jid, raw)
+                       for jid in self._inflight.get(key, [])):
+                self._give_up(key, h, "abandoned")
+                continue
+            attempts = self._retry.get(key, 0) + 1
+            self._retry[key] = attempts
+            if attempts > self.transfer_retries:
+                self._give_up(key, h, reason)
+                continue
+            if src is not None:
+                self._retry_src[key] = src  # prefer another replica next try
+            delay = min(self.retry_backoff_s * (2 ** (attempts - 1)),
+                        self.retry_backoff_max_s)
+            if self.trace is not None:
+                self.trace.emit("transfer_retry", dst=node_id,
+                                key=h.content_key().hex(), attempt=attempts,
+                                delay_s=delay, reason=reason)
+            self._pending_retries += 1
+            self.clock.call_later(
+                delay, lambda k=key: self._events.put(("retry_stage", k)))
+
+    def _on_retry_stage(self, key: tuple,
+                        parent: Optional[int] = None) -> None:
+        """Backoff elapsed (or a deferred recompute request): restage one
+        (node, raw) from the best surviving source, falling back to
+        lineage recompute."""
+        node_id, raw = key
+        if key not in self._inflight:
+            self._retry.pop(key, None)
+            self._retry_src.pop(key, None)
+            return
+        h = Handle(raw)
+        node = self.nodes.get(node_id)
+        if node is None or not node.alive:
+            self._inflight.pop(key, None)
+            self._retry.pop(key, None)
+            self._retry_src.pop(key, None)
+            return
+        if node.repo.contains(h):
+            self._complete_stage(node_id, raw)
+            return
+        if not any(self._live_waiter(jid, raw)
+                   for jid in self._inflight.get(key, [])):
+            self._give_up(key, h, "abandoned")
+            return
+        src = self._find_source_name(h, exclude=node_id,
+                                     avoid=self._retry_src.get(key),
+                                     dst=node_id)
+        payload = None
+        while src is not None:
+            payload = self._read_source(src, h)
+            if payload is not None:
+                break
+            src = self._find_source_name(h, exclude=node_id,
+                                         avoid=self._retry_src.get(key),
+                                         dst=node_id)
+        if src is None:
+            self._spawn_recompute(node, h, key, parent=parent)
+            return
+        size = h.size if h.content_type == BLOB else 32 * h.size
+        if self.trace is not None:
+            self.trace.emit("stage_request", job=None, dst=node_id,
+                            key=h.content_key().hex(), nbytes=size,
+                            action="enqueue", src=src,
+                            retry=self._retry.get(key, 0))
+        self._xfer.submit(src, node_id, [(h, payload, size)])
+
+    def _give_up(self, key: tuple, h: Handle, reason: str) -> None:
+        """Retry budget exhausted (or nothing left to retry for): fail the
+        jobs still blocked on this handle with an attributed, typed error
+        and drop the in-flight entry."""
+        node_id, raw = key
+        attempts = self._retry.pop(key, 0)
+        self._retry_src.pop(key, None)
+        waiters = self._inflight.pop(key, [])
+        failed: list[int] = []
+        key_hex = h.content_key().hex()
+        for jid in waiters:
+            job = self._jobs.get(jid)
+            if (job is None or job.phase not in (STAGING, STRICT_STAGE)
+                    or raw not in job.staging):
+                continue  # re-placed elsewhere; not this entry's casualty
+            if reason in ("unrecoverable", "recompute_failed"):
+                exc: Exception = DataUnrecoverable(key_hex, reason)
+            else:
+                exc = TransferFailed(key_hex, node_id, attempts, reason)
+            self._fail_job(job, exc)
+            failed.append(jid)
+        if self.trace is not None:
+            self.trace.emit("transfer_gaveup", dst=node_id, key=key_hex,
+                            attempts=attempts, reason=reason, jobs=failed)
+
+    def _scrub_resident(self, node: Node, needs: list) -> None:
+        """Fault plane active: re-verify this job's *resident* inputs before
+        dispatch, so a blob rotted at rest (``corrupt_blob``) is quarantined
+        and re-staged from a replica (or recomputed) instead of silently
+        feeding the computation a wrong byte."""
+        for h in needs:
+            if node.repo.contains(h) and not node.repo.verify_resident(h):
+                node.repo.quarantine(h)
+                self._locs.discard(h.content_key(), node.id)
+                if self.trace is not None:
+                    key_hex = h.content_key().hex()
+                    self.trace.emit("corruption_detected", src=node.id,
+                                    dst=node.id, key=key_hex, via="dispatch")
+                    self.trace.emit("quarantine", node=node.id, key=key_hex)
+
+    def _check_source(self, src_id: str, raws: tuple) -> None:
+        """A delivery from ``src_id`` failed content verification: if the
+        source's own copy is rotten (at-rest corruption), quarantine it and
+        drop it from the location index so retries use another replica."""
+        node = self.nodes.get(src_id)
+        if node is None or not node.alive:
+            return
+        for raw in raws:
+            h = Handle(raw)
+            if node.repo.contains(h) and not node.repo.verify_resident(h):
+                node.repo.quarantine(h)
+                self._locs.discard(h.content_key(), src_id)
+                if self.trace is not None:
+                    self.trace.emit("quarantine", node=src_id,
+                                    key=h.content_key().hex())
 
     def _on_ran(self, node: Node, item: WorkItem, result) -> None:
         job = self._jobs.get(item.job_id)
         if job is None or job.phase == DONE or item.epoch != job.epoch:
             return  # stale (straggler duplicate / failed-over epoch)
+        if isinstance(result, CorruptData):
+            self._recover_corrupt_read(job, result)
+            return
         if isinstance(result, BaseException):
-            for f in job.futures:
-                f.set_exception(result)
-            job.phase = DONE
-            if self.trace is not None:
-                self.trace.emit("job_fail", job=job.id,
-                                error=type(result).__name__)
-            self._notify_parents_exc(job, result)
+            self._fail_job(job, result)
             return
         if item.thunk is None:  # strictify op completed
             self._finalize(job, result)
@@ -471,6 +745,31 @@ class Cluster:
             self._finalize(job, out)
             return
         self._begin_strictify(job)
+
+    def _recover_corrupt_read(self, job: Job, exc: CorruptData) -> None:
+        """A run tripped over at-rest corruption (``verify_reads``): the
+        handle's bytes no longer match its digest.  Quarantine the rotten
+        copy, drop it from the location index, and replay the job from its
+        current step — re-placement finds the content missing and re-stages
+        it from a replica or recomputes it from lineage."""
+        h = exc.handle
+        if job.node is not None:
+            node = self.nodes.get(job.node)
+            if node is not None:
+                node.repo.quarantine(h)
+                self._locs.discard(h.content_key(), job.node)
+                if self.trace is not None:
+                    key_hex = h.content_key().hex()
+                    self.trace.emit("corruption_detected", src=job.node,
+                                    dst=job.node, key=key_hex, via="read")
+                    self.trace.emit("quarantine", node=job.node, key=key_hex)
+        job.epoch += 1
+        self._cancel_speculation(job)
+        if job.whnf is not None and job.strict:
+            self._begin_strictify(job)
+        else:
+            job.phase = RESOLVE
+            self._advance_or_restart(job)
 
     # ------------------------------------------------------------ advance
     def _advance_or_restart(self, job: Job) -> None:
@@ -501,7 +800,7 @@ class Cluster:
             job.phase = WAIT_CHILDREN
             job.pending_children = {c.raw for c in unresolved}
             for c in unresolved:
-                self._events.put(("submit", c, None, job.id, False))
+                self._events.put(("submit", c, None, job.id, False, None))
             # overlap child compute with data movement: stage what we
             # already know this job needs toward its tentative placement
             self._maybe_prefetch(needs)
@@ -516,6 +815,8 @@ class Cluster:
         for enc, res in memo_pairs:
             node.repo.memo_put(enc, res)
             node.repo.memo_put(enc.unwrap_encode(), res)
+        if self._fstate is not None:
+            self._scrub_resident(node, needs)
         missing = [h for h in needs if not node.repo.contains(h)]
         if self.trace is not None:
             self.trace.emit(
@@ -601,7 +902,7 @@ class Cluster:
             job.pending_children = {c.raw for c in unresolved}
             job._strict_children = children  # type: ignore[attr-defined]
             for c in unresolved:
-                self._events.put(("submit", c, None, job.id, False))
+                self._events.put(("submit", c, None, job.id, False, None))
             self._maybe_prefetch(stage, node_id=job.node)
             return
         job._strict_children = children  # type: ignore[attr-defined]
@@ -617,6 +918,8 @@ class Cluster:
             node.repo.memo_put(c, res)
             node.repo.memo_put(c.unwrap_encode(), res)
             needs.extend(self._deep_object_handles(res))
+        if self._fstate is not None:
+            self._scrub_resident(node, needs)
         missing = [h for h in needs if not node.repo.contains(h)]
         if missing:
             job.staging = self._stage_missing(node, missing, job.id)
@@ -671,6 +974,8 @@ class Cluster:
                 if self.trace is not None:
                     self.trace.emit("job_fail", job=parent.id,
                                     error=type(exc).__name__)
+                self._cancel_speculation(parent)
+                self._run_on_fail(parent, exc)
                 self._notify_parents_exc(parent, exc)
 
     # ----------------------------------------------------------- stepneeds
@@ -797,6 +1102,10 @@ class Cluster:
         one behind an idle fat pipe; this model can.
         """
         src_backlog, link_depth = self._xfer.backlog_snapshot()
+        # Fault-aware staging costs: degraded links stretch serialized
+        # time, a downed link is near-infinite (retries, maybe failover).
+        # fstate is None in no-fault runs, leaving the float math untouched.
+        fstate = self._fstate
         best, best_cost = None, None
         for n in candidates:
             per_src: dict[str, int] = {}
@@ -808,6 +1117,10 @@ class Cluster:
                     link = self.network.link(s, n.id)
                     c = (link.serialized_s(src_backlog.get(s, 0) + size)
                          + link.latency_s)
+                    if fstate is not None:
+                        c *= fstate.bandwidth_factor(s, n.id)
+                        if fstate.link_down(s, n.id):
+                            c += 1e6
                     if src_cost is None or c < src_cost:
                         src, src_cost = s, c
                 if src is None:
@@ -818,6 +1131,10 @@ class Cluster:
                 link = self.network.link(s, n.id)
                 t = (link.serialized_s(src_backlog.get(s, 0) + nbytes)
                      + link.latency_s * (1 + link_depth.get((s, n.id), 0)))
+                if fstate is not None:
+                    t *= fstate.bandwidth_factor(s, n.id)
+                    if fstate.link_down(s, n.id):
+                        t += 1e6
                 if t > cost:
                     cost = t
             cost += n.queue.qsize() * 1e-6
@@ -857,6 +1174,12 @@ class Cluster:
                             action="join")
                 continue
             src = self._find_source_name(h, exclude=node.id)
+            payload = None
+            while src is not None:
+                payload = self._read_source(src, h)
+                if payload is not None:
+                    break
+                src = self._find_source_name(h, exclude=node.id)
             if src is None:
                 if recompute:
                     pending.add(h.raw)
@@ -866,7 +1189,6 @@ class Cluster:
                                 action="recompute")
                     self._recompute_for(node, h, job_id)
                 continue
-            payload = self.nodes[src].repo.raw_payload(h)
             self._inflight[key] = list(waiters)
             pending.add(h.raw)
             if tr is not None:
@@ -902,60 +1224,148 @@ class Cluster:
             self.trace.emit("prefetch", node=node.id, n=len(cands))
         self._stage_missing(node, cands, None, recompute=False)
 
+    def _read_source(self, src: str, h: Handle):
+        """Read a transfer payload from a source replica, verified under
+        the fault plane.  A rotten copy is quarantined and a vanished one
+        forgotten — both return None so the caller moves to the next
+        replica.  Scheduler thread only (mutates the location index)."""
+        repo = self.nodes[src].repo
+        try:
+            return repo.raw_payload(h)
+        except CorruptData:
+            repo.quarantine(h)
+            self._locs.discard(h.content_key(), src)
+            if self.trace is not None:
+                self.trace.emit("quarantine", node=src,
+                                key=h.content_key().hex())
+        except MissingData:
+            self._locs.discard(h.content_key(), src)
+        return None
+
     def _recompute_for(self, node: Node, h: Handle, job_id: Optional[int]) -> None:
-        """No replica survives: recompute from lineage (determinism!)."""
+        """No replica survives: recompute from lineage (determinism!).
+
+        The decision is *deferred* to a scheduler event: this runs inside
+        ``_stage_missing``, before the caller has assigned ``job.staging``
+        — a synchronous no-lineage give-up here would phase-guard past the
+        very waiter it should fail, leaving it staged forever."""
         key = (node.id, h.raw)
         waiters = [job_id] if job_id is not None else []
+        self._inflight.setdefault(key, []).extend(waiters)
+        self._events.put(("recompute", key, job_id))
+
+    def _spawn_recompute(self, node: Node, h: Handle, key: tuple,
+                         parent: Optional[int] = None) -> None:
+        """Re-derive ``h`` from its producing Encode — any blob lost to a
+        crash, not just tail-call definitions.  No lineage (an input the
+        client never re-put) or a failing recompute gives up attributed:
+        waiters get DataUnrecoverable rather than hanging to a timeout."""
         enc = self._lineage.get(h.content_key())
         if enc is None:
-            self._inflight.setdefault(key, []).extend(waiters)
-            self._events.put(("transfer_done", node.id, (h.raw,)))  # will re-miss & fail
+            self._give_up(key, h, "unrecoverable")
             return
-        self._inflight[key] = list(waiters)
         jid = next(self._ids)
         rejob = Job(jid, enc, enc.unwrap_encode(), enc.interp == STRICT, ignore_memo=True)
         if self.trace is not None:
             self.trace.emit("job_submit", job=jid, encode=enc.raw.hex(),
-                            strict=rejob.strict, parent=job_id,
+                            strict=rejob.strict, parent=parent,
                             recompute=True)
         rejob.on_complete.append(
             lambda _j, node=node, h=h, key=key: self._retry_transfer(node, h, key)
+        )
+        rejob.on_fail.append(
+            lambda _j, _e, h=h, key=key: self._give_up(key, h, "recompute_failed")
         )
         self._jobs[jid] = rejob
         self._advance(rejob)
 
     def _retry_transfer(self, node: Node, h: Handle, key: tuple) -> None:
-        waiters = self._inflight.pop(key, [])
-        for jid in waiters:
-            job = self._jobs.get(jid)
-            if job is None or job.phase not in (STAGING, STRICT_STAGE):
-                continue
-            if self._stage_missing(node, [h], jid):
-                continue  # staged again (or rejoined); waiter re-registered
-            # already resident: unblock directly
-            job.staging.discard(h.raw)
-            if not job.staging:
-                if job.phase == STAGING:
-                    self._enqueue_run(job)
-                else:
-                    self._enqueue_strictify(job)
+        """A recompute finished (the content exists *somewhere* again):
+        restage toward the waiting node.  Attempts share the same capped
+        per-(node, key) budget as fault retries, so a recompute loop whose
+        output keeps dying cannot spin forever."""
+        if key not in self._inflight:
+            self._retry.pop(key, None)
+            self._retry_src.pop(key, None)
+            return
+        if not node.alive:
+            self._inflight.pop(key, None)
+            self._retry.pop(key, None)
+            self._retry_src.pop(key, None)
+            return
+        if node.repo.contains(h):  # recompute landed on the waiter's node
+            self._complete_stage(node.id, h.raw)
+            return
+        attempts = self._retry.get(key, 0) + 1
+        self._retry[key] = attempts
+        if attempts > self.transfer_retries:
+            self._give_up(key, h, "retry_cap")
+            return
+        src = self._find_source_name(h, exclude=node.id,
+                                     avoid=self._retry_src.get(key),
+                                     dst=node.id)
+        payload = None
+        while src is not None:
+            payload = self._read_source(src, h)
+            if payload is not None:
+                break
+            src = self._find_source_name(h, exclude=node.id,
+                                         avoid=self._retry_src.get(key),
+                                         dst=node.id)
+        if src is None:
+            # result already evicted again — re-derive once more (the
+            # attempts counter above bounds this loop)
+            self._spawn_recompute(node, h, key)
+            return
+        size = h.size if h.content_type == BLOB else 32 * h.size
+        if self.trace is not None:
+            self.trace.emit("stage_request", job=None, dst=node.id,
+                            key=h.content_key().hex(), nbytes=size,
+                            action="enqueue", src=src,
+                            retry=attempts)
+        self._xfer.submit(src, node.id, [(h, payload, size)])
 
     def _blocking_fetch(self, node: Node, h: Handle) -> None:
         """Internal-I/O mode: the worker performs the fetch while holding
         its slot (this is the starvation conventional platforms suffer).
         The wire choreography is the shared per-handle helper — the same
-        one ``transfer_mode="per_handle"`` replays."""
+        one ``transfer_mode="per_handle"`` replays.  Under fault injection
+        the fetch retries with the same capped backoff as externalized
+        staging — slot-held, so the wasted time is *accounted* as
+        starvation, exactly the cost internal I/O pays for faults."""
         if node.repo.contains(h):
             return
-        src = self._find_source_name(h, exclude=node.id)
-        if src is None:
-            raise MissingData(h)
-        size = h.size if h.content_type == BLOB else 32 * h.size
-        payload = self.nodes[src].repo.raw_payload(h)
-        single_transfer(self.clock, self.network, self.nodes,
-                        src, node.id, h, payload, size,
-                        trace=self.trace, via="blocking")
-        self._account_transfer(1, size)
+        attempts = 0
+        last_src: Optional[str] = None
+        while True:
+            src = self._find_source_name(h, exclude=node.id,
+                                         avoid=last_src, dst=node.id)
+            if src is None:
+                raise MissingData(h)
+            size = h.size if h.content_type == BLOB else 32 * h.size
+            try:
+                payload = self.nodes[src].repo.raw_payload(h)
+                status = single_transfer(self.clock, self.network, self.nodes,
+                                         src, node.id, h, payload, size,
+                                         trace=self.trace, via="blocking",
+                                         faults=self._fstate)
+                self._account_transfer(1, size)
+            except CorruptData:
+                # source copy rotted at rest: read verification caught it
+                # before any bytes moved — treat like a corrupt delivery
+                status = "corrupt"
+            if status in ("ok", "dst_dead"):
+                return
+            if status == "corrupt":
+                # scheduler owns quarantine decisions; post, don't mutate
+                self._events.put(("source_suspect", src, h.raw))
+            last_src = src
+            attempts += 1
+            if attempts > self.transfer_retries:
+                raise TransferFailed(h.content_key().hex(), node.id,
+                                     attempts, status)
+            self.clock.sleep(min(self.retry_backoff_s * (2 ** (attempts - 1)),
+                                 self.retry_backoff_max_s))
 
     def _account_transfer(self, n_transfers: int, n_bytes: int) -> None:
         self.transfers += n_transfers
@@ -980,6 +1390,124 @@ class Cluster:
         # drop in-flight transfer bookkeeping involving the dead node
         for key in [k for k in self._inflight if k[0] == node_id]:
             self._inflight.pop(key, None)
+        for key in [k for k in self._retry if k[0] == node_id]:
+            self._retry.pop(key, None)
+        for key in [k for k in self._retry_src if k[0] == node_id]:
+            self._retry_src.pop(key, None)
+
+    # ------------------------------------------------------ fault schedule
+    def _on_fault(self, f) -> None:
+        """Apply one schedule entry.  The ``fault`` trace event is emitted
+        before the injection's consequences so checkers can order cause
+        before effect; ``applied`` records no-op injections (e.g. crashing
+        an already-dead node) so every scheduled fault is accounted."""
+        applied = True
+        extra: dict = {}
+        node = self.nodes.get(f.node) if f.node is not None else None
+        if f.kind == "crash":
+            applied = (node is not None and node.alive
+                       and node is not self.client)
+        elif f.kind == "join":
+            applied = node is None or not node.alive
+        elif f.kind == "corrupt_blob":
+            key = (node.repo.corrupt_nth_blob(f.index)
+                   if node is not None and node.alive else None)
+            applied = key is not None
+            if key is not None:
+                extra["key"] = key.hex()
+        if self.trace is not None:
+            self.trace.emit("fault", fault=f.kind, node=f.node, src=f.src,
+                            dst=f.dst, count=f.count, factor=f.factor,
+                            applied=applied, **extra)
+        if not applied:
+            return
+        if f.kind == "crash":
+            node.kill()
+            self._on_node_failed(f.node)
+        elif f.kind == "join":
+            self._join_node(f.node, f.workers)
+        elif f.kind == "link_down":
+            self._fstate.set_link_down(f.src, f.dst, True)
+        elif f.kind == "link_up":
+            self._fstate.set_link_down(f.src, f.dst, False)
+        elif f.kind == "degrade":
+            self._fstate.set_factor(f.src, f.dst, f.factor)
+        elif f.kind == "degrade_end":
+            self._fstate.set_factor(f.src, f.dst, None)
+        elif f.kind == "drop":
+            self._fstate.add_drops(f.src, f.dst, f.count)
+        elif f.kind == "corrupt_wire":
+            self._fstate.add_corrupts(f.src, f.dst, f.count)
+
+    def _join_node(self, node_id: str, workers: int = 0) -> None:
+        """(Re)join a node.  A crashed node revives in place — empty store
+        (``kill`` wiped it), the same parked worker threads — and must be
+        rewired: listeners lived on the repo object kill() replaced.  An
+        unknown id becomes a brand-new worker node."""
+        node = self.nodes.get(node_id)
+        if node is not None:
+            node.revive()
+            self._wire_node(node_id, node)
+            if self.trace is not None:
+                self.trace.emit("node_join", node=node_id, fresh=False)
+            return
+        node = Node(node_id, workers or self._workers_per_node,
+                    self._node_ram, clock=self.clock, trace=self.trace)
+        self.nodes[node_id] = node
+        self._wire_node(node_id, node)
+        node.start(self._on_worker_done, fetcher=self._blocking_fetch)
+        if self.trace is not None:
+            self.trace.emit("node_join", node=node_id, fresh=True)
+
+    # ---------------------------------------------------- cancel / deadline
+    def _on_cancel(self, fut: Future) -> None:
+        self._terminate_future(fut, CancelledError("future cancelled"),
+                               "cancel")
+
+    def _on_deadline(self, fut: Future) -> None:
+        self._terminate_future(
+            fut, DeadlineExceeded("job deadline exceeded"), "deadline")
+
+    def _terminate_future(self, fut: Future, exc: BaseException,
+                          reason: str) -> None:
+        """Fail one future; if that leaves its job with no other waiter
+        (no future, no parent), abort the job and prune orphaned child
+        submissions."""
+        if fut.done():
+            return
+        fut.set_exception(exc)
+        jid = getattr(fut, "_jid", None)
+        job = self._jobs.get(jid) if jid is not None else None
+        if job is None or job.phase == DONE:
+            return
+        if fut in job.futures:
+            job.futures.remove(fut)
+        if not job.futures and not job.parents:
+            self._abort_job(job, reason, exc)
+
+    def _abort_job(self, job: Job, reason: str, exc: BaseException) -> None:
+        """Tear one job down cleanly: any straggler futures fail, in-flight
+        stage registrations are released, and children nobody else waits on
+        are aborted recursively."""
+        job.phase = DONE
+        if self.trace is not None:
+            self.trace.emit("job_cancel", job=job.id, reason=reason)
+        self._cancel_speculation(job)
+        for f in job.futures:
+            f.set_exception(exc)
+        self._run_on_fail(job, exc)
+        for key, waiters in list(self._inflight.items()):
+            if job.id in waiters:
+                waiters[:] = [w for w in waiters if w != job.id]
+        for raw in list(job.pending_children):
+            cid = self._by_encode.get(raw)
+            child = self._jobs.get(cid) if cid is not None else None
+            if child is None or child.phase == DONE:
+                continue
+            if job.id in child.parents:
+                child.parents.remove(job.id)
+            if not child.parents and not child.futures:
+                self._abort_job(child, reason, exc)
 
     # ----------------------------------------------------------- straggler
     def _on_tick(self, jid: int) -> None:
@@ -1027,16 +1555,33 @@ class Cluster:
         dup.queue.put(WorkItem(job.id, job.epoch, job.thunk))
 
     # ------------------------------------------------------------- lookups
-    def _find_source_name(self, h: Handle, exclude: Optional[str] = None) -> Optional[str]:
+    def _find_source_name(self, h: Handle, exclude: Optional[str] = None, *,
+                          avoid: Optional[str] = None,
+                          dst: Optional[str] = None) -> Optional[str]:
+        """Best live replica holder for ``h`` (index order, deterministic).
+
+        ``avoid`` demotes (without excluding) the source a failed attempt
+        used; with fault state present and ``dst`` given, sources behind a
+        downed link to ``dst`` are demoted too — both still serve as a
+        last resort, since a flaky replica beats none.  No-fault callers
+        see the exact pre-fault behaviour."""
         if h.is_literal:
             return "client"
         key = h.content_key()
+        demoted: list[str] = []
         for name in self._locs.nodes_for(key):
             if name == exclude:
                 continue
             n = self.nodes.get(name)
-            if n is not None and n.alive and n.repo.contains(h):
-                return name
+            if n is None or not n.alive or not n.repo.contains(h):
+                continue
+            if name == avoid or (self._fstate is not None and dst is not None
+                                 and self._fstate.link_down(name, dst)):
+                demoted.append(name)
+                continue
+            return name
+        if demoted:
+            return demoted[0]
         # Fallback scan: covers content that raced the index (and repairs it)
         for name, n in self.nodes.items():
             if name != exclude and n.alive and n.repo.contains(h):

@@ -1,0 +1,263 @@
+"""Deterministic fault-injection plane for the cluster runtime.
+
+A :class:`FaultSchedule` is a declarative list of faults pinned to
+*virtual-clock instants*; ``Cluster(faults=schedule)`` arms one timer per
+fault at startup, so the same seed + schedule always injects at the same
+simulated nanosecond and the whole run (including every recovery action)
+replays bit-identically.  Supported fault kinds:
+
+==================  =====================================================
+kind                effect
+==================  =====================================================
+``crash``           fail-stop a node (store wiped, workers drain)
+``join``            (re)join a node — a crashed node revives with an
+                    empty store, or a brand-new node id is added
+``link_down``       drop every plan on a directed link until ``link_up``
+``link_up``         re-enable a downed link
+``degrade``         multiply a link's serialization time by ``factor``
+``degrade_end``     restore the link's bandwidth
+``drop``            drop the next ``count`` plans on a link (transient)
+``corrupt_wire``    flip bytes in the next ``count`` deliveries on a link
+``corrupt_blob``    flip a byte of a resident blob on a node (at-rest)
+==================  =====================================================
+
+Transient link state (down links, degradation factors, pending drop and
+corruption budgets) lives in a :class:`FaultState` shared between the
+scheduler thread (which applies schedule entries) and the transfer plane's
+link workers (which consult it at serialization/delivery time); it is the
+only mutable coupling between the two and is guarded by one lock.
+
+The *errors* recovery can surface — :class:`TransferFailed`,
+:class:`DataUnrecoverable`, plus :class:`~repro.fix.future.CancelledError`
+and :class:`~repro.fix.future.DeadlineExceeded` re-exported from the
+frontend — are all typed, so a chaos harness can assert every failed job
+died for an attributed reason.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Iterable, Optional
+
+from ..core.handle import TREE, Handle
+from ..fix.future import CancelledError, DeadlineExceeded
+
+__all__ = [
+    "Fault",
+    "FaultSchedule",
+    "FaultState",
+    "FaultError",
+    "TransferFailed",
+    "DataUnrecoverable",
+    "CancelledError",
+    "DeadlineExceeded",
+    "corrupt_payload",
+]
+
+
+# ------------------------------------------------------------------ errors
+class FaultError(RuntimeError):
+    """Base class for attributed failures surfaced by fault recovery."""
+
+
+class TransferFailed(FaultError):
+    """Staging a blob to a node exhausted its retry budget."""
+
+    def __init__(self, key_hex: str, dst: str, attempts: int, reason: str):
+        super().__init__(
+            f"transfer of {key_hex[:16]} to {dst} failed after "
+            f"{attempts} attempt(s): {reason}")
+        self.key_hex = key_hex
+        self.dst = dst
+        self.attempts = attempts
+        self.reason = reason
+
+
+class DataUnrecoverable(FaultError):
+    """A needed blob has no surviving replica and no lineage to recompute
+    it from (or its recompute failed)."""
+
+    def __init__(self, key_hex: str, reason: str):
+        super().__init__(
+            f"content {key_hex[:16]} unrecoverable: {reason}")
+        self.key_hex = key_hex
+        self.reason = reason
+
+
+# ---------------------------------------------------------------- schedule
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled injection.  ``t`` is seconds after cluster start on
+    the cluster's clock; which other fields matter depends on ``kind``."""
+
+    t: float
+    kind: str
+    node: Optional[str] = None        # crash / join / corrupt_blob
+    src: Optional[str] = None         # link faults
+    dst: Optional[str] = None
+    count: int = 1                    # drop / corrupt_wire budget
+    factor: float = 1.0               # degrade multiplier
+    workers: int = 0                  # join: worker slots (0 = cluster default)
+    index: int = 0                    # corrupt_blob: which resident blob
+
+
+class FaultSchedule:
+    """Chainable builder for a deterministic fault timeline.
+
+    >>> sched = (FaultSchedule()
+    ...          .crash(at=0.05, node="n1")
+    ...          .join(at=0.20, node="n1")
+    ...          .link_down(at=0.02, src="s0", dst="n0", for_s=0.1)
+    ...          .drop(at=0.01, src="s0", dst="n2", count=2))
+
+    Durations (``for_s``) expand into paired up/down entries, so
+    :meth:`expanded` yields a flat, stably time-sorted list of
+    :class:`Fault` records — what ``Cluster`` arms timers from and what
+    the trace's ``fault`` events mirror one-to-one.
+    """
+
+    def __init__(self, faults: Iterable[Fault] = ()):  # noqa: D401
+        self._faults: list[Fault] = list(faults)
+
+    # each builder returns self so schedules read as one chained expression
+    def crash(self, at: float, node: str) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="crash", node=node))
+        return self
+
+    def join(self, at: float, node: str, workers: int = 0) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="join", node=node,
+                                  workers=workers))
+        return self
+
+    def link_down(self, at: float, src: str, dst: str,
+                  for_s: Optional[float] = None) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="link_down", src=src, dst=dst))
+        if for_s is not None:
+            self._faults.append(Fault(t=at + for_s, kind="link_up",
+                                      src=src, dst=dst))
+        return self
+
+    def link_up(self, at: float, src: str, dst: str) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="link_up", src=src, dst=dst))
+        return self
+
+    def degrade(self, at: float, src: str, dst: str, factor: float,
+                for_s: Optional[float] = None) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="degrade", src=src, dst=dst,
+                                  factor=factor))
+        if for_s is not None:
+            self._faults.append(Fault(t=at + for_s, kind="degrade_end",
+                                      src=src, dst=dst))
+        return self
+
+    def drop(self, at: float, src: str, dst: str,
+             count: int = 1) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="drop", src=src, dst=dst,
+                                  count=count))
+        return self
+
+    def corrupt_wire(self, at: float, src: str, dst: str,
+                     count: int = 1) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="corrupt_wire", src=src,
+                                  dst=dst, count=count))
+        return self
+
+    def corrupt_blob(self, at: float, node: str,
+                     index: int = 0) -> "FaultSchedule":
+        self._faults.append(Fault(t=at, kind="corrupt_blob", node=node,
+                                  index=index))
+        return self
+
+    def expanded(self) -> list[Fault]:
+        """The flat timeline, stably sorted by injection instant."""
+        return sorted(self._faults, key=lambda f: f.t)
+
+    def __len__(self) -> int:
+        return len(self._faults)
+
+
+# ------------------------------------------------------------- live state
+@dataclass
+class FaultState:
+    """Transient link state shared between scheduler and link workers.
+
+    The scheduler mutates it when a schedule entry fires; link workers
+    read it at serialization time (bandwidth factor) and delivery time
+    (down links, drop/corrupt budgets).  Budgets are consumed atomically
+    (``take_*``) so a count-2 drop hits exactly two plans regardless of
+    which worker threads race to deliver."""
+
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+    _down: set = field(default_factory=set)           # {(src, dst)}
+    _factors: dict = field(default_factory=dict)      # (src, dst) -> float
+    _drops: dict = field(default_factory=dict)        # (src, dst) -> remaining
+    _corrupts: dict = field(default_factory=dict)     # (src, dst) -> remaining
+
+    # scheduler-side setters
+    def set_link_down(self, src: str, dst: str, down: bool) -> None:
+        with self._lock:
+            if down:
+                self._down.add((src, dst))
+            else:
+                self._down.discard((src, dst))
+
+    def set_factor(self, src: str, dst: str, factor: Optional[float]) -> None:
+        with self._lock:
+            if factor is None or factor == 1.0:
+                self._factors.pop((src, dst), None)
+            else:
+                self._factors[(src, dst)] = factor
+
+    def add_drops(self, src: str, dst: str, count: int) -> None:
+        with self._lock:
+            self._drops[(src, dst)] = self._drops.get((src, dst), 0) + count
+
+    def add_corrupts(self, src: str, dst: str, count: int) -> None:
+        with self._lock:
+            self._corrupts[(src, dst)] = (
+                self._corrupts.get((src, dst), 0) + count)
+
+    # transfer-plane-side readers/consumers
+    def link_down(self, src: str, dst: str) -> bool:
+        with self._lock:
+            return (src, dst) in self._down
+
+    def bandwidth_factor(self, src: str, dst: str) -> float:
+        with self._lock:
+            return self._factors.get((src, dst), 1.0)
+
+    def take_drop(self, src: str, dst: str) -> bool:
+        with self._lock:
+            left = self._drops.get((src, dst), 0)
+            if left <= 0:
+                return False
+            self._drops[(src, dst)] = left - 1
+            return True
+
+    def take_corrupt(self, src: str, dst: str) -> bool:
+        with self._lock:
+            left = self._corrupts.get((src, dst), 0)
+            if left <= 0:
+                return False
+            self._corrupts[(src, dst)] = left - 1
+            return True
+
+
+# ----------------------------------------------------------------- helpers
+def corrupt_payload(handle: Handle, payload):
+    """Deterministically corrupt one delivery payload (flip the first
+    byte), preserving its python shape so the receiving repository's
+    verify-on-put — not a type error — is what catches it."""
+    if handle.content_type == TREE:
+        kids = list(payload)
+        if not kids:
+            return payload
+        first = bytearray(kids[0].raw)
+        first[0] ^= 0xFF
+        kids[0] = Handle(bytes(first))
+        return tuple(kids)
+    data = bytearray(payload)
+    if not data:
+        return payload
+    data[0] ^= 0xFF
+    return bytes(data)

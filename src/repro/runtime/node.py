@@ -79,6 +79,13 @@ class Node:
         self.repo = Repository(self.id + "-reborn")  # all local data lost
         self.evaluator = Evaluator(self.repo)
 
+    def revive(self) -> None:
+        """Rejoin after a crash: empty store (``kill`` already replaced
+        it), same worker threads — they kept draining-and-dropping while
+        dead and resume real work the moment ``alive`` flips.  The caller
+        (cluster) must rewire put listeners onto the reborn repository."""
+        self.alive = True
+
     # -------------------------------------------------------------- workers
     def _worker_loop(self, on_done: Callable) -> None:
         while True:

@@ -46,6 +46,7 @@ from typing import Callable, Optional
 
 from ..core import Handle
 from .clock import Clock, WallClock
+from .faults import corrupt_payload
 
 
 # ----------------------------------------------------------- location index
@@ -67,6 +68,16 @@ class LocationIndex:
     def add(self, key: bytes, node_id: str) -> None:
         with self._lock:
             self._locs.setdefault(key, {})[node_id] = None
+
+    def discard(self, key: bytes, node_id: str) -> None:
+        """Forget one (key, node) pair — e.g. a replica that failed
+        verification and was quarantined."""
+        with self._lock:
+            nodes = self._locs.get(key)
+            if nodes is not None:
+                nodes.pop(node_id, None)
+                if not nodes:
+                    del self._locs[key]
 
     def drop_node(self, node_id: str) -> None:
         """A node died (fail-stop): forget everything it held."""
@@ -115,18 +126,23 @@ class TransferPlan:
 # ----------------------------------------------------- one-handle transfer
 def single_transfer(clock: Clock, network, nodes: dict, src_id: str,
                     dst_id: str, h: Handle, payload, size: int,
-                    trace=None, via: str = "per_handle") -> bool:
+                    trace=None, via: str = "per_handle",
+                    faults=None) -> str:
     """Move ONE handle src → dst, paying link latency then the NIC-locked
     serialization share — the seed's per-handle wire model, shared by the
     cluster's internal-I/O blocking fetch (``via="blocking"``) and the
     ``per_handle`` transfer mode (previously two copies of the same sleep
     choreography).
 
-    Returns False when the destination died before install (the bytes were
-    still burned — that is the point of the fail-stop model).
+    Returns a status string: ``"ok"`` (delivered and verified),
+    ``"dst_dead"`` (destination died before install — bytes still burned,
+    that is the point of the fail-stop model), or under fault injection
+    ``"src_crash"`` / ``"link_down"`` / ``"dropped"`` / ``"corrupt"``.
     """
     link = network.link(src_id, dst_id)
     ser_s = link.serialized_s(size)
+    if faults is not None:
+        ser_s *= faults.bandwidth_factor(src_id, dst_id)
     clock.sleep(link.latency_s)
     src_node = nodes.get(src_id)
     if src_node is not None:
@@ -141,13 +157,38 @@ def single_transfer(clock: Clock, network, nodes: dict, src_id: str,
                        nbytes=size, ser_s=ser_s, via=via)
         clock.sleep(ser_s)
     dst = nodes.get(dst_id)
-    ok = dst is not None and dst.alive
-    if ok:
-        dst.repo.put_handle_data(h, payload)
+    if dst is None or not dst.alive:
+        if trace is not None:
+            trace.emit("transfer_deliver", src=src_id, dst=dst_id, n=1,
+                       nbytes=size, keys=[h.content_key().hex()], ok=False,
+                       via=via)
+        return "dst_dead"
+    status = "ok"
+    if faults is not None:
+        if src_node is not None and not src_node.alive:
+            status = "src_crash"
+        elif faults.link_down(src_id, dst_id):
+            status = "link_down"
+        elif faults.take_drop(src_id, dst_id):
+            status = "dropped"
+    if status != "ok":
+        if trace is not None:
+            trace.emit("transfer_drop", src=src_id, dst=dst_id, n=1,
+                       nbytes=size, keys=[h.content_key().hex()],
+                       reason=status, via=via)
+        return status
+    if faults is not None and faults.take_corrupt(src_id, dst_id):
+        payload = corrupt_payload(h, payload)
+    if not dst.repo.put_handle_data(h, payload):
+        if trace is not None:
+            trace.emit("corruption_detected", src=src_id, dst=dst_id,
+                       key=h.content_key().hex(), via=via)
+        return "corrupt"
     if trace is not None:
         trace.emit("transfer_deliver", src=src_id, dst=dst_id, n=1,
-                   nbytes=size, keys=[h.content_key().hex()], ok=ok, via=via)
-    return ok
+                   nbytes=size, keys=[h.content_key().hex()], ok=True,
+                   via=via)
+    return "ok"
 
 
 # -------------------------------------------------------------- link worker
@@ -176,6 +217,8 @@ class _LinkWorker:
             src_node = mgr.nodes.get(plan.src)
             nbytes = plan.total_bytes
             ser_s = link.serialized_s(nbytes)
+            if mgr.faults is not None:  # degraded link: slower serialization
+                ser_s *= mgr.faults.bandwidth_factor(plan.src, plan.dst)
             tr = mgr.trace
             if src_node is not None:
                 with src_node.nic_lock:  # the source NIC serializes the
@@ -205,7 +248,7 @@ class TransferManager:
 
     def __init__(self, network, nodes: dict, post_event: Callable,
                  account: Optional[Callable] = None, mode: str = "batched",
-                 clock: Optional[Clock] = None, trace=None):
+                 clock: Optional[Clock] = None, trace=None, faults=None):
         if mode not in ("batched", "per_handle"):
             raise ValueError(f"unknown transfer mode {mode!r}")
         self.network = network
@@ -213,6 +256,7 @@ class TransferManager:
         self.mode = mode
         self.clock = clock if clock is not None else WallClock()
         self.trace = trace
+        self.faults = faults  # FaultState shared with the scheduler, or None
         self._post = post_event
         self._account = account or (lambda n, b: None)
         self._workers: dict[tuple[str, str], _LinkWorker] = {}
@@ -223,6 +267,7 @@ class TransferManager:
         self._backlog_lock = threading.Lock()
         self._src_pending: dict[str, int] = {}        # bytes awaiting NIC
         self._link_pending: dict[tuple, int] = {}     # plans in flight
+        self._adhoc_pending = 0                       # per_handle in flight
 
     # --------------------------------------------------------------- backlog
     def src_backlog_bytes(self, src_id: str) -> int:
@@ -248,6 +293,13 @@ class TransferManager:
             left = self._src_pending.get(src_id, 0) - nbytes
             self._src_pending[src_id] = max(left, 0)
 
+    def pending(self) -> int:
+        """Transfers submitted but not yet delivered (plans + per-handle
+        items) — the scheduler's shutdown drain waits for this to hit 0 so
+        every in-flight transfer's completion event gets processed."""
+        with self._backlog_lock:
+            return sum(self._link_pending.values()) + self._adhoc_pending
+
     # ---------------------------------------------------------------- submit
     def submit(self, src_id: str, dst_id: str, items: list) -> None:
         """Move ``items`` = [(handle, payload, size), ...] src → dst."""
@@ -264,6 +316,8 @@ class TransferManager:
             # Seed behaviour: one thread, one latency charge, one NIC grab
             # and one scheduler event *per handle* — kept for A/B runs.
             self._account(len(plan.items), plan.total_bytes)
+            with self._backlog_lock:
+                self._adhoc_pending += len(plan.items)
             self._adhoc = [t for t in self._adhoc if t.is_alive()]
             for h, payload, size in plan.items:
                 self._adhoc.append(self.clock.spawn(
@@ -284,23 +338,69 @@ class TransferManager:
 
     # -------------------------------------------------------------- delivery
     def _deliver(self, plan: TransferPlan) -> None:
+        # ALWAYS post (see finally), even toward a dead node or past a
+        # failed install: waiting jobs must unblock (an undelivered handle
+        # re-misses and fails the job with the real error) and the
+        # scheduler's in-flight table must be reaped.  Fault paths replace
+        # the blanket completion with typed transfer_failed posts.
+        posts: list = [("transfer_done", plan.dst, plan.raws)]
         try:
             dst = self.nodes.get(plan.dst)
-            ok = dst is not None and dst.alive
-            if ok:
-                for h, payload, _size in plan.items:
-                    dst.repo.put_handle_data(h, payload)
-            if self.trace is not None:
+            if dst is None or not dst.alive:
+                # Dead destination: the bytes were burned for nothing.  The
+                # unconditional transfer_done below reaps the scheduler's
+                # in-flight table; waiting jobs re-place via node failure.
+                if self.trace is not None:
+                    self.trace.emit(
+                        "transfer_deliver", src=plan.src, dst=plan.dst,
+                        n=len(plan.items), nbytes=plan.total_bytes,
+                        keys=[h.content_key().hex() for h, _, _ in plan.items],
+                        ok=False, via="batched")
+                return
+            drop_reason = self._plan_fault(plan)
+            if drop_reason is not None:
+                # Whole-plan loss (source crashed mid-flight, link down, or
+                # an injected drop): nothing installs; the scheduler retries
+                # with backoff and possibly another source.
+                if self.trace is not None:
+                    self.trace.emit(
+                        "transfer_drop", src=plan.src, dst=plan.dst,
+                        n=len(plan.items), nbytes=plan.total_bytes,
+                        keys=[h.content_key().hex() for h, _, _ in plan.items],
+                        reason=drop_reason, via="batched")
+                posts = [("transfer_failed", plan.dst, plan.raws,
+                          drop_reason, plan.src)]
+                return
+            corrupt_first = (self.faults is not None
+                             and self.faults.take_corrupt(plan.src, plan.dst))
+            ok_items, bad_raws = [], []
+            for h, payload, size in plan.items:
+                if corrupt_first:
+                    payload = corrupt_payload(h, payload)
+                    corrupt_first = False
+                if dst.repo.put_handle_data(h, payload):
+                    ok_items.append((h, size))
+                else:
+                    bad_raws.append(h.raw)
+                    if self.trace is not None:
+                        self.trace.emit("corruption_detected", src=plan.src,
+                                        dst=plan.dst,
+                                        key=h.content_key().hex(),
+                                        via="batched")
+            if ok_items and self.trace is not None:
                 self.trace.emit(
                     "transfer_deliver", src=plan.src, dst=plan.dst,
-                    n=len(plan.items), nbytes=plan.total_bytes,
-                    keys=[h.content_key().hex() for h, _, _ in plan.items],
-                    ok=ok, via="batched")
+                    n=len(ok_items),
+                    nbytes=sum(size for _, size in ok_items),
+                    keys=[h.content_key().hex() for h, _ in ok_items],
+                    ok=True, via="batched")
+            if bad_raws:
+                posts = [("transfer_failed", plan.dst, tuple(bad_raws),
+                          "corrupt", plan.src)]
+                if ok_items:
+                    posts.append(("transfer_done", plan.dst,
+                                  tuple(h.raw for h, _ in ok_items)))
         finally:
-            # ALWAYS post, even toward a dead node or past a failed install:
-            # waiting jobs must unblock (an undelivered handle re-misses and
-            # fails the job with the real error) and the scheduler's
-            # in-flight table must be reaped.
             with self._backlog_lock:
                 key = (plan.src, plan.dst)
                 left = self._link_pending.get(key, 0) - 1
@@ -308,16 +408,40 @@ class TransferManager:
                     self._link_pending[key] = left
                 else:
                     self._link_pending.pop(key, None)
-            self._post(("transfer_done", plan.dst, plan.raws))
+            for p in posts:
+                self._post(p)
+
+    def _plan_fault(self, plan: TransferPlan) -> Optional[str]:
+        """Reason this plan is lost at delivery time, or None.  Only active
+        under fault injection — no-fault runs keep the eager-capture
+        semantics (a source dying mid-flight still delivers)."""
+        if self.faults is None:
+            return None
+        src_node = self.nodes.get(plan.src)
+        if src_node is not None and not src_node.alive:
+            return "src_crash"
+        if self.faults.link_down(plan.src, plan.dst):
+            return "link_down"
+        if self.faults.take_drop(plan.src, plan.dst):
+            return "dropped"
+        return None
 
     def _per_handle_xfer(self, src_id: str, dst_id: str, h: Handle,
                          payload, size: int) -> None:
+        status = "dst_dead"  # a crash below still unblocks the waiter
         try:
-            single_transfer(self.clock, self.network, self.nodes,
-                            src_id, dst_id, h, payload, size,
-                            trace=self.trace, via="per_handle")
+            status = single_transfer(self.clock, self.network, self.nodes,
+                                     src_id, dst_id, h, payload, size,
+                                     trace=self.trace, via="per_handle",
+                                     faults=self.faults)
         finally:
-            self._post(("transfer_done", dst_id, (h.raw,)))
+            with self._backlog_lock:  # decrement BEFORE posting: the post
+                self._adhoc_pending -= 1  # is what wakes the drain check
+            if status in ("ok", "dst_dead"):
+                self._post(("transfer_done", dst_id, (h.raw,)))
+            else:
+                self._post(("transfer_failed", dst_id, (h.raw,),
+                            status, src_id))
 
     # ------------------------------------------------------------- lifecycle
     def stop(self) -> None:

@@ -1,0 +1,111 @@
+"""Seeded chaos property suite: the fault-injection plane's end-to-end
+contract, checked across fixed seeds (tier-1) plus one rotating seed per
+CI build (the ``chaos`` job exports ``FIX_CHAOS_SEED``).
+
+Each seed derives a workload and a fault schedule scaled to the clean
+run's makespan (tests/workloads.py), then asserts the recovery
+invariant from the fault plane's design:
+
+* every job either completes with the *same content key* the clean run
+  produced, or fails with an attributed, typed error
+  (``ALLOWED_FAILURES``) — never a raw/unattributed exception;
+* the fault run's trace passes every invariant in
+  ``verify_invariants``, including the fault-mode rules (every injected
+  loss answered by a delivery, retry, give-up, crash, or recompute);
+* re-running the identical seeded schedule yields a byte-identical
+  JSONL trace (bit-exact replay under faults).
+
+A failing seed dumps its trace under ``fuzz-artifacts/`` for CI upload;
+reproduce locally with::
+
+    FIX_CHAOS_SEED=<seed> PYTHONPATH=src python -m pytest \
+        tests/test_chaos_properties.py -k rotating
+"""
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.runtime import TraceRecorder
+
+import sys
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+from workloads import (  # noqa: E402
+    make_chaos_spec, make_fault_schedule, run_chaos_case, run_workload)
+
+pytestmark = pytest.mark.usefixtures("no_thread_leaks")
+
+CHAOS_SEEDS = list(range(20))       # fixed "examples" tier-1 runs
+REPLAY_SEEDS = [0, 4, 13]           # double-run bit-identity spot checks
+
+
+def _dump_on_failure(recorders: dict, tag: str):
+    """Write the failing case's trace(s) where CI can upload them."""
+    out = Path(os.environ.get("FIX_FUZZ_ARTIFACTS", "fuzz-artifacts"))
+    out.mkdir(parents=True, exist_ok=True)
+    for name, rec in recorders.items():
+        rec.save(out / f"{tag}-{name}.jsonl")
+
+
+def _check_chaos_seed(seed: int) -> None:
+    """One seed's full recovery-contract bundle (see module docstring)."""
+    tr = TraceRecorder()
+    try:
+        r = run_chaos_case(seed, trace=tr)
+        assert not r["mismatches"], (
+            f"seed {seed}: completed jobs diverged from clean results: "
+            f"{r['mismatches']}")
+        assert not r["bad_failures"], (
+            f"seed {seed}: unattributed failure types: {r['bad_failures']}")
+        assert not r["violations"], (
+            f"seed {seed}: trace invariant violations: {r['violations']}")
+    except BaseException:
+        _dump_on_failure({"fault-run": tr}, f"chaos-seed{seed}")
+        raise
+
+
+def _check_chaos_replay(seed: int) -> None:
+    """Two runs of the identical seeded fault schedule must emit
+    byte-identical traces — the replay half of the fault-plane invariant."""
+    spec = make_chaos_spec(seed)
+    clean = run_workload(spec)
+    horizon = max(clean["makespan"], 1e-4)
+    r1, r2 = TraceRecorder(), TraceRecorder()
+    try:
+        o1 = run_workload(spec, faults=make_fault_schedule(seed, spec, horizon),
+                          tolerate_failures=True, trace=r1)
+        o2 = run_workload(spec, faults=make_fault_schedule(seed, spec, horizon),
+                          tolerate_failures=True, trace=r2)
+        assert r1.to_jsonl() == r2.to_jsonl(), \
+            f"seed {seed}: double-run fault traces differ"
+        assert o1["outcomes"] == o2["outcomes"], \
+            f"seed {seed}: double-run outcomes differ"
+    except BaseException:
+        _dump_on_failure({"run1": r1, "run2": r2}, f"chaos-replay-seed{seed}")
+        raise
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_chaos_recovery_contract(seed):
+    _check_chaos_seed(seed)
+
+
+@pytest.mark.parametrize("seed", REPLAY_SEEDS)
+def test_chaos_replay_bit_identical(seed):
+    _check_chaos_replay(seed)
+
+
+def test_rotating_seed_chaos(capsys):
+    """CI-only: one fresh seed per build, printed for reproduction.  Local
+    runs (no FIX_CHAOS_SEED in the environment) skip."""
+    raw = os.environ.get("FIX_CHAOS_SEED")
+    if raw is None:
+        pytest.skip("rotating chaos seed not set (CI chaos job exports "
+                    "FIX_CHAOS_SEED)")
+    seed = int(raw)
+    with capsys.disabled():
+        print(f"\n[chaos] rotating seed: {seed}  (repro: FIX_CHAOS_SEED={seed} "
+              f"PYTHONPATH=src python -m pytest "
+              f"tests/test_chaos_properties.py -k rotating)")
+    _check_chaos_seed(seed)
+    _check_chaos_replay(seed)

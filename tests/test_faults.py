@@ -1,0 +1,376 @@
+"""Targeted tests for the deterministic fault-injection plane and every
+recovery mechanism it exercises: transfer retry/backoff, alternate-source
+failover, corruption detection (on the wire, at rest, at read), node churn
+with LocationIndex/in-flight cleanup, lineage recompute, cancellation and
+deadlines.
+
+Each test pins ONE mechanism with a hand-built :class:`FaultSchedule` on a
+small virtual-clock cluster; the seeded end-to-end properties (any schedule
+→ every job completes-or-fails-attributed, bit-identical replay) live in
+tests/test_chaos_properties.py.
+"""
+import sys
+from pathlib import Path
+
+import pytest
+
+import repro.fix as fix
+from repro.core.stdlib import add, checksum_tree, count_string, fib, slice_blob
+from repro.runtime import (
+    Cluster,
+    DataUnrecoverable,
+    FaultSchedule,
+    Link,
+    Network,
+    TraceRecorder,
+    TransferFailed,
+    VirtualClock,
+    verify_invariants,
+)
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+pytestmark = pytest.mark.usefixtures("no_thread_leaks")
+
+# A thin pipe everywhere: 16 KB takes ~13 ms of virtual time to serialize,
+# so faults scheduled in the first few milliseconds land while transfers
+# are genuinely in flight.
+SLOW = Network(Link(latency_s=0.0002, gbps=0.01))
+PAYLOAD = bytes(range(256)) * 64  # 16 KB
+
+
+def make_cluster(faults=None, trace=None, **kw) -> tuple[Cluster, VirtualClock]:
+    clk = VirtualClock()
+    kw.setdefault("n_nodes", 2)
+    kw.setdefault("workers_per_node", 1)
+    kw.setdefault("storage_nodes", ("s0",))
+    kw.setdefault("network", SLOW)
+    c = Cluster(clock=clk, seed=0, trace=trace, faults=faults, **kw)
+    return c, clk
+
+
+def storage_job(c: Cluster, n_blobs: int = 2):
+    """A checksum over blobs resident only on s0 — every worker placement
+    must stage them over the (slow) network."""
+    store = c.nodes["s0"].repo
+    blobs = [store.put_blob(bytes([i]) + PAYLOAD) for i in range(n_blobs)]
+    return checksum_tree(store.put_tree(blobs))
+
+
+def expected_checksum(n_blobs: int = 2):
+    """The same job on a pristine fault-free cluster."""
+    c, clk = make_cluster()
+    try:
+        return fix.on(c).submit(storage_job(c, n_blobs)).result(timeout=120)
+    finally:
+        c.shutdown()
+        clk.close()
+
+
+def kinds(trace: TraceRecorder) -> list[str]:
+    return [ev.kind for ev in trace.events]
+
+
+class TestTransferRecovery:
+    def test_drop_is_retried_to_completion(self):
+        """A transient plan drop delays the job; the backoff retry delivers
+        the same bytes and the result is unchanged."""
+        want = expected_checksum()
+        tr = TraceRecorder()
+        faults = FaultSchedule().drop(0.0, "s0", "n0").drop(0.0, "s0", "n1")
+        c, clk = make_cluster(faults=faults, trace=tr)
+        try:
+            got = fix.on(c).submit(storage_job(c)).result(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert got.raw == want.raw
+        ks = kinds(tr)
+        assert "transfer_drop" in ks and "transfer_retry" in ks
+        assert not verify_invariants(tr.events)
+
+    def test_permanent_link_down_fails_attributed(self):
+        """With one worker and its only source unreachable, retries cap out
+        and the waiting job fails with a typed TransferFailed."""
+        tr = TraceRecorder()
+        faults = FaultSchedule().link_down(0.0, "s0", "n0")
+        c, clk = make_cluster(faults=faults, trace=tr, n_nodes=1)
+        try:
+            exc = fix.on(c).submit(storage_job(c)).exception(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert isinstance(exc, TransferFailed)
+        assert exc.dst == "n0" and exc.attempts > 1
+        gaveups = [ev for ev in tr.events if ev.kind == "transfer_gaveup"]
+        assert gaveups and all(ev.fields["jobs"] for ev in gaveups[:1])
+        assert not verify_invariants(tr.events)
+
+    def test_wire_corruption_detected_and_refetched(self):
+        """Bytes flipped in flight are rejected by content verification at
+        delivery and re-fetched; the job still produces the clean result."""
+        want = expected_checksum()
+        tr = TraceRecorder()
+        faults = (FaultSchedule()
+                  .corrupt_wire(0.0, "s0", "n0")
+                  .corrupt_wire(0.0, "s0", "n1"))
+        c, clk = make_cluster(faults=faults, trace=tr)
+        try:
+            got = fix.on(c).submit(storage_job(c)).result(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert got.raw == want.raw
+        assert "corruption_detected" in kinds(tr)
+        assert not verify_invariants(tr.events)
+
+    def test_degraded_link_slows_but_completes(self):
+        """Bandwidth degradation stretches the makespan but changes no
+        bytes: same result, degrade faults visible in the trace."""
+        want = expected_checksum()
+        tr = TraceRecorder()
+        faults = FaultSchedule().degrade(0.0, "s0", "n0", factor=8.0,
+                                         for_s=10.0)
+        c, clk = make_cluster(faults=faults, trace=tr)
+        try:
+            got = fix.on(c).submit(storage_job(c)).result(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert got.raw == want.raw
+        assert not verify_invariants(tr.events)
+
+
+class TestCorruptionAtRest:
+    def test_resident_corruption_quarantined_and_failed_over(self):
+        """corrupt_blob rots a worker-resident input; dispatch-time (or
+        read-time) verification quarantines it and the replica on s0 is
+        fetched instead — the result is the clean one."""
+        tr = TraceRecorder()
+        faults = FaultSchedule().corrupt_blob(0.0, "n0", index=0)
+        c, clk = make_cluster(faults=faults, trace=tr)
+        try:
+            payload = bytes([7]) + PAYLOAD
+            c.nodes["n0"].repo.put_blob(payload)        # the copy that rots
+            blob = c.nodes["s0"].repo.put_blob(payload)  # surviving replica
+            tree = c.nodes["s0"].repo.put_tree([blob])
+            got = fix.on(c).submit(checksum_tree(tree)).result(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        ks = kinds(tr)
+        assert "quarantine" in ks
+        assert got is not None
+        assert not verify_invariants(tr.events)
+
+    def test_sole_copy_corrupted_no_lineage_fails_attributed(self):
+        """When the rotted blob has no replica and no lineage, the job dies
+        with DataUnrecoverable — never a wrong answer, never a hang."""
+        tr = TraceRecorder()
+        # empty schedule still arms the fault plane (verify-on-read etc.)
+        c, clk = make_cluster(faults=FaultSchedule(), trace=tr, n_nodes=1)
+        try:
+            repo = c.nodes["s0"].repo
+            blob = repo.put_blob(bytes([9]) + PAYLOAD)
+            tree = repo.put_tree([blob])
+            rotten = bytearray(repo._blobs[blob.content_key()])
+            rotten[0] ^= 0xFF                     # rot the only copy at rest
+            repo._blobs[blob.content_key()] = bytes(rotten)
+            exc = fix.on(c).submit(checksum_tree(tree)).exception(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert isinstance(exc, (DataUnrecoverable, TransferFailed))
+        assert not verify_invariants(tr.events)
+
+
+class TestNodeChurn:
+    def test_crash_and_rejoin_traced(self):
+        """A crashed worker rejoins with an empty store; the job survives
+        via re-placement and both lifecycle events are recorded."""
+        tr = TraceRecorder()
+        faults = (FaultSchedule()
+                  .crash(0.005, "n1")
+                  .join(0.02, "n1"))
+        c, clk = make_cluster(faults=faults, trace=tr, n_nodes=3)
+        try:
+            got = fix.on(c).submit(storage_job(c, 3)).result(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert got is not None
+        crashes = [ev for ev in tr.events
+                   if ev.kind == "fault" and ev.fields["fault"] == "crash"]
+        assert crashes and crashes[0].fields["applied"]
+        joins = [ev for ev in tr.events if ev.kind == "node_join"]
+        assert joins and joins[0].fields == {"node": "n1", "fresh": False}
+        assert not verify_invariants(tr.events)
+
+    def test_join_brand_new_node_extends_cluster(self):
+        """Joining an unknown id adds a fresh worker that can host work."""
+        tr = TraceRecorder()
+        faults = FaultSchedule().join(0.001, "n9", workers=2)
+        c, clk = make_cluster(faults=faults, trace=tr)
+        try:
+            got = fix.on(c).submit(storage_job(c)).result(timeout=120)
+            assert "n9" in c.nodes and c.nodes["n9"].alive
+        finally:
+            c.shutdown()
+            clk.close()
+        assert got is not None
+        joins = [ev for ev in tr.events if ev.kind == "node_join"]
+        assert joins and joins[0].fields["fresh"] is True
+
+    def test_sole_holder_crash_without_lineage_unrecoverable(self):
+        """Crash the only node holding an input before it can be served:
+        no replica, no lineage — the consumer fails attributed."""
+        tr = TraceRecorder()
+        faults = FaultSchedule().crash(0.0, "n1")
+        c, clk = make_cluster(faults=faults, trace=tr, n_nodes=2)
+        try:
+            blob = c.nodes["n1"].repo.put_blob(bytes([3]) + PAYLOAD)
+            tree = c.nodes["s0"].repo.put_tree([blob])
+            exc = fix.on(c).submit(checksum_tree(tree)).exception(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert isinstance(exc, (DataUnrecoverable, TransferFailed))
+        assert not verify_invariants(tr.events)
+
+    def test_crash_drives_lineage_recompute(self):
+        """A derived blob lost to a crash is recomputed from its producing
+        Encode (lineage) and the consumer completes with the right answer."""
+        c, clk = make_cluster(faults=FaultSchedule(), n_nodes=3,
+                              network=Network(Link(latency_s=0.0005, gbps=10)))
+        try:
+            be = fix.on(c)
+            corpus = be.repo.put_blob(bytes(range(256)) * 1000)
+            out1 = be.evaluate(slice_blob(corpus, 1000, 500), timeout=60)
+            holders = [n.id for n in c.worker_nodes()
+                       if n.repo.contains(out1)]
+            assert holders
+            for nid in holders[:len(c.worker_nodes()) - 1]:
+                c.kill_node(nid)
+            for n in c.worker_nodes():   # wipe any survivor's copy too
+                n.repo._blobs.pop(out1.content_key(), None)
+            c._locs.drop_node("nowhere")  # no-op; index already pruned
+            out2 = be.run(count_string(out1.as_object(), bytes([232])),
+                          timeout=60)
+            assert out2 >= 1
+        finally:
+            c.shutdown()
+            clk.close()
+
+    def test_kill_node_races_inflight_transfers_and_prefetch(self):
+        """Satellite: kill a node while TransferPlans toward it (and
+        prefetches) are in flight.  No worker thread dies, the surviving
+        nodes finish the work, and both the LocationIndex and the
+        in-flight dedup map drop every entry for the dead node."""
+        c, clk = make_cluster(n_nodes=3, workers_per_node=2)
+        try:
+            be = fix.on(c)
+            futs = [be.submit(storage_job(c, 3)) for _ in range(4)]
+            futs.append(be.submit(fib(8)))      # fan-out → prefetch pass
+            import time as _time
+            _time.sleep(0.02)                   # let staging start
+            c.kill_node("n1")
+            results = [f.result(timeout=300) for f in futs]
+            assert all(r is not None for r in results)
+            # location index holds nothing for n1 (its store is gone)
+            assert all("n1" not in nodes
+                       for nodes in c._locs._locs.values())
+            # in-flight transfer dedup map dropped the dead destination
+            assert all(k[0] != "n1" for k in c._inflight)
+            assert all(k[0] != "n1" for k in c._retry)
+            # the cluster still schedules new work (no thread death)
+            assert be.run(add(1, 2), timeout=60) == 3
+        finally:
+            c.shutdown()
+            clk.close()
+
+
+class TestCancelAndDeadline:
+    def test_future_cancel_prunes_children(self):
+        """Cancelling the only waiter aborts the job tree: the future
+        raises CancelledError and orphaned child submissions are
+        job_cancel'ed rather than left running."""
+        tr = TraceRecorder()
+        c, clk = make_cluster(trace=tr)
+        try:
+            fut = fix.on(c).submit(storage_job(c, 4))
+            fut.cancel()
+            with pytest.raises(Exception) as ei:
+                fut.result(timeout=120)
+            assert type(ei.value).__name__ in ("CancelledError",)
+            assert fut.cancelled()
+            # the scheduler survives and accepts new work
+            assert fix.on(c).run(add(2, 3), timeout=60) == 5
+        finally:
+            c.shutdown()
+            clk.close()
+        assert any(ev.kind == "job_cancel" and ev.fields["reason"] == "cancel"
+                   for ev in tr.events)
+
+    def test_deadline_exceeded_is_typed_and_attributed(self):
+        """A per-job deadline shorter than the (slow) staging fails that
+        job with DeadlineExceeded; unrelated jobs are untouched."""
+        tr = TraceRecorder()
+        c, clk = make_cluster(trace=tr)
+        try:
+            be = fix.on(c)
+            doomed = be.submit(storage_job(c, 3), deadline_s=0.001)
+            fine = be.submit(add(40, 2))
+            exc = doomed.exception(timeout=120)
+            assert type(exc).__name__ == "DeadlineExceeded"
+            assert fine.result(timeout=60) is not None
+        finally:
+            c.shutdown()
+            clk.close()
+        assert any(ev.kind == "job_cancel" and ev.fields["reason"] == "deadline"
+                   for ev in tr.events)
+
+    def test_local_backend_deadline_and_cancel_api(self):
+        """The frontend surface works on the in-process backend too: a
+        generous deadline doesn't fire, and results are unchanged."""
+        with fix.local() as be:
+            assert be.submit(add(20, 22), deadline_s=60.0).result(
+                timeout=30) is not None
+
+
+class TestInternalIOFaults:
+    def test_blocking_fetch_survives_drops(self):
+        """Internal-I/O mode: the slot-held blocking fetch retries through
+        transient drops and the starved job still completes correctly."""
+        tr = TraceRecorder()
+        faults = FaultSchedule().drop(0.0, "s0", "n0", count=2)
+        c, clk = make_cluster(faults=faults, trace=tr, n_nodes=1,
+                              io_mode="internal")
+        try:
+            got = fix.on(c).submit(storage_job(c)).result(timeout=120)
+        finally:
+            c.shutdown()
+            clk.close()
+        assert got is not None
+        assert not verify_invariants(tr.events)
+
+
+class TestDeterminism:
+    def test_fault_run_replays_bit_identical(self):
+        """The same schedule on the same workload yields byte-identical
+        trace JSONL — faults, retries, recoveries and all."""
+        dumps = []
+        for _ in range(2):
+            tr = TraceRecorder()
+            faults = (FaultSchedule()
+                      .drop(0.0, "s0", "n0")
+                      .corrupt_wire(0.0, "s0", "n1")
+                      .crash(0.01, "n1")
+                      .join(0.05, "n1"))
+            c, clk = make_cluster(faults=faults, trace=tr, n_nodes=3)
+            try:
+                fix.on(c).submit(storage_job(c, 3)).result(timeout=120)
+            finally:
+                c.shutdown()
+                clk.close()
+            dumps.append(tr.to_jsonl())
+        assert dumps[0] == dumps[1]

@@ -33,10 +33,12 @@ import repro.fix as fix  # noqa: E402
 from repro.core.stdlib import add, checksum_tree, fib, inc_chain, merge_counts  # noqa: E402
 from repro.runtime import (  # noqa: E402
     Cluster,
+    FaultSchedule,
     Link,
     Network,
     TraceRecorder,
     VirtualClock,
+    verify_invariants,
 )
 
 FIXTURE = str(Path(__file__).resolve().parent / "fixtures"
@@ -134,18 +136,28 @@ def _blob_payload(spec: WorkloadSpec, j: int, i: int) -> bytes:
 
 
 def run_workload(spec: WorkloadSpec, *, placement: str = "locality",
-                 trace: TraceRecorder | None = None) -> dict:
+                 trace: TraceRecorder | None = None,
+                 faults: FaultSchedule | None = None,
+                 tolerate_failures: bool = False,
+                 first_deadline_s: float | None = None) -> dict:
     """Run one generated case under a ``VirtualClock``; returns the
     schedule summary (and fills ``trace`` when given).  Internal-I/O
     specs park every input on storage so each job's fetches are
-    guaranteed remote (that is the starvation being measured)."""
+    guaranteed remote (that is the starvation being measured).
+
+    ``faults`` installs a seeded injection schedule; with
+    ``tolerate_failures`` each future resolves independently and the
+    summary gains ``outcomes`` — ``("ok", result_hex)`` or
+    ``("fail", exception_type_name)`` per job, in submission order.
+    ``first_deadline_s`` puts a deadline on the first submission only
+    (the chaos suite's cancellation-path coverage)."""
     rng = random.Random(spec.seed)
     net = build_network(spec, rng)
     clk = VirtualClock()
     c = Cluster(n_nodes=spec.n_nodes, workers_per_node=spec.workers_per_node,
                 storage_nodes=("s0",), network=net, placement=placement,
                 io_mode=spec.io_mode, transfer_mode=spec.transfer_mode,
-                clock=clk, seed=spec.seed, trace=trace)
+                clock=clk, seed=spec.seed, trace=trace, faults=faults)
     try:
         be = fix.on(c)
         store = c.nodes["s0"]
@@ -168,8 +180,22 @@ def run_workload(spec: WorkloadSpec, *, placement: str = "locality",
                 merged.append(jobs[-1])
             jobs = merged
         t0 = clk.now()
-        futs = [be.submit(j) for j in jobs]
-        results = [f.result(timeout=600) for f in futs]
+        futs = [be.submit(j, deadline_s=first_deadline_s if i == 0 else None)
+                for i, j in enumerate(jobs)]
+        outcomes: list[tuple[str, str]] = []
+        results = []
+        for f in futs:
+            if tolerate_failures:
+                try:
+                    h = f.result(timeout=600)
+                    results.append(h)
+                    outcomes.append(("ok", h.raw.hex()))
+                except Exception as e:  # noqa: BLE001 — outcome, not crash
+                    outcomes.append(("fail", type(e).__name__))
+            else:
+                h = f.result(timeout=600)
+                results.append(h)
+                outcomes.append(("ok", h.raw.hex()))
         makespan = clk.now() - t0
         util = c.utilization(makespan)
         return {
@@ -179,10 +205,116 @@ def run_workload(spec: WorkloadSpec, *, placement: str = "locality",
             "busy_frac": util["busy_frac"],
             "starved_frac": util["starved_frac"],
             "results": tuple(h.raw.hex() for h in results),
+            "outcomes": tuple(outcomes),
         }
     finally:
         c.shutdown()
         clk.close()
+
+
+# ------------------------------------------------------------ chaos cases
+#: failure types the recovery plane is allowed to surface — anything else
+#: (KeyError, RuntimeError, a bare Exception) is an unattributed bug.
+ALLOWED_FAILURES = frozenset({
+    "TransferFailed", "DataUnrecoverable", "DeadlineExceeded",
+    "CancelledError", "MissingData"})
+
+
+def make_chaos_spec(seed: int) -> WorkloadSpec:
+    """A workload tuned for fault runs: enough replication that failover
+    has somewhere to go, always externalized I/O (the mode the recovery
+    plane schedules for)."""
+    rng = random.Random(seed * 6691 + 7)
+    return WorkloadSpec(
+        seed=seed,
+        n_nodes=rng.randint(3, 5),
+        workers_per_node=rng.randint(1, 2),
+        n_jobs=rng.randint(4, 8),
+        inputs_per_job=rng.randint(2, 4),
+        blob_kb=rng.choice((16, 40, 64)),
+        fanin=rng.random() < 0.35,
+        replica_p=0.3 + rng.random() * 0.5,
+        io_mode="external",
+        transfer_mode="per_handle" if rng.random() < 0.15 else "batched",
+    )
+
+
+def make_fault_schedule(seed: int, spec: WorkloadSpec,
+                        horizon: float) -> FaultSchedule:
+    """Derive a seeded injection schedule scaled to ``horizon`` (the
+    clean run's makespan): node churn (never all workers at once, so the
+    cluster always has somewhere to run), link flaps and degradation,
+    transfer drops, wire and at-rest corruption."""
+    rng = random.Random(seed * 5077 + 29)
+    fs = FaultSchedule()
+    workers = [f"n{i}" for i in range(spec.n_nodes)]
+    sites = workers + ["s0"]
+    n_crash = rng.randint(0, spec.n_nodes - 1)  # >= 1 worker survives
+    for victim in rng.sample(workers, n_crash):
+        t = rng.uniform(0.05, 0.9) * horizon
+        fs.crash(t, victim)
+        if rng.random() < 0.6:
+            fs.join(t + rng.uniform(0.05, 0.3) * horizon, victim)
+    if rng.random() < 0.25:  # storage loss: only lineage saves its data
+        fs.crash(rng.uniform(0.3, 0.9) * horizon, "s0")
+    for _ in range(rng.randint(0, 3)):
+        src, dst = rng.sample(sites, 2)
+        fs.link_down(rng.uniform(0.0, 0.8) * horizon, src, dst,
+                     for_s=rng.uniform(0.05, 0.4) * horizon)
+    for _ in range(rng.randint(0, 2)):
+        src, dst = rng.sample(sites, 2)
+        fs.degrade(rng.uniform(0.0, 0.8) * horizon, src, dst,
+                   factor=rng.uniform(2.0, 10.0),
+                   for_s=rng.uniform(0.1, 0.5) * horizon)
+    for _ in range(rng.randint(0, 3)):
+        src, dst = rng.sample(sites, 2)
+        fs.drop(rng.uniform(0.0, 0.8) * horizon, src, dst,
+                count=rng.randint(1, 3))
+    for _ in range(rng.randint(0, 2)):
+        src, dst = rng.sample(sites, 2)
+        fs.corrupt_wire(rng.uniform(0.0, 0.8) * horizon, src, dst,
+                        count=rng.randint(1, 2))
+    if rng.random() < 0.5:
+        fs.corrupt_blob(rng.uniform(0.1, 0.6) * horizon, rng.choice(sites),
+                        index=rng.randint(0, 5))
+    return fs
+
+
+def run_chaos_case(seed: int, trace: TraceRecorder | None = None) -> dict:
+    """One seeded chaos case: a clean baseline run fixes the expected
+    results and the fault horizon, then the same workload re-runs under
+    the derived injection schedule.  Returns the comparison — completed
+    jobs must match the clean results bit-for-bit, failures must carry an
+    allowed (attributed) exception type; violations of either land in
+    ``mismatches`` / ``bad_failures``."""
+    spec = make_chaos_spec(seed)
+    clean = run_workload(spec)
+    horizon = max(clean["makespan"], 1e-4)
+    rng = random.Random(seed * 3559 + 13)
+    deadline = (horizon * rng.uniform(0.1, 1.5)
+                if rng.random() < 0.2 else None)
+    faults = make_fault_schedule(seed, spec, horizon)
+    tr = trace if trace is not None else TraceRecorder()
+    res = run_workload(spec, faults=faults, tolerate_failures=True,
+                       first_deadline_s=deadline, trace=tr)
+    mismatches, bad_failures = [], []
+    for i, (kind, val) in enumerate(res["outcomes"]):
+        if kind == "ok":
+            if val != clean["results"][i]:
+                mismatches.append((i, val, clean["results"][i]))
+        elif val not in ALLOWED_FAILURES:
+            bad_failures.append((i, val))
+    return {
+        "spec": spec,
+        "n_faults": len(faults),
+        "deadline": deadline,
+        "clean_makespan": clean["makespan"],
+        "fault_makespan": res["makespan"],
+        "outcomes": res["outcomes"],
+        "mismatches": mismatches,
+        "bad_failures": bad_failures,
+        "violations": verify_invariants(tr.events),
+    }
 
 
 # ------------------------------------------------------- placement A/B gen
