@@ -74,6 +74,20 @@ def main() -> None:
             print(f"arity {arity:4d}  depth {depth}  {dt*1e6:8.1f} us/lookup "
                   f"({hits} lookups ok)")
 
+    # The same tree, the same selections, on real worker processes: the
+    # lookups descend through the object store instead of a shared heap,
+    # and content addressing guarantees the identical answers.
+    with fix.remote(n_workers=2) as be:
+        n = 2_000
+        keys = [f"key{i:08d}".encode() for i in range(n)]
+        values = [f"value-{i}".encode() * 3 for i in range(n)]
+        root, depth = build_btree(be.repo, keys, values, 64)
+        for i in range(0, n, n // 20):
+            val, _steps = fix_lookup(be, root, keys[i])
+            assert val == values[i]
+        print(f"remote: depth-{depth} lookups ok on "
+              f"{len(be._workers)} worker processes")
+
 
 if __name__ == "__main__":
     main()

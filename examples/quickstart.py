@@ -51,7 +51,22 @@ def main() -> None:
         print("bytes moved:", cluster.bytes_moved,
               " transfers:", cluster.transfers)
 
-    # --- 5. what it compiles to: the shared Table-1 representation ---------
+    # --- 5. the same program on real worker processes ----------------------
+    # fix.remote() forks OS processes speaking a framed socket protocol;
+    # every inter-worker byte routes through a content-addressed object
+    # store.  Same Backend protocol, byte-identical result content keys.
+    with fix.local() as be:
+        local_key = be.evaluate(fib(15)).raw
+    with fix.remote(n_workers=2) as be:
+        print("fib(15) on", len(be._workers), "worker processes =",
+              be.run(fib(15), timeout=60))
+        print("remote == local content key:",
+              be.evaluate(fib(15)).raw == local_key)
+        st = be.stats()
+        print("store objects:", st["store"]["objects"],
+              " transfers:", st["transfers"])
+
+    # --- 6. what it compiles to: the shared Table-1 representation ---------
     # A typed call lowers to the combination tree [limits, procedure, args]
     # — byte-identical to building it by hand against the raw core.  Users,
     # programs and the platform share one representation of the computation.

@@ -159,6 +159,10 @@ class Repository:
         # by default (content is immutable), switched on by the cluster when
         # a fault schedule can corrupt blobs at rest.
         self.verify_reads = False
+        # Optional read-through to an external object store: consulted when
+        # a blob/tree read misses locally (remote-worker safety net for
+        # content the scheduler's need analysis didn't pre-stage).
+        self._backing: Optional[Callable[[Handle], object]] = None
 
     # -------------------------------------------------------------- listeners
     def add_put_listener(self, fn: Callable[[Handle], None]) -> None:
@@ -168,6 +172,26 @@ class Repository:
     def _notify_put(self, handle: Handle) -> None:
         for fn in self._put_listeners:
             fn(handle)
+
+    # -------------------------------------------------------------- backing
+    def set_backing(self, fetch: Optional[Callable[[Handle], object]]) -> None:
+        """Install a read-through fallback for missing content.
+
+        ``fetch(handle)`` must return the handle's data (blob bytes or a
+        tuple of child Handles) or None when the backing store doesn't have
+        it either.  The callable owns installation: if it wants the content
+        resident (it almost always does), it installs via
+        :meth:`put_handle_data` before returning.  Membership queries
+        (:meth:`contains`) deliberately do *not* consult the backing — the
+        scheduler's residency accounting must reflect what has actually
+        moved, not what could move on demand.
+        """
+        self._backing = fetch
+
+    def _backing_read(self, handle: Handle):
+        if self._backing is None:
+            return None
+        return self._backing(handle)
 
     # ------------------------------------------------------------------ put
     def put_blob(self, payload: bytes) -> Handle:
@@ -298,7 +322,10 @@ class Repository:
         try:
             payload = self._blobs[handle.content_key()]
         except KeyError:
-            raise MissingData(handle) from None
+            payload = self._backing_read(handle)
+            if payload is None:
+                raise MissingData(handle) from None
+            return payload  # verified by the backing's own install
         if self.verify_reads and not self._payload_matches(handle, payload):
             raise CorruptData(handle)
         return payload
@@ -309,7 +336,10 @@ class Repository:
         try:
             return self._trees[handle.content_key()]
         except KeyError:
-            raise MissingData(handle) from None
+            kids = self._backing_read(handle)
+            if kids is None:
+                raise MissingData(handle) from None
+            return tuple(kids)
 
     def raw_payload(self, handle: Handle):
         """Blob bytes or Tree children — whatever this handle's content is."""

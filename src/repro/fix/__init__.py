@@ -41,9 +41,22 @@ from .lazy import Lazy, lit
 from .marshal import MarshalError
 
 __all__ = [
-    "Backend", "ClusterBackend", "LocalBackend", "local", "on",
+    "Backend", "ClusterBackend", "LocalBackend", "local", "on", "remote",
     "TypedCodelet", "codelet", "DEFAULT_LIMITS",
     "Future", "as_completed", "CancelledError", "DeadlineExceeded",
     "Lazy", "lit",
     "MarshalError",
 ]
+
+
+def remote(n_workers: int = 2, **kwargs):
+    """Multi-process backend: ``fix.remote(n_workers=2)``.
+
+    Imported lazily — :mod:`repro.remote` pulls in the runtime package
+    (for the shared :class:`~repro.runtime.transfers.LocationIndex`), and
+    the runtime imports *this* package, so a top-level import would be
+    circular.  See :class:`repro.remote.RemoteBackend` for parameters
+    (``store=``, ``store_dir=``, ``trace=``, ``log_dir=``).
+    """
+    from ..remote import remote as _remote
+    return _remote(n_workers, **kwargs)

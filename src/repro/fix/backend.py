@@ -30,10 +30,10 @@ import threading
 from typing import Any, Iterable, Optional
 
 from ..core import Evaluator, Repository
-from ..core.handle import Handle
+from ..core.handle import BLOB, TREE, Handle
 from .future import DeadlineExceeded, Future, as_completed
 from .lazy import Lazy
-from .marshal import MarshalError, unmarshal
+from .marshal import MarshalError, _element_hints, unmarshal
 
 _USE_STATIC = object()  # sentinel: "decode with the program's static type"
 
@@ -91,6 +91,46 @@ class Backend(abc.ABC):
         """submit + fetch: the one-liner for "give me the value"."""
         return self.fetch(self.submit(program), timeout=timeout)
 
+    def fetch_stream(self, source, as_type: Any = _USE_STATIC,
+                     timeout: Optional[float] = 120.0):
+        """Yield a Tree result's children as their bytes arrive.
+
+        Where :meth:`fetch` localizes the whole closure before decoding
+        anything, this generator pulls only the tree *node* up front
+        (:meth:`_localize_shallow`), then localizes and decodes one child
+        per iteration — so a consumer starts working on child 0 while
+        children 1..n-1 are still remote, and a consumer that stops early
+        never pays for the tail.  Non-tree results yield exactly one
+        value (the plain ``fetch``), so callers can stream unconditionally.
+        """
+        if isinstance(source, Lazy):
+            source = self.submit(source)
+        if isinstance(source, Future):
+            handle = source.result(timeout)
+            if as_type is _USE_STATIC:
+                as_type = source.out_type
+        else:
+            handle = source
+            if as_type is _USE_STATIC:
+                as_type = None
+        if not isinstance(handle, Handle):
+            raise MarshalError(f"cannot fetch {type(handle).__name__}")
+        if handle.is_ref():
+            handle = handle.as_object()
+        if handle.content_type != TREE or not handle.is_data():
+            self._localize(handle)
+            yield unmarshal(self.repo, handle, as_type)
+            return
+        self._localize_shallow(handle)
+        kids = self.repo.get_tree(handle)
+        hints = (_element_hints(as_type, len(kids))
+                 if as_type not in (None, tuple, list) else [None] * len(kids))
+        for kid, hint in zip(kids, hints):
+            child = kid.as_object() if kid.is_ref() else kid
+            if child.is_data() and not child.is_literal:
+                self._localize(child)
+            yield unmarshal(self.repo, child, hint)
+
     @staticmethod
     def as_completed(futures: Iterable[Future],
                      timeout: Optional[float] = None):
@@ -100,6 +140,12 @@ class Backend(abc.ABC):
     @abc.abstractmethod
     def _localize(self, handle: Handle) -> None:
         """Make ``handle``'s bytes resident in :attr:`repo`."""
+
+    def _localize_shallow(self, handle: Handle) -> None:
+        """Make only ``handle``'s *own* content resident (a tree node
+        without its children) — the streaming-fetch hop.  Backends without
+        a cheaper path fall back to the full closure."""
+        self._localize(handle)
 
     def _compile(self, program) -> tuple[Handle, Any]:
         """(top-level Encode handle, static result type) for a program."""
@@ -225,6 +271,25 @@ class ClusterBackend(Backend):
 
     def _localize(self, handle: Handle) -> None:
         self.fetch_result(handle)
+
+    def _localize_shallow(self, handle: Handle) -> None:
+        """One tree node's bytes (children stay remote), paying and
+        accounting the link cost of just those bytes — what makes
+        ``fetch_stream`` incremental on a cluster."""
+        c = self.cluster
+        if handle.is_ref():
+            handle = handle.as_object()
+        if handle.is_literal or c.client_repo.contains(handle):
+            return
+        src = c._find_source_name(handle)
+        if src is None or src == "client":
+            return
+        size = handle.size if handle.content_type == BLOB else 32 * handle.size
+        link = c.network.link(src, "client")
+        c.clock.sleep(link.latency_s + link.serialized_s(size))
+        payload = c.nodes[src].repo.raw_payload(handle)
+        if c.client_repo.put_handle_data(handle, payload):
+            c._account_transfer(1, size)
 
     def fetch_result(self, handle: Handle,
                      into: Optional[Repository] = None) -> Repository:

@@ -24,7 +24,7 @@ import inspect
 import typing
 from typing import Any, Callable, Optional
 
-from ..core.handle import Handle
+from ..core.handle import BLOB, TREE, Handle
 from ..core.procedures import make_limits, procedure_blob, register
 from .lazy import _CALL, Lazy
 from .marshal import (
@@ -42,6 +42,19 @@ from .marshal import (
 DEFAULT_LIMITS = make_limits(ram_bytes=1 << 16)
 
 
+def _is_default(value, default) -> bool:
+    """True when ``value`` can be elided from the combination because the
+    shim's default reproduces it.  Conservative: anything that can't prove
+    equality (Lazy refuses ``__bool__``, numpy returns arrays, ...) travels
+    explicitly."""
+    if value is default:
+        return True
+    try:
+        return bool(value == default)
+    except Exception:  # noqa: BLE001 — equality probe only
+        return False
+
+
 class TypedCodelet:
     """A registered procedure plus its typed client-side constructor."""
 
@@ -57,12 +70,23 @@ class TypedCodelet:
         self._sig = inspect.signature(fn)
         hints = typing.get_type_hints(fn)
         self.param_hints: list[Any] = []
+        # Parameters without defaults are *required* and always travel
+        # positionally in the combination; parameters with defaults are
+        # *optional* and travel — only when overridden — in a trailing
+        # kwargs Tree, so adding a defaulted parameter never changes the
+        # content keys of existing call sites.
+        self.required: list[tuple[str, Any]] = []
+        self.optional: list[tuple[str, Any, Any]] = []
         for p in self._sig.parameters.values():
             if p.kind in (inspect.Parameter.VAR_POSITIONAL,
                           inspect.Parameter.VAR_KEYWORD):
                 raise MarshalError(
                     f"codelet {name!r}: *args/**kwargs are not marshallable — "
                     f"take a list/tuple parameter instead")
+            if p.kind is inspect.Parameter.POSITIONAL_ONLY:
+                raise MarshalError(
+                    f"codelet {name!r}: positional-only parameters are not "
+                    f"supported (kwargs travel by name)")
             if p.name not in hints:
                 raise MarshalError(
                     f"codelet {name!r}: parameter {p.name!r} needs a type "
@@ -70,6 +94,15 @@ class TypedCodelet:
             hint = hints[p.name]
             validate_hint(hint)
             self.param_hints.append(hint)
+            if p.default is inspect.Parameter.empty:
+                if self.optional:
+                    raise MarshalError(
+                        f"codelet {name!r}: required parameter {p.name!r} "
+                        f"follows a defaulted one")
+                self.required.append((p.name, hint))
+            else:
+                self.optional.append((p.name, hint, p.default))
+        self._opt_hints = {n: h for n, h, _ in self.optional}
         self.return_hint = hints.get("return")
         if self.return_hint is not None:
             validate_hint(self.return_hint)
@@ -84,20 +117,76 @@ class TypedCodelet:
     # ------------------------------------------------------- server side
     def _shim(self, api, comb: Handle) -> Handle:
         kids = api.read_tree(comb)
-        arg_handles = kids[2:]  # [limits, procedure, arg...]
-        if len(arg_handles) != len(self.param_hints):
+        arg_handles = list(kids[2:])  # [limits, procedure, arg...]
+        n_req = len(self.required)
+        overrides: dict[str, Handle] = {}
+        if self.optional and len(arg_handles) == n_req + 1:
+            kw = self._parse_kwargs_tree(api, arg_handles[-1])
+            if kw is not None:
+                overrides = kw
+                arg_handles = arg_handles[:-1]
+        if (self.optional and not overrides
+                and len(arg_handles) == len(self.param_hints)):
+            # Legacy spelling: a combination minted before these parameters
+            # grew defaults carries them positionally.  Same shim, same key.
+            for (pname, _h, _d), h in zip(self.optional, arg_handles[n_req:]):
+                overrides[pname] = h
+            arg_handles = arg_handles[:n_req]
+        if len(arg_handles) != n_req:
             raise MarshalError(
-                f"codelet {self.name!r} takes {len(self.param_hints)} "
+                f"codelet {self.name!r} takes {n_req} required "
                 f"argument(s), combination supplies {len(arg_handles)}")
         reader = ApiReader(api)
-        values = [unmarshal(reader, h, hint)
-                  for h, hint in zip(arg_handles, self.param_hints)]
-        out = self.fn(*values)
+        values = {pname: unmarshal(reader, h, hint)
+                  for (pname, hint), h in zip(self.required, arg_handles)}
+        for pname, hint, default in self.optional:
+            h = overrides.get(pname)
+            values[pname] = default if h is None else unmarshal(reader, h, hint)
+        out = self.fn(**values)
         if isinstance(out, Handle):
             return out  # raw handle (data, or a hand-rolled tail call)
         if isinstance(out, Lazy):
             return out.compile(ApiEmitter(api))  # typed tail call
         return marshal(ApiEmitter(api), out, self.return_hint)
+
+    def _parse_kwargs_tree(self, api, h: Handle) -> Optional[dict]:
+        """``{name: value-handle}`` if ``h`` is a kwargs Tree, else None.
+
+        A kwargs Tree is a non-empty Tree of ``[utf8-name-blob, value]``
+        pairs whose names are all (distinct) optional parameters of this
+        codelet.  Anything else — including the pathological value that
+        happens to be pair-shaped but names no known parameter — reads as
+        an ordinary positional argument.
+        """
+        if h.content_type != TREE or not h.is_data():
+            return None
+        try:
+            pairs = api.read_tree(h)
+        except Exception:  # noqa: BLE001 — shape probe, not a read path
+            return None
+        if not pairs:
+            return None
+        out: dict[str, Handle] = {}
+        for pair in pairs:
+            if pair.content_type != TREE or not pair.is_data():
+                return None
+            try:
+                pk = api.read_tree(pair)
+            except Exception:  # noqa: BLE001
+                return None
+            if len(pk) != 2:
+                return None
+            name_h, val_h = pk
+            if name_h.content_type != BLOB or not name_h.is_data():
+                return None
+            try:
+                pname = api.read_blob(name_h).decode("utf-8")
+            except Exception:  # noqa: BLE001
+                return None
+            if pname not in self._opt_hints or pname in out:
+                return None
+            out[pname] = val_h
+        return out
 
     # ------------------------------------------------------- client side
     def __call__(self, *args, **kwargs) -> Lazy:
@@ -105,9 +194,16 @@ class TypedCodelet:
             bound = self._sig.bind(*args, **kwargs)
         except TypeError as e:
             raise MarshalError(f"codelet {self.name!r}: {e}") from None
-        bound.apply_defaults()
-        ordered = [bound.arguments[p] for p in self._sig.parameters]
-        return Lazy(_CALL, codelet=self, args=ordered,
+        ordered = []
+        overrides = []
+        for pname, p in self._sig.parameters.items():
+            if p.default is inspect.Parameter.empty:
+                ordered.append(bound.arguments[pname])
+            elif pname in bound.arguments:
+                v = bound.arguments[pname]
+                if not _is_default(v, p.default):
+                    overrides.append((pname, v))
+        return Lazy(_CALL, codelet=self, args=ordered, kwargs=overrides,
                     out_type=self.return_hint)
 
     def __repr__(self) -> str:

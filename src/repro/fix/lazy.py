@@ -38,14 +38,16 @@ _CALL, _CONST, _ENCODE, _SELECT = range(4)
 class Lazy:
     """A node of a client-side Fix expression graph."""
 
-    __slots__ = ("_kind", "_codelet", "_args", "_value", "_target", "_mode",
-                 "_index", "out_type")
+    __slots__ = ("_kind", "_codelet", "_args", "_kwargs", "_value", "_target",
+                 "_mode", "_index", "out_type")
 
-    def __init__(self, kind: int, *, codelet=None, args=None, value=None,
-                 target=None, mode=None, index=None, out_type=None):
+    def __init__(self, kind: int, *, codelet=None, args=None, kwargs=None,
+                 value=None, target=None, mode=None, index=None,
+                 out_type=None):
         self._kind = kind
         self._codelet = codelet
         self._args = args
+        self._kwargs = kwargs
         self._value = value
         self._target = target
         self._mode = mode
@@ -119,8 +121,19 @@ class Lazy:
         if self._kind == _CALL:
             cd = self._codelet
             kids = [emitter.put_blob(cd.limits), emitter.put_blob(cd.proc_payload)]
-            for value, hint in zip(self._args, cd.param_hints):
+            for value, (_pname, hint) in zip(self._args, cd.required):
                 kids.append(_lower_arg(emitter, value, hint, memo))
+            if self._kwargs:
+                # Overridden defaults ride as a trailing Tree of
+                # [name-blob, value] pairs (signature order); all-default
+                # calls omit it entirely, keeping pre-defaults content keys.
+                pairs = []
+                for pname, value in self._kwargs:
+                    name_h = emitter.put_blob(pname.encode("utf-8"))
+                    val_h = _lower_arg(emitter, value, cd._opt_hints[pname],
+                                       memo)
+                    pairs.append(emitter.put_tree([name_h, val_h]))
+                kids.append(emitter.put_tree(pairs))
             return emitter.put_tree(kids).application()
         if self._kind == _ENCODE:
             t = self._target.compile(emitter, memo)

@@ -1,0 +1,20 @@
+"""``repro.remote`` — real worker processes + content-addressed storage.
+
+The first off-simulation deployment path: the same ``Backend`` protocol as
+``fix.local()`` and the simulated cluster, implemented over forked worker
+processes (framed socket protocol, :mod:`repro.remote.protocol`) and a
+pluggable object store (:mod:`repro.remote.storage`).  The VirtualClock
+cluster stays the deterministic CI twin; this package is where the paper's
+externalized-I/O claims meet a real process boundary.
+
+Entry point: ``fix.remote(n_workers=...)`` (or :func:`remote` here).
+"""
+from .backend import RemoteBackend, RemoteError, WorkerCrashed, remote
+from .protocol import ProtocolError
+from .storage import FileStore, MemoryStore, ObjectStore, StoreError
+
+__all__ = [
+    "RemoteBackend", "RemoteError", "WorkerCrashed", "remote",
+    "ObjectStore", "MemoryStore", "FileStore", "StoreError",
+    "ProtocolError",
+]

@@ -1,0 +1,829 @@
+"""``fix.remote(...)`` — the first off-simulation deployment path.
+
+The coordinator runs the same scheduling algorithm as the in-process
+:class:`~repro.runtime.cluster.Cluster` (one ``think``/``strictify`` step
+per dispatch, children as jobs, memoized encodes folded into the step's
+minimum repository), but places steps on **real worker processes** over
+local sockets, with every byte of data movement routed through a
+content-addressed :class:`~repro.remote.storage.ObjectStore`:
+
+* **invocation plane** — one control socket per worker carrying framed
+  ``submit`` / ``ran`` / ``error`` / ``heartbeat`` messages (names and
+  memo pairs only, never content);
+* **storage plane** — one store socket per worker.  The coordinator pushes
+  a step's needs client→store before dispatch; the worker pre-stages
+  store→worker before computing and pushes everything it creates
+  worker→store before replying.  Workers never talk to each other, so all
+  inter-worker movement is two observable hops through the platform-owned
+  store — the paper's externalized I/O across a real process boundary.
+
+Residency ground truth is the store's put *notifications* plus the
+workers' per-reply fetched/created reports — not in-process repository
+listeners — feeding the same :class:`~repro.runtime.transfers.LocationIndex`
+the simulated cluster uses.  With ``trace=`` the run emits the PR-4 JSONL
+schema (job_submit/place/start/finish, stage_request, transfer_deliver,
+put) and passes ``verify_invariants``, so ``diff_traces`` can line a remote
+run up against its simulated twin.
+
+Content addressing is what makes this backend small: a handle is its own
+checksum, so every hop verifies its delivery, and content keys are
+process-independent, so strict-memo and dedup work unchanged across the
+boundary.
+"""
+from __future__ import annotations
+
+import builtins
+import itertools
+import multiprocessing
+import os
+import queue
+import socket
+import tempfile
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..core.handle import (
+    APPLICATION,
+    BLOB,
+    IDENTIFICATION,
+    SELECTION,
+    STRICT,
+    TREE,
+    Handle,
+)
+from ..core.repository import MissingData, Repository, walk_object_closure
+from ..fix.backend import Backend
+from ..fix.future import DeadlineExceeded, Future
+from ..runtime.transfers import LocationIndex
+from .protocol import ProtocolError, recv_msg, send_msg
+from .storage import (
+    FileStore,
+    MemoryStore,
+    ObjectStore,
+    StoreServer,
+    decode_tree_payload,
+    encode_tree_payload,
+    payload_nbytes,
+)
+from .worker import worker_main
+
+RESOLVE, WAIT_CHILDREN, RUNNING, STRICT_WAIT, DONE = range(5)
+
+
+class WorkerCrashed(RuntimeError):
+    """A worker process died with steps outstanding (typed, not a hang)."""
+
+
+class RemoteError(RuntimeError):
+    """A worker-side failure that has no builtin exception to rebuild."""
+
+    def __init__(self, etype: str, emsg: str):
+        super().__init__(f"{etype}: {emsg}")
+        self.etype = etype
+        self.emsg = emsg
+
+
+class _MonotonicClock:
+    """now() for TraceRecorder.bind: wall-monotonic seconds since start."""
+
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+
+@dataclass
+class _RJob:
+    id: int
+    encode: Handle
+    thunk: Handle
+    strict: bool
+    phase: int = RESOLVE
+    epoch: int = 0
+    node: Optional[str] = None
+    kind: str = "think"            # op of the in-flight dispatch
+    futures: list = field(default_factory=list)
+    parents: list = field(default_factory=list)
+    pending_children: set = field(default_factory=set)
+    whnf: Optional[Handle] = None
+    result: Optional[Handle] = None
+    strict_children: list = field(default_factory=list)
+    strict_stage: list = field(default_factory=list)
+
+
+class _Worker:
+    __slots__ = ("wid", "proc", "ctl", "send_lock", "reader", "alive",
+                 "outstanding", "log_path")
+
+    def __init__(self, wid: str, proc, ctl, log_path: str):
+        self.wid = wid
+        self.proc = proc
+        self.ctl = ctl
+        self.send_lock = threading.Lock()
+        self.reader: Optional[threading.Thread] = None
+        self.alive = True
+        self.outstanding: set[int] = set()
+        self.log_path = log_path
+
+
+class RemoteBackend(Backend):
+    """Real worker processes + pluggable content-addressed object storage.
+
+    ``store`` is ``"memory"`` (server-backed, default), ``"file"`` (a
+    :class:`FileStore` under ``store_dir`` — persistent, so two runs of the
+    same program share content), or any :class:`ObjectStore` instance.
+    Worker stdout/stderr land in per-worker files under ``log_dir``
+    (default: ``$FIX_REMOTE_LOGDIR`` or a fresh temp dir) — these are what
+    CI uploads when the smoke job fails.
+    """
+
+    def __init__(self, n_workers: int = 2, *, store="memory",
+                 store_dir: Optional[str] = None, trace=None,
+                 log_dir: Optional[str] = None):
+        if n_workers < 1:
+            raise ValueError("need at least one worker process")
+        self._repo = Repository("client")
+        self.trace = trace
+        if trace is not None:
+            trace.bind(_MonotonicClock())
+        self._locs = LocationIndex()
+        self._store_mutex = threading.Lock()
+        self.store = self._resolve_store(store, store_dir)
+        self.store.add_put_listener(self._on_store_put)
+        self._repo.add_put_listener(self._on_client_put)
+        self.log_dir = (log_dir or os.environ.get("FIX_REMOTE_LOGDIR")
+                        or tempfile.mkdtemp(prefix="fix-remote-logs-"))
+        os.makedirs(self.log_dir, exist_ok=True)
+
+        # scheduler state (coordinator thread only, except _memo reads)
+        self._jobs: dict[int, _RJob] = {}
+        self._by_encode: dict[bytes, int] = {}
+        self._memo: dict[bytes, Handle] = {}
+        self._reach: dict[bytes, tuple] = {}
+        self._ids = itertools.count()
+        self._nonces = itertools.count()
+        self._pongs: dict[tuple, threading.Event] = {}
+        self._events: "queue.Queue[Optional[tuple]]" = queue.Queue()
+        self.transfers = 0
+        self.bytes_moved = 0
+        self._closed = False
+        self._closing = False
+
+        self._store_server = StoreServer(self.store, mutex=self._store_mutex)
+        self._workers: dict[str, _Worker] = {}
+        ctx = multiprocessing.get_context("fork")
+        for i in range(n_workers):
+            self._spawn_worker(ctx, f"w{i}")
+        self._coord = threading.Thread(target=self._loop, daemon=True,
+                                       name="fix-remote-coord")
+        self._coord.start()
+
+    # ----------------------------------------------------------- lifecycle
+    @staticmethod
+    def _resolve_store(store, store_dir: Optional[str]) -> ObjectStore:
+        if isinstance(store, ObjectStore):
+            return store
+        if store == "memory":
+            return MemoryStore()
+        if store == "file":
+            return FileStore(store_dir or tempfile.mkdtemp(prefix="fix-store-"))
+        raise ValueError(f"store must be 'memory', 'file' or an ObjectStore, "
+                         f"not {store!r}")
+
+    def _spawn_worker(self, ctx, wid: str) -> None:
+        ctl_parent, ctl_child = socket.socketpair()
+        store_parent, store_child = socket.socketpair()
+        log_path = os.path.join(self.log_dir, f"{wid}.log")
+        proc = ctx.Process(target=worker_main,
+                           args=(ctl_child, store_child, wid, log_path),
+                           daemon=True, name=f"fix-remote-{wid}")
+        proc.start()
+        # Close the child ends NOW, before the next worker forks: a later
+        # child inheriting these fds would keep this worker's sockets open
+        # past its death and break EOF-based crash detection.
+        ctl_child.close()
+        store_child.close()
+        w = _Worker(wid, proc, ctl_parent, log_path)
+        self._workers[wid] = w
+        self._store_server.serve(store_parent, wid)
+        w.reader = threading.Thread(target=self._read_loop, args=(w,),
+                                    daemon=True, name=f"fix-remote-rx-{wid}")
+        w.reader.start()
+
+    def _read_loop(self, w: _Worker) -> None:
+        try:
+            while True:
+                msg = recv_msg(w.ctl)
+                if msg is None:
+                    break
+                if msg.get("op") == "pong":
+                    ev = self._pongs.pop((w.wid, msg.get("nonce")), None)
+                    if ev is not None:
+                        ev.set()
+                    continue
+                self._events.put(("msg", w.wid, msg))
+        except (OSError, ProtocolError):
+            pass
+        self._events.put(("worker_died", w.wid))
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._closing = True
+        for w in self._workers.values():
+            if w.alive:
+                try:
+                    send_msg(w.ctl, {"op": "shutdown"}, lock=w.send_lock)
+                except OSError:
+                    pass
+        for w in self._workers.values():
+            w.proc.join(timeout=5)
+            if w.proc.is_alive():
+                w.proc.terminate()
+                w.proc.join(timeout=2)
+            if w.proc.is_alive():  # pragma: no cover - last resort
+                w.proc.kill()
+                w.proc.join(timeout=2)
+        self._events.put(None)
+        self._coord.join(timeout=5)
+        for w in self._workers.values():
+            try:
+                w.ctl.close()
+            except OSError:
+                pass
+            if w.reader is not None:
+                w.reader.join(timeout=5)
+        self._store_server.close()
+        self.store.close()
+
+    # --------------------------------------------------------------- public
+    @property
+    def repo(self) -> Repository:
+        return self._repo
+
+    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
+        if self._closed:
+            raise RuntimeError("backend is closed")
+        encode, out_type = self._compile(program)
+        fut = Future()
+        fut.out_type = out_type
+        if deadline_s is not None:
+            timer = threading.Timer(
+                deadline_s, lambda: fut.set_exception(
+                    DeadlineExceeded("job deadline exceeded")))
+            timer.daemon = True
+            timer.start()
+            fut.add_done_callback(lambda _f: timer.cancel())
+        self._events.put(("submit", encode, fut, None, False))
+        return fut
+
+    def ping(self, timeout: float = 5.0) -> dict[str, bool]:
+        """Heartbeat every live worker; {worker id: answered in time}.
+
+        Workers answer between steps (they are single-threaded by design),
+        so a pong bounds liveness, not latency."""
+        waits: list[tuple[str, threading.Event]] = []
+        out: dict[str, bool] = {}
+        for wid, w in self._workers.items():
+            if not w.alive:
+                out[wid] = False
+                continue
+            nonce = next(self._nonces)
+            ev = threading.Event()
+            self._pongs[(wid, nonce)] = ev
+            try:
+                send_msg(w.ctl, {"op": "heartbeat", "nonce": nonce},
+                         lock=w.send_lock)
+            except OSError:
+                self._pongs.pop((wid, nonce), None)
+                out[wid] = False
+                continue
+            waits.append((wid, ev))
+        deadline = time.monotonic() + timeout
+        for wid, ev in waits:
+            out[wid] = ev.wait(max(0.0, deadline - time.monotonic()))
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "store": self.store.stats(),
+            "workers": {wid: {"alive": w.alive, "pid": w.proc.pid,
+                              "log": w.log_path}
+                        for wid, w in self._workers.items()},
+            "transfers": self.transfers,
+            "bytes_moved": self.bytes_moved,
+        }
+
+    # ------------------------------------------------------ event loop
+    def _loop(self) -> None:
+        while True:
+            ev = self._events.get()
+            if ev is None:
+                return
+            try:
+                kind = ev[0]
+                if kind == "submit":
+                    self._on_submit(*ev[1:])
+                elif kind == "msg":
+                    self._on_msg(ev[1], ev[2])
+                elif kind == "worker_died":
+                    self._on_worker_died(ev[1])
+            except BaseException:  # pragma: no cover - coordinator must live
+                traceback.print_exc()
+
+    def _on_submit(self, encode: Handle, fut: Optional[Future],
+                   parent: Optional[int], ignore_memo: bool) -> None:
+        tr = self.trace
+        if not ignore_memo:
+            memo = self._memo.get(encode.raw)
+            if memo is not None:
+                # the content universe (client repo ∪ store) never evicts,
+                # so a memoized result is always fetchable
+                if tr is not None:
+                    tr.emit("job_memo_hit", encode=encode.raw.hex())
+                if fut is not None:
+                    fut.set(memo)
+                if parent is not None:
+                    self._child_resolved(parent, encode)
+                return
+            existing = self._by_encode.get(encode.raw)
+            if existing is not None and self._jobs[existing].phase != DONE:
+                job = self._jobs[existing]
+                if fut is not None:
+                    fut._jid = existing
+                    job.futures.append(fut)
+                if parent is not None:
+                    job.parents.append(parent)
+                return
+        jid = next(self._ids)
+        job = _RJob(jid, encode, encode.unwrap_encode(),
+                    encode.interp == STRICT)
+        if fut is not None:
+            fut._jid = jid
+            job.futures.append(fut)
+        if parent is not None:
+            job.parents.append(parent)
+        self._jobs[jid] = job
+        if not ignore_memo:
+            self._by_encode[encode.raw] = jid
+        if tr is not None:
+            tr.emit("job_submit", job=jid, encode=encode.raw.hex(),
+                    strict=job.strict, parent=parent, recompute=ignore_memo)
+        self._advance_guarded(job)
+
+    def _advance_guarded(self, job: _RJob) -> None:
+        try:
+            self._advance(job)
+        except BaseException as e:  # noqa: BLE001 — failures stay job-scoped
+            self._fail_job(job, e)
+
+    # ------------------------------------------------------------- advance
+    def _advance(self, job: _RJob) -> None:
+        thunk = job.thunk
+        if thunk.is_data():  # encode over an already-data handle
+            job.whnf = thunk
+            if job.strict:
+                self._begin_strictify(job)
+            else:
+                self._finalize(job, thunk.as_ref())
+            return
+        needs, children, memo_pairs = self._step_needs(thunk)
+        unresolved = [c for c in children if self._memo.get(c.raw) is None]
+        if unresolved:
+            job.phase = WAIT_CHILDREN
+            job.pending_children = {c.raw for c in unresolved}
+            for c in unresolved:
+                self._events.put(("submit", c, None, job.id, False))
+            return
+        for enc in children:
+            res = self._memo[enc.raw]
+            memo_pairs.append((enc, res))
+            needs.extend(self._deep_object_handles(res))
+        self._dispatch(job, "think", job.thunk, needs, memo_pairs)
+
+    def _child_resolved(self, parent_id: int, child_encode: Handle) -> None:
+        job = self._jobs.get(parent_id)
+        if job is None or job.phase == DONE:
+            return
+        job.pending_children.discard(child_encode.raw)
+        if job.pending_children or job.phase not in (WAIT_CHILDREN,
+                                                     STRICT_WAIT):
+            return
+        if job.phase == WAIT_CHILDREN:
+            job.phase = RESOLVE
+            self._advance_guarded(job)
+        else:  # children of the WHNF walk resolved: re-walk, now memoized
+            try:
+                self._begin_strictify(job)
+            except BaseException as e:  # noqa: BLE001
+                self._fail_job(job, e)
+
+    # --------------------------------------------------------- strictify
+    def _begin_strictify(self, job: _RJob) -> None:
+        """Deep-evaluate the WHNF result (mirror of the cluster's walk):
+        nested thunks/encodes become child jobs, Ref'd data is staged."""
+        whnf = job.whnf
+        children: list[Handle] = []
+        stage: list[Handle] = []
+        stack = [whnf]
+        seen: set[bytes] = set()
+        while stack:
+            h = stack.pop()
+            if h.raw in seen or h.is_literal:
+                continue
+            seen.add(h.raw)
+            if h.is_encode():
+                res = self._memo.get(h.raw)
+                if res is None:
+                    children.append(h)
+                else:
+                    stack.append(res)
+                continue
+            if h.is_thunk():
+                children.append(h.strict())
+                continue
+            stage.append(h)
+            if h.content_type == TREE:
+                kids = self._tree_children(h)
+                if kids is not None:
+                    stack.extend(kids)
+        job.strict_stage = stage
+        job.strict_children = children
+        unresolved = [c for c in children if self._memo.get(c.raw) is None]
+        if unresolved:
+            job.phase = STRICT_WAIT
+            job.pending_children = {c.raw for c in unresolved}
+            for c in unresolved:
+                self._events.put(("submit", c, None, job.id, False))
+            return
+        self._advance_strict(job)
+
+    def _advance_strict(self, job: _RJob) -> None:
+        if job.whnf.content_type == BLOB and job.whnf.is_data():
+            # a blob is its own strict form: no worker round-trip
+            self._finalize(job, job.whnf.as_object())
+            return
+        needs = list(job.strict_stage)
+        memo_pairs: list[tuple] = []
+        for c in job.strict_children:
+            res = self._memo[c.raw]
+            memo_pairs.append((c, res))
+            needs.extend(self._deep_object_handles(res))
+        self._dispatch(job, "strictify", job.whnf, needs, memo_pairs)
+
+    # ---------------------------------------------------------- stepneeds
+    def _step_needs(self, thunk: Handle):
+        """(stage handles, child encodes, memo pairs) for one reduction —
+        the cluster's algorithm verbatim, over client repo ∪ store."""
+        interp = thunk.interp
+        if interp == IDENTIFICATION:
+            return [], [], []
+        if interp == SELECTION:
+            pair_h = thunk.unwrap_thunk()
+            needs = [pair_h]
+            pair = self._tree_children(pair_h)
+            if pair is None:
+                raise MissingData(pair_h)
+            target, idx = pair
+            if not idx.is_literal:
+                needs.append(idx)
+            children: list[Handle] = []
+            memo_pairs: list[tuple] = []
+            if target.is_encode():
+                res = self._memo.get(target.raw)
+                if res is None:
+                    return needs, [target], []
+                memo_pairs.append((target, res))
+                target = res
+            if target.is_thunk():
+                res = self._memo.get(target.shallow().raw)
+                if res is None:
+                    return needs, [target.shallow()], []
+                memo_pairs.append((target.shallow(), res))
+                target = res
+            if not target.is_literal:
+                needs.append(target)  # the node itself; children stay put
+            return needs, children, memo_pairs
+        if interp == APPLICATION:
+            defn = thunk.unwrap_thunk()
+            needs, children, memo_pairs = [], [], []
+            stack = [defn]
+            seen: set[bytes] = set()
+            while stack:
+                h = stack.pop()
+                if h.raw in seen or h.is_literal:
+                    continue
+                seen.add(h.raw)
+                if h.is_encode():
+                    res = self._memo.get(h.raw)
+                    if res is None:
+                        children.append(h)
+                    else:
+                        memo_pairs.append((h, res))
+                        stack.append(res)
+                    continue
+                if h.is_thunk() or h.is_ref():
+                    continue  # lazy / metadata-only
+                needs.append(h)
+                if h.content_type == TREE:
+                    kids = self._tree_children(h)
+                    if kids is None:
+                        raise MissingData(h)
+                    stack.extend(kids)
+            return needs, children, memo_pairs
+        raise ValueError(f"not a thunk: {thunk!r}")
+
+    def _tree_children(self, h: Handle) -> Optional[tuple]:
+        try:
+            return self._repo.get_tree(h)
+        except MissingData:
+            payload = self.store.get(h)
+            if payload is None:
+                return None
+            return decode_tree_payload(payload)
+
+    def _deep_object_handles(self, handle: Handle) -> list[Handle]:
+        return list(walk_object_closure(
+            handle, lambda h: self._memo.get(h.raw),
+            self._tree_children, self._reach))
+
+    # ----------------------------------------------------------- dispatch
+    def _dispatch(self, job: _RJob, kind: str, target: Handle,
+                  needs: list, memo_pairs: list) -> None:
+        uniq: list[Handle] = []
+        seen: set[bytes] = set()
+        for h in needs:
+            if h.is_literal or h.raw in seen:
+                continue
+            seen.add(h.raw)
+            uniq.append(h)
+        wid = self._pick_worker(uniq)
+        if wid is None:
+            self._fail_job(job, WorkerCrashed("no live worker processes"))
+            return
+        # Storage plane first: every need must be servable from the store
+        # before the step is dispatched (client→store is an accounted,
+        # traced transfer like any other).  The mutex makes the residency
+        # check and the trace choreography atomic against worker pushes.
+        with self._store_mutex:
+            for h in uniq:
+                self._ensure_in_store_locked(job.id, h)
+        missing = [h for h in uniq
+                   if wid not in self._locs.nodes_for(h.content_key())]
+        tr = self.trace
+        job.node = wid
+        job.kind = kind
+        if tr is not None:
+            tr.emit("job_place", job=job.id, node=wid, epoch=job.epoch,
+                    n_missing=len(missing),
+                    missing_nbytes=sum(payload_nbytes(h) for h in missing))
+        job.phase = RUNNING
+        if tr is not None:
+            tr.emit("job_start", job=job.id, node=wid, epoch=job.epoch,
+                    op="run" if kind == "think" else "strictify", internal=0)
+        w = self._workers[wid]
+        w.outstanding.add(job.id)
+        try:
+            send_msg(w.ctl, {
+                "op": "submit", "job": job.id, "epoch": job.epoch,
+                "kind": kind, "target": target.raw,
+                "memos": [[e.raw, r.raw] for e, r in memo_pairs],
+                "needs": [h.raw for h in uniq],
+            }, lock=w.send_lock)
+        except OSError:
+            # the reader's worker_died event will fail the job; nothing to
+            # do here — failing twice would race the reader thread
+            pass
+
+    def _pick_worker(self, uniq: list) -> Optional[str]:
+        """Place where the fewest bytes of the step's needs are missing
+        (the location index knows worker residency), breaking ties toward
+        the shorter outstanding queue, then by worker order."""
+        live = [w for w in self._workers.values() if w.alive]
+        if not live:
+            return None
+        best, best_cost = None, None
+        for w in live:
+            missing = sum(payload_nbytes(h) for h in uniq
+                          if w.wid not in self._locs.nodes_for(h.content_key()))
+            cost = (missing, len(w.outstanding))
+            if best_cost is None or cost < best_cost:
+                best, best_cost = w, cost
+        return best.wid
+
+    def _ensure_in_store_locked(self, jid: int, h: Handle) -> None:
+        """Client→store movement for one handle (store mutex held)."""
+        if self.store.contains(h):
+            return
+        if h.content_type == BLOB:
+            payload = self._repo.get_blob(h)
+        else:
+            payload = encode_tree_payload(self._repo.get_tree(h))
+        nbytes = payload_nbytes(h)
+        tr = self.trace
+        key_hex = h.content_key().hex()
+        if tr is not None:
+            tr.emit("stage_request", job=jid, dst="store", key=key_hex,
+                    nbytes=nbytes, action="enqueue", src="client")
+        self.store.put(h, payload, src="client")  # fires put(node="store")
+        if tr is not None:
+            tr.emit("transfer_deliver", src="client", dst="store", n=1,
+                    nbytes=nbytes, keys=[key_hex], ok=True, via="store")
+        self.transfers += 1
+        self.bytes_moved += nbytes
+
+    # ------------------------------------------------------------- replies
+    def _on_msg(self, wid: str, msg: dict) -> None:
+        jid = msg.get("job")
+        w = self._workers.get(wid)
+        if w is not None:
+            w.outstanding.discard(jid)
+        # Residency/trace accounting first — the movement happened whether
+        # or not the job is still current.
+        self._record_movement(wid, msg, jid)
+        job = self._jobs.get(jid)
+        if job is None or job.phase != RUNNING or msg.get("epoch") != job.epoch:
+            return  # stale reply (job failed over or already finished)
+        if msg["op"] == "error":
+            self._fail_job(job, self._rebuild_exc(msg))
+            return
+        result = Handle(bytes(msg["result"]))
+        if job.kind == "strictify":
+            self._finalize(job, result)
+            return
+        if result.is_thunk():  # tail call: fresh placement (paper §4.2.2)
+            job.thunk = result
+            job.epoch += 1
+            job.phase = RESOLVE
+            self._advance_guarded(job)
+            return
+        job.whnf = result
+        job.epoch += 1
+        if not job.strict:
+            self._finalize(job, result.as_ref() if result.is_data() else result)
+            return
+        try:
+            self._begin_strictify(job)
+        except BaseException as e:  # noqa: BLE001
+            self._fail_job(job, e)
+
+    def _record_movement(self, wid: str, msg: dict, jid) -> None:
+        """Fold a reply's fetched/created reports into the trace and the
+        location index — the worker's ground truth of what actually moved
+        store→worker and what fresh content it produced."""
+        tr = self.trace
+        resident = self._locs
+        for raw, nbytes in msg.get("fetched", ()):
+            h = Handle(bytes(raw))
+            key = h.content_key()
+            if tr is not None:
+                key_hex = key.hex()
+                tr.emit("stage_request", job=jid, dst=wid, key=key_hex,
+                        nbytes=nbytes, action="enqueue", src="store")
+                tr.emit("transfer_deliver", src="store", dst=wid, n=1,
+                        nbytes=nbytes, keys=[key_hex], ok=True, via="store")
+                tr.emit("put", node=wid, key=key_hex, nbytes=nbytes)
+            resident.add(key, wid)
+            self.transfers += 1
+            self.bytes_moved += nbytes
+        for raw, nbytes in msg.get("created", ()):
+            h = Handle(bytes(raw))
+            key = h.content_key()
+            if wid in resident.nodes_for(key):
+                continue  # already accounted (identical content re-derived)
+            if tr is not None:
+                tr.emit("put", node=wid, key=key.hex(), nbytes=nbytes)
+            resident.add(key, wid)
+
+    @staticmethod
+    def _rebuild_exc(msg: dict) -> BaseException:
+        etype, emsg = msg.get("etype", "Exception"), msg.get("emsg", "")
+        cls = getattr(builtins, etype, None)
+        if not (isinstance(cls, type) and issubclass(cls, BaseException)):
+            # the repro exception types a shim can raise — rebuilding them
+            # keeps error behavior identical to fix.local()
+            from ..core.evaluator import FixError
+            from ..fix.marshal import MarshalError
+            cls = {"FixError": FixError,
+                   "MarshalError": MarshalError}.get(etype)
+        if cls is not None:
+            try:
+                return cls(emsg)
+            except Exception:  # noqa: BLE001 - exotic signature
+                pass
+        if etype == "MissingData":
+            return RemoteError(etype, emsg or "content unavailable at worker")
+        return RemoteError(etype, emsg)
+
+    # ------------------------------------------------------------ terminal
+    def _finalize(self, job: _RJob, result: Handle) -> None:
+        job.result = result
+        job.phase = DONE
+        if self.trace is not None:
+            self.trace.emit("job_finish", job=job.id, node=job.node,
+                            result=result.raw.hex())
+        self._memo.setdefault(job.encode.raw, result)
+        for f in job.futures:
+            f.set(result)
+        for pid in job.parents:
+            self._child_resolved(pid, job.encode)
+
+    def _fail_job(self, job: _RJob, exc: BaseException) -> None:
+        if job.phase == DONE:
+            return
+        job.phase = DONE
+        if self.trace is not None:
+            self.trace.emit("job_fail", job=job.id, error=type(exc).__name__)
+        for f in job.futures:
+            f.set_exception(exc)
+        self._notify_parents_exc(job, exc)
+
+    def _notify_parents_exc(self, job: _RJob, exc: BaseException) -> None:
+        for pid in job.parents:
+            parent = self._jobs.get(pid)
+            if parent is not None and parent.phase != DONE:
+                self._fail_job(parent, exc)
+
+    def _on_worker_died(self, wid: str) -> None:
+        w = self._workers.get(wid)
+        if w is None or not w.alive:
+            return
+        w.alive = False
+        if self._closing:
+            return
+        self._locs.drop_node(wid)
+        exc = WorkerCrashed(f"worker {wid} (pid {w.proc.pid}) died; "
+                            f"log: {w.log_path}")
+        for jid in list(w.outstanding):
+            job = self._jobs.get(jid)
+            if job is not None and job.phase == RUNNING and job.node == wid:
+                self._fail_job(job, exc)
+        w.outstanding.clear()
+
+    # ------------------------------------------------------------ localize
+    def _localize(self, handle: Handle) -> None:
+        """Pull a result's object closure store→client (the accounted,
+        traced fetch hop — the remote analogue of the cluster's
+        ``fetch_result`` link charges)."""
+        if handle.is_ref():
+            handle = handle.as_object()
+        closure = walk_object_closure(
+            handle, lambda h: self._memo.get(h.raw),
+            self._tree_children, {})
+        for h in closure:
+            self._pull_to_client(h)
+
+    def _localize_shallow(self, handle: Handle) -> None:
+        """Pull only this handle's own content (a tree node, not its
+        children) — the streaming-fetch hop."""
+        if handle.is_ref():
+            handle = handle.as_object()
+        self._pull_to_client(handle)
+
+    def _pull_to_client(self, h: Handle) -> None:
+        if h.is_literal or self._repo.contains(h):
+            return
+        payload = self.store.get(h)
+        if payload is None:
+            raise MissingData(h)
+        nbytes = payload_nbytes(h)
+        data = (payload if h.content_type == BLOB
+                else decode_tree_payload(payload))
+        tr = self.trace
+        key_hex = h.content_key().hex()
+        with self._store_mutex:
+            if self._repo.contains(h):
+                return
+            if tr is not None:
+                tr.emit("stage_request", job=None, dst="client", key=key_hex,
+                        nbytes=nbytes, action="enqueue", src="store")
+            self._repo.put_handle_data(h, data)  # fires put(node="client")
+            if tr is not None:
+                tr.emit("transfer_deliver", src="store", dst="client", n=1,
+                        nbytes=nbytes, keys=[key_hex], ok=True, via="store")
+        self.transfers += 1
+        self.bytes_moved += nbytes
+
+    # ----------------------------------------------------------- listeners
+    def _on_store_put(self, handle: Handle, nbytes: int, src: str) -> None:
+        self._locs.add(handle.content_key(), "store")
+        if self.trace is not None:
+            self.trace.emit("put", node="store", key=handle.content_key().hex(),
+                            nbytes=nbytes)
+
+    def _on_client_put(self, handle: Handle) -> None:
+        self._locs.add(handle.content_key(), "client")
+        if self.trace is not None:
+            self.trace.emit("put", node="client",
+                            key=handle.content_key().hex(),
+                            nbytes=payload_nbytes(handle))
+
+
+def remote(n_workers: int = 2, **kwargs) -> RemoteBackend:
+    """Spawn a multi-process backend: ``fix.remote(n_workers=4)``."""
+    return RemoteBackend(n_workers, **kwargs)

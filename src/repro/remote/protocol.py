@@ -1,0 +1,185 @@
+"""Length-prefixed wire protocol for the remote backend.
+
+Every message between the coordinator, the worker processes and the
+object-store server is one *frame*: a 4-byte big-endian payload length
+followed by the payload.  The payload is a small tagged binary encoding
+(no pickle — nothing executable crosses the boundary, and the format is
+the same few shapes the runtime already speaks):
+
+=====  ==========================================================
+tag    payload
+=====  ==========================================================
+``N``  None
+``T``  True
+``F``  False
+``I``  int, 8-byte little-endian signed (the repo-wide convention)
+``B``  bytes: u32 length + raw bytes
+``S``  str: u32 length + UTF-8 bytes
+``L``  list: u32 count + encoded items
+``D``  dict: u32 count + (str key, encoded value) pairs
+=====  ==========================================================
+
+Handles travel as their raw 32 bytes (``B``); blob payloads travel
+verbatim; tree payloads travel as the concatenation of the children's raw
+handles — exactly the canonical bytes the content digest is computed over,
+so every delivery is verifiable against its handle at the receiving end.
+
+The op vocabulary (all dicts with an ``"op"`` key):
+
+* coordinator → worker: ``submit`` (a think/strictify step with its memo
+  pairs and pre-staged needs), ``heartbeat``, ``shutdown``
+* worker → coordinator: ``ran``, ``error``, ``pong``
+* worker → store server: ``fetch``, ``put``, ``contains`` (each answered
+  in order on the same socket)
+"""
+from __future__ import annotations
+
+import socket
+import struct
+from typing import Any, Optional
+
+MAX_FRAME = 1 << 30  # 1 GiB: far above any single message we produce
+
+
+class ProtocolError(RuntimeError):
+    """A malformed frame or an unknown tag on the wire."""
+
+
+# ---------------------------------------------------------------- encoding
+def _encode(obj: Any, out: list) -> None:
+    if obj is None:
+        out.append(b"N")
+    elif obj is True:
+        out.append(b"T")
+    elif obj is False:
+        out.append(b"F")
+    elif isinstance(obj, int):
+        try:
+            out.append(b"I" + obj.to_bytes(8, "little", signed=True))
+        except OverflowError as e:
+            raise ProtocolError(f"int {obj!r} does not fit 8 bytes") from e
+    elif isinstance(obj, (bytes, bytearray, memoryview)):
+        b = bytes(obj)
+        out.append(b"B" + struct.pack(">I", len(b)))
+        out.append(b)
+    elif isinstance(obj, str):
+        b = obj.encode("utf-8")
+        out.append(b"S" + struct.pack(">I", len(b)))
+        out.append(b)
+    elif isinstance(obj, (list, tuple)):
+        out.append(b"L" + struct.pack(">I", len(obj)))
+        for item in obj:
+            _encode(item, out)
+    elif isinstance(obj, dict):
+        out.append(b"D" + struct.pack(">I", len(obj)))
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise ProtocolError(f"dict keys must be str, got {type(k).__name__}")
+            kb = k.encode("utf-8")
+            out.append(struct.pack(">I", len(kb)))
+            out.append(kb)
+            _encode(v, out)
+    else:
+        raise ProtocolError(f"cannot encode {type(obj).__name__} on the wire")
+
+
+def pack(obj: Any) -> bytes:
+    """Encode one message payload (no frame header)."""
+    out: list = []
+    _encode(obj, out)
+    return b"".join(out)
+
+
+class _Cursor:
+    __slots__ = ("data", "pos")
+
+    def __init__(self, data: bytes):
+        self.data = data
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > len(self.data):
+            raise ProtocolError("truncated message")
+        b = self.data[self.pos:self.pos + n]
+        self.pos += n
+        return b
+
+    def u32(self) -> int:
+        return struct.unpack(">I", self.take(4))[0]
+
+
+def _decode(c: _Cursor) -> Any:
+    tag = c.take(1)
+    if tag == b"N":
+        return None
+    if tag == b"T":
+        return True
+    if tag == b"F":
+        return False
+    if tag == b"I":
+        return int.from_bytes(c.take(8), "little", signed=True)
+    if tag == b"B":
+        return c.take(c.u32())
+    if tag == b"S":
+        return c.take(c.u32()).decode("utf-8")
+    if tag == b"L":
+        return [_decode(c) for _ in range(c.u32())]
+    if tag == b"D":
+        d = {}
+        for _ in range(c.u32()):
+            key = c.take(c.u32()).decode("utf-8")
+            d[key] = _decode(c)
+        return d
+    raise ProtocolError(f"unknown tag {tag!r}")
+
+
+def unpack(data: bytes) -> Any:
+    """Decode one message payload; the whole buffer must be consumed."""
+    c = _Cursor(data)
+    obj = _decode(c)
+    if c.pos != len(data):
+        raise ProtocolError(f"{len(data) - c.pos} trailing bytes in message")
+    return obj
+
+
+# ------------------------------------------------------------------ framing
+def recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes, or None on clean EOF at a frame boundary."""
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            if got == 0:
+                return None
+            raise ProtocolError("connection closed mid-frame")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def send_msg(sock: socket.socket, obj: Any, lock=None) -> None:
+    """Frame and send one message (``lock`` serializes multi-writer sides)."""
+    body = pack(obj)
+    if len(body) > MAX_FRAME:
+        raise ProtocolError(f"frame of {len(body)} bytes exceeds MAX_FRAME")
+    frame = struct.pack(">I", len(body)) + body
+    if lock is not None:
+        with lock:
+            sock.sendall(frame)
+    else:
+        sock.sendall(frame)
+
+
+def recv_msg(sock: socket.socket) -> Any:
+    """Receive one message, or None on clean EOF (peer closed)."""
+    header = recv_exact(sock, 4)
+    if header is None:
+        return None
+    (length,) = struct.unpack(">I", header)
+    if length > MAX_FRAME:
+        raise ProtocolError(f"incoming frame of {length} bytes exceeds MAX_FRAME")
+    body = recv_exact(sock, length) if length else b""
+    if body is None:
+        raise ProtocolError("connection closed mid-frame")
+    return unpack(body)

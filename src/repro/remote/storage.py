@@ -1,0 +1,326 @@
+"""Content-addressed object stores: the remote backend's storage plane.
+
+The paper's externalized-I/O claim needs a *platform-owned* data plane:
+workers never talk to each other — every byte a worker consumes comes from
+the store, and every byte it produces goes back to the store before the
+coordinator learns the result.  This module provides that plane:
+
+* :class:`ObjectStore` — the small interface (put / get / contains), keyed
+  by ``Handle.content_key()`` so an Object, a Ref and a Thunk over the same
+  bytes share one entry and the strict-memo / dedup machinery works
+  unchanged across process boundaries.  Payloads are canonical bytes (blob
+  bytes, or the concatenation of a tree's 32-byte child handles), so every
+  ``put`` is verified against the handle's own digest — the handle is its
+  own checksum, exactly like ``Repository.put_handle_data``.
+* :class:`MemoryStore` — in-memory dict store (the server-backed default).
+* :class:`FileStore` — one file per content key under a directory, written
+  atomically (tmp + rename); persistent across backends, so two runs of
+  the same program share content — cross-run dedup for free.
+* :class:`StoreServer` — serves worker connections over the framed
+  protocol (`fetch`/`put`/`contains`), one thread per worker socket.  Put
+  *notifications* fire on every fresh insert, whatever side it came from —
+  this is what feeds the scheduler's LocationIndex instead of in-process
+  repository listeners.
+* :class:`StoreClient` — the worker-side stub.
+
+Stores are deliberately ignorant of interpretations, memoization and
+scheduling: content in, content out, notify on fresh.
+"""
+from __future__ import annotations
+
+import abc
+import os
+import tempfile
+import threading
+from typing import Callable, Optional
+
+from ..core.handle import BLOB, Handle, _hash
+from .protocol import ProtocolError, recv_msg, send_msg
+
+
+class StoreError(RuntimeError):
+    """A payload failed content verification, or the store is unusable."""
+
+
+def payload_nbytes(handle: Handle) -> int:
+    """Wire/accounting size of a handle's canonical payload."""
+    return handle.size if handle.content_type == BLOB else 32 * handle.size
+
+
+def verify_payload(handle: Handle, payload: bytes) -> bool:
+    """Canonical bytes hash to the handle's digest (and match its size)?
+
+    Works uniformly for blobs and trees because a tree's canonical bytes
+    *are* the concatenation of its children's raw handles.
+    """
+    if handle.is_literal:
+        return payload == handle.literal_payload()
+    if len(payload) != payload_nbytes(handle):
+        return False
+    return _hash(payload) == handle.digest
+
+
+def decode_tree_payload(payload: bytes) -> tuple[Handle, ...]:
+    """Concatenated 32-byte raws -> Handle tuple (for Repository install)."""
+    if len(payload) % 32:
+        raise StoreError(f"tree payload of {len(payload)} bytes is not 32-aligned")
+    return tuple(Handle(payload[i:i + 32]) for i in range(0, len(payload), 32))
+
+
+def encode_tree_payload(children) -> bytes:
+    return b"".join(k.raw for k in children)
+
+
+class ObjectStore(abc.ABC):
+    """Content-addressed key/value store with fresh-put notifications.
+
+    Listeners are called as ``fn(handle, nbytes, src)`` after every fresh
+    insert — ``src`` names who produced the bytes ("client" or a worker
+    id).  The remote scheduler subscribes here to feed its LocationIndex
+    and emit trace ``put`` events: store notifications replace in-process
+    repository put listeners as the residency ground truth.
+    """
+
+    def __init__(self):
+        self._listeners: list[Callable[[Handle, int, str], None]] = []
+        self.puts = 0
+        self.gets = 0
+        self.dup_puts = 0
+
+    def add_put_listener(self, fn: Callable[[Handle, int, str], None]) -> None:
+        self._listeners.append(fn)
+
+    def _notify(self, handle: Handle, nbytes: int, src: str) -> None:
+        for fn in self._listeners:
+            fn(handle, nbytes, src)
+
+    def put(self, handle: Handle, payload: bytes, src: str = "client") -> bool:
+        """Install verified content; returns True when it was fresh."""
+        if handle.is_literal:
+            return False  # literals live inside their handles
+        if not verify_payload(handle, payload):
+            raise StoreError(f"payload does not match {handle!r}")
+        self.puts += 1
+        fresh = self._install(handle.content_key(), bytes(payload))
+        if fresh:
+            self._notify(handle, payload_nbytes(handle), src)
+        else:
+            self.dup_puts += 1
+        return fresh
+
+    def get(self, handle: Handle) -> Optional[bytes]:
+        """Canonical payload bytes, or None when absent."""
+        if handle.is_literal:
+            return handle.literal_payload()
+        self.gets += 1
+        return self._read(handle.content_key())
+
+    def contains(self, handle: Handle) -> bool:
+        if handle.is_literal:
+            return True
+        return self._has(handle.content_key())
+
+    # ------------------------------------------------------------- backend
+    @abc.abstractmethod
+    def _install(self, key: bytes, payload: bytes) -> bool:
+        """Store payload under key; True when the key was new."""
+
+    @abc.abstractmethod
+    def _read(self, key: bytes) -> Optional[bytes]: ...
+
+    @abc.abstractmethod
+    def _has(self, key: bytes) -> bool: ...
+
+    @abc.abstractmethod
+    def stats(self) -> dict: ...
+
+    def close(self) -> None:  # pragma: no cover - overridden where needed
+        pass
+
+
+class MemoryStore(ObjectStore):
+    """The in-memory server-backed store (default for ``fix.remote()``)."""
+
+    def __init__(self):
+        super().__init__()
+        self._data: dict[bytes, bytes] = {}
+        self._lock = threading.Lock()
+
+    def _install(self, key: bytes, payload: bytes) -> bool:
+        with self._lock:
+            if key in self._data:
+                return False
+            self._data[key] = payload
+            return True
+
+    def _read(self, key: bytes) -> Optional[bytes]:
+        with self._lock:
+            return self._data.get(key)
+
+    def _has(self, key: bytes) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "objects": len(self._data),
+                "bytes": sum(len(v) for v in self._data.values()),
+                "puts": self.puts, "gets": self.gets,
+                "dup_puts": self.dup_puts,
+            }
+
+
+class FileStore(ObjectStore):
+    """One file per content key under ``root`` — a local-filesystem store.
+
+    Writes are atomic (tempfile + rename into place), so a crashed writer
+    never leaves a torn object, and because names are content keys a
+    half-written temp file can never be served.  The directory outlives
+    the backend: a second run of the same program finds its inputs (and
+    any memoizable intermediate content) already present.
+    """
+
+    def __init__(self, root: str):
+        super().__init__()
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _path(self, key: bytes) -> str:
+        return os.path.join(self.root, key.hex())
+
+    def _install(self, key: bytes, payload: bytes) -> bool:
+        path = self._path(key)
+        with self._lock:
+            if os.path.exists(path):
+                return False
+            fd, tmp = tempfile.mkstemp(dir=self.root, prefix=".tmp-")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    f.write(payload)
+                os.replace(tmp, path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            return True
+
+    def _read(self, key: bytes) -> Optional[bytes]:
+        try:
+            with open(self._path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            return None
+
+    def _has(self, key: bytes) -> bool:
+        return os.path.exists(self._path(key))
+
+    def stats(self) -> dict:
+        n = nbytes = 0
+        with os.scandir(self.root) as it:
+            for entry in it:
+                if entry.name.startswith("."):
+                    continue
+                n += 1
+                nbytes += entry.stat().st_size
+        return {"objects": n, "bytes": nbytes, "puts": self.puts,
+                "gets": self.gets, "dup_puts": self.dup_puts}
+
+
+# ------------------------------------------------------------------ server
+class StoreServer:
+    """Serves worker store connections over the framed protocol.
+
+    One daemon thread per worker socket, answering ``fetch`` / ``put`` /
+    ``contains`` in order.  ``mutex`` (supplied by the backend) serializes
+    worker puts against the coordinator's own staging so residency checks
+    and put notifications interleave atomically — the trace invariant
+    "never enqueue toward a node already holding the key" depends on it.
+    """
+
+    def __init__(self, store: ObjectStore, mutex: Optional[threading.Lock] = None):
+        self.store = store
+        self._mutex = mutex if mutex is not None else threading.Lock()
+        self._threads: list[threading.Thread] = []
+        self._socks: list = []
+
+    def serve(self, sock, peer: str) -> None:
+        t = threading.Thread(target=self._serve_loop, args=(sock, peer),
+                             daemon=True, name=f"fix-store-{peer}")
+        self._socks.append(sock)
+        self._threads.append(t)
+        t.start()
+
+    def _serve_loop(self, sock, peer: str) -> None:
+        try:
+            while True:
+                msg = recv_msg(sock)
+                if msg is None:
+                    return
+                op = msg.get("op")
+                if op == "fetch":
+                    payload = self.store.get(Handle(msg["raw"]))
+                    send_msg(sock, {"payload": payload})
+                elif op == "put":
+                    h = Handle(msg["raw"])
+                    try:
+                        with self._mutex:
+                            fresh = self.store.put(h, msg["payload"], src=peer)
+                        send_msg(sock, {"ok": True, "fresh": fresh})
+                    except StoreError as e:
+                        send_msg(sock, {"ok": False, "error": str(e)})
+                elif op == "contains":
+                    send_msg(sock, {"ok": self.store.contains(Handle(msg["raw"]))})
+                else:
+                    send_msg(sock, {"ok": False, "error": f"unknown op {op!r}"})
+        except (OSError, ProtocolError):
+            return  # peer vanished: the backend reaps the worker separately
+
+    def close(self) -> None:
+        for s in self._socks:
+            try:
+                s.close()
+            except OSError:
+                pass
+        for t in self._threads:
+            t.join(timeout=5)
+
+
+# ------------------------------------------------------------------ client
+class StoreClient:
+    """Worker-side store stub: synchronous request/response on one socket."""
+
+    def __init__(self, sock):
+        self._sock = sock
+
+    def fetch(self, handle: Handle) -> Optional[bytes]:
+        if handle.is_literal:
+            return handle.literal_payload()
+        send_msg(self._sock, {"op": "fetch", "raw": handle.raw})
+        reply = recv_msg(self._sock)
+        if reply is None:
+            raise StoreError("store connection closed")
+        return reply.get("payload")
+
+    def put(self, handle: Handle, payload: bytes) -> bool:
+        if handle.is_literal:
+            return False
+        send_msg(self._sock, {"op": "put", "raw": handle.raw, "payload": payload})
+        reply = recv_msg(self._sock)
+        if reply is None:
+            raise StoreError("store connection closed")
+        if not reply.get("ok"):
+            raise StoreError(reply.get("error", "store put rejected"))
+        return bool(reply.get("fresh"))
+
+    def contains(self, handle: Handle) -> bool:
+        if handle.is_literal:
+            return True
+        send_msg(self._sock, {"op": "contains", "raw": handle.raw})
+        reply = recv_msg(self._sock)
+        if reply is None:
+            raise StoreError("store connection closed")
+        return bool(reply.get("ok"))

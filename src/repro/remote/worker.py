@@ -1,0 +1,212 @@
+"""The remote worker process: one evaluator behind two sockets.
+
+A worker is the paper's compute container made literal: a separate OS
+process holding a private :class:`~repro.core.repository.Repository` and
+:class:`~repro.core.evaluator.Evaluator`, connected to the platform by
+
+* a **control socket** — the coordinator dispatches ``submit`` steps
+  (one ``think`` reduction or one ``strictify``) with the memo pairs and
+  the pre-computed list of content the step needs; the worker answers
+  ``ran`` / ``error``.  ``heartbeat`` → ``pong`` is the liveness probe.
+* a **store socket** — the *only* data path.  Before running, the worker
+  pre-stages every needed handle from the object store (externalized I/O:
+  all movement happens before compute starts); after running, it pushes
+  every byte it created back to the store before replying, so the
+  coordinator never learns a result whose content isn't platform-owned.
+  There is no worker→worker channel at all.
+
+The repository is additionally wired with a *backing-store* fallback
+(:meth:`Repository.set_backing`): if a run touches content the need
+analysis missed, the read faults through to the store instead of dying —
+recorded in the reply's ``fetched`` list like the pre-staged content, so
+the coordinator's residency/trace accounting stays exact.
+
+Workers are forked from the backend process, so in-process codelet
+registrations (tests register codelets at import time) are inherited —
+matching how a real deployment ships the codelet bundle to containers.
+The worker is single-threaded by design: one slot per process, parallelism
+comes from the number of processes.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+from ..core.evaluator import Evaluator
+from ..core.handle import BLOB, Handle
+from ..core.repository import MissingData, Repository
+from .protocol import ProtocolError, recv_msg, send_msg
+from .storage import (
+    StoreClient,
+    decode_tree_payload,
+    encode_tree_payload,
+    payload_nbytes,
+)
+
+
+class _WorkerState:
+    """Capture bookkeeping for one dispatch: which content was fetched from
+    the store and which was freshly created by the run."""
+
+    def __init__(self, repo: Repository, store: StoreClient):
+        self.repo = repo
+        self.store = store
+        self.loading = False          # True while installing store fetches
+        self.fetched: list[Handle] = []
+        self.created: list[Handle] = []
+        repo.add_put_listener(self._on_put)
+        repo.set_backing(self._backing_fetch)
+
+    def _on_put(self, handle: Handle) -> None:
+        if not self.loading:
+            self.created.append(handle)
+
+    def _backing_fetch(self, handle: Handle):
+        """Repository read fault → store fetch (the safety net).
+
+        The backing contract: install the content (so later reads hit) and
+        return the data, or None when the store doesn't have it either.
+        """
+        payload = self.store.fetch(handle)
+        if payload is None:
+            return None
+        data = (payload if handle.content_type == BLOB
+                else decode_tree_payload(payload))
+        self.loading = True
+        try:
+            if not self.repo.put_handle_data(handle, data):
+                return None  # corrupt delivery: treat as missing
+        finally:
+            self.loading = False
+        self.fetched.append(handle)
+        return data
+
+    def reset(self) -> None:
+        self.fetched = []
+        self.created = []
+
+    def ensure(self, handle: Handle) -> None:
+        """Pre-stage one handle's own content from the store."""
+        if handle.is_literal or self.repo.contains(handle):
+            return
+        payload = self.store.fetch(handle)
+        if payload is None:
+            raise MissingData(handle)
+        data = (payload if handle.content_type == BLOB
+                else decode_tree_payload(payload))
+        self.loading = True
+        try:
+            if not self.repo.put_handle_data(handle, data):
+                raise MissingData(handle)  # corrupt delivery: rejected
+        finally:
+            self.loading = False
+        self.fetched.append(handle)
+
+    def push_created(self) -> None:
+        """Everything the run created goes to the store before we reply."""
+        for h in self.created:
+            if h.is_literal:
+                continue
+            if h.content_type == BLOB:
+                payload = self.repo.get_blob(h)
+            else:
+                payload = encode_tree_payload(self.repo.get_tree(h))
+            self.store.put(h, payload)
+
+
+def _handle_list(handles: list) -> list:
+    return [[h.raw, payload_nbytes(h)] for h in handles]
+
+
+def worker_main(ctl_sock, store_sock, worker_id: str,
+                log_path: str = None) -> None:
+    """Entry point of the forked worker process.  Never returns normally —
+    exits the process via ``os._exit`` so inherited atexit handlers (test
+    runners, coverage hooks) don't run twice."""
+    code = 0
+    try:
+        if log_path:
+            log_fd = os.open(log_path, os.O_WRONLY | os.O_CREAT | os.O_APPEND,
+                             0o644)
+            os.dup2(log_fd, 1)
+            os.dup2(log_fd, 2)
+            os.close(log_fd)
+            # rebind the Python-level streams too: the parent may have
+            # replaced sys.stdout with an object that doesn't write to
+            # fd 1 at all (pytest capture does), and the log must not
+            # depend on who forked us
+            sys.stdout = open(1, "w", buffering=1, closefd=False)
+            sys.stderr = open(2, "w", buffering=1, closefd=False)
+        sys.stdin = open(os.devnull)
+        print(f"[{worker_id}] up, pid={os.getpid()}", flush=True)
+        _serve(ctl_sock, store_sock, worker_id)
+        print(f"[{worker_id}] clean shutdown", flush=True)
+    except BaseException:
+        traceback.print_exc()
+        print(f"[{worker_id}] dying", flush=True)
+        code = 1
+    finally:
+        sys.stdout.flush()
+        sys.stderr.flush()
+        os._exit(code)
+
+
+def _serve(ctl_sock, store_sock, worker_id: str) -> None:
+    repo = Repository(worker_id)
+    evaluator = Evaluator(repo)
+    state = _WorkerState(repo, StoreClient(store_sock))
+    while True:
+        msg = recv_msg(ctl_sock)
+        if msg is None:
+            return  # coordinator vanished
+        op = msg.get("op")
+        if op == "shutdown":
+            return
+        if op == "heartbeat":
+            send_msg(ctl_sock, {"op": "pong", "nonce": msg.get("nonce")})
+            continue
+        if op == "submit":
+            send_msg(ctl_sock, _run_submit(evaluator, state, msg, worker_id))
+            continue
+        raise ProtocolError(f"unknown op {op!r}")
+
+
+def _run_submit(evaluator: Evaluator, state: _WorkerState, msg: dict,
+                worker_id: str) -> dict:
+    """One dispatched step: install memos, pre-stage, run, push, reply."""
+    repo = state.repo
+    state.reset()
+    job, epoch, kind = msg["job"], msg["epoch"], msg["kind"]
+    try:
+        for enc_raw, res_raw in msg.get("memos", ()):
+            enc, res = Handle(enc_raw), Handle(res_raw)
+            repo.memo_put(enc, res)
+            repo.memo_put(enc.unwrap_encode(), res)
+        for raw in msg.get("needs", ()):
+            state.ensure(Handle(raw))
+        target = Handle(msg["target"])
+        print(f"[{worker_id}] job={job} epoch={epoch} {kind} "
+              f"{target!r}", flush=True)
+        if kind == "think":
+            result = evaluator.think(target)
+        elif kind == "strictify":
+            result = evaluator.strictify(target)
+        else:
+            raise ProtocolError(f"unknown submit kind {kind!r}")
+        state.push_created()
+        return {"op": "ran", "job": job, "epoch": epoch, "result": result.raw,
+                "fetched": _handle_list(state.fetched),
+                "created": _handle_list(state.created)}
+    except BaseException as e:  # noqa: BLE001 — every failure becomes a typed reply
+        print(f"[{worker_id}] job={job} failed: {type(e).__name__}: {e}",
+              flush=True)
+        traceback.print_exc()
+        try:
+            state.push_created()  # partial content is still valid content
+        except Exception:  # noqa: BLE001
+            pass
+        return {"op": "error", "job": job, "epoch": epoch,
+                "etype": type(e).__name__, "emsg": str(e),
+                "fetched": _handle_list(state.fetched),
+                "created": _handle_list(state.created)}

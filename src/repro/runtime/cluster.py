@@ -134,6 +134,7 @@ class Cluster:
         node_ram: int = 64 << 30,
         transfer_mode: str = "batched",    # "batched" | "per_handle" (seed A/B)
         prefetch: bool = True,             # stage known needs during WAIT_CHILDREN
+        prefetch_depth: int = 1,           # >1: follow child Encodes' definitions
         clock: Optional[Clock] = None,     # WallClock (default) | VirtualClock
         trace: Optional[TraceRecorder] = None,  # opt-in event capture
         faults=None,                       # FaultSchedule: seeded injections
@@ -147,6 +148,9 @@ class Cluster:
         self.placement = placement
         self.io_mode = io_mode
         self.prefetch = prefetch
+        if prefetch_depth < 1:
+            raise ValueError("prefetch_depth must be >= 1")
+        self.prefetch_depth = prefetch_depth
         self.rng = random.Random(seed)
         self._own_clock = clock is None  # we close only what we created
         self.clock = clock if clock is not None else WallClock()
@@ -803,7 +807,7 @@ class Cluster:
                 self._events.put(("submit", c, None, job.id, False, None))
             # overlap child compute with data movement: stage what we
             # already know this job needs toward its tentative placement
-            self._maybe_prefetch(needs)
+            self._maybe_prefetch(needs, children=unresolved)
             return
         # fold resolved child results into the staging set
         for enc in children:
@@ -903,7 +907,7 @@ class Cluster:
             job._strict_children = children  # type: ignore[attr-defined]
             for c in unresolved:
                 self._events.put(("submit", c, None, job.id, False, None))
-            self._maybe_prefetch(stage, node_id=job.node)
+            self._maybe_prefetch(stage, node_id=job.node, children=unresolved)
             return
         job._strict_children = children  # type: ignore[attr-defined]
         job.phase = STRICT_STAGE
@@ -1201,14 +1205,20 @@ class Cluster:
         return pending
 
     def _maybe_prefetch(self, needs: list[Handle],
-                        node_id: Optional[str] = None) -> None:
+                        node_id: Optional[str] = None,
+                        children: Optional[list] = None) -> None:
         """Job is blocked on children: start moving its already-known needs
         toward the (tentative) placement so data motion overlaps compute.
+        With ``prefetch_depth > 1`` the pending child Encodes' own
+        definitions are followed ``depth - 1`` levels down and *their*
+        known needs staged too (depth 1 = exactly the seed behaviour).
         Externalized locality mode only — the ablations must keep their
         seed behaviour — and never toward a dead node."""
         if not self.prefetch or self.io_mode != "external" or self.placement == "random":
             return
         cands = [h for h in needs if not h.is_literal]
+        if self.prefetch_depth > 1 and children:
+            cands.extend(self._deeper_needs(children, self.prefetch_depth - 1))
         if not cands:
             return
         if node_id is not None:
@@ -1223,6 +1233,33 @@ class Cluster:
         if self.trace is not None:
             self.trace.emit("prefetch", node=node.id, n=len(cands))
         self._stage_missing(node, cands, None, recompute=False)
+
+    def _deeper_needs(self, children: list, depth: int) -> list[Handle]:
+        """Known data needs of pending child Encodes, ``depth`` levels of
+        definitions down.  Best-effort by construction: a definition whose
+        trees aren't readable yet contributes nothing (no recompute, no
+        failure) — prefetch only ever moves content that already exists."""
+        out: list[Handle] = []
+        frontier = list(children)
+        seen: set[bytes] = set()
+        for _ in range(depth):
+            nxt: list[Handle] = []
+            for enc in frontier:
+                if enc.raw in seen or not enc.is_encode():
+                    continue
+                seen.add(enc.raw)
+                if self._memo.get(enc.raw) is not None:
+                    continue  # resolved: its result is staged, not prefetched
+                try:
+                    needs, kids, _ = self._step_needs(enc.unwrap_encode())
+                except (MissingData, ValueError):
+                    continue
+                out.extend(h for h in needs if not h.is_literal)
+                nxt.extend(kids)
+            frontier = nxt
+            if not frontier:
+                break
+        return out
 
     def _read_source(self, src: str, h: Handle):
         """Read a transfer payload from a source replica, verified under

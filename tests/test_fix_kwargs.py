@@ -1,0 +1,129 @@
+"""Kwargs/defaults for ``@fix.codelet``: keys survive adding parameters.
+
+The encoding rule under test: required parameters travel positionally in
+the combination; optional (defaulted) parameters travel — only when the
+provided value differs from the default — in one trailing Tree of
+``[utf8-name-blob, value]`` pairs, in signature order.  All-default calls
+therefore compile to byte-identical combinations as calls to the codelet
+*before it grew the defaults* — old call sites keep their content keys
+(and their memoized results).
+"""
+import pytest
+
+import repro.fix as fix
+from repro.core import Repository
+from repro.core.procedures import procedure_blob
+from repro.core.stdlib import add
+from repro.fix.codelet import DEFAULT_LIMITS
+from repro.fix.marshal import MarshalError, marshal
+
+pytestmark = pytest.mark.usefixtures("no_thread_leaks")
+
+
+@fix.codelet
+def scaled_sum(a: int, b: int, factor: int = 1, offset: int = 0) -> int:
+    return (a + b) * factor + offset
+
+
+@fix.codelet
+def tag(payload: bytes, label: str = "default") -> bytes:
+    return label.encode() + b":" + payload
+
+
+def _old_style(repo, name, *arg_values):
+    """A combination hand-built the way a pre-defaults client would:
+    ``[limits, procedure, arg...]`` — nothing trailing."""
+    kids = [repo.put_blob(DEFAULT_LIMITS), repo.put_blob(procedure_blob(name))]
+    kids.extend(marshal(repo, v, type(v)) for v in arg_values)
+    return repo.put_tree(kids).application()
+
+
+class TestKeyPreservation:
+    def test_all_default_call_keeps_old_key(self):
+        repo = Repository("t")
+        assert (scaled_sum(3, 4).compile(repo).raw
+                == _old_style(repo, "scaled_sum", 3, 4).raw)
+
+    def test_explicitly_passing_the_default_still_elides(self):
+        repo = Repository("t")
+        base = scaled_sum(3, 4).compile(repo).raw
+        assert scaled_sum(3, 4, factor=1).compile(repo).raw == base
+        assert scaled_sum(3, 4, factor=1, offset=0).compile(repo).raw == base
+        assert scaled_sum(3, 4, 1, 0).compile(repo).raw == base  # positional
+
+    def test_property_old_call_sites_keep_their_keys(self):
+        """For a spread of argument values, the defaults-era codelet
+        compiles the same combination the pre-defaults codelet would
+        have — the ISSUE's property, checked exhaustively over a grid."""
+        repo = Repository("t")
+        for a in (-(2**40), -1, 0, 1, 7, 2**40):
+            for b in (0, 5, -3):
+                assert (scaled_sum(a, b).compile(repo).raw
+                        == _old_style(repo, "scaled_sum", a, b).raw)
+        for payload in (b"", b"x", b"payload" * 20):
+            assert (tag(payload).compile(repo).raw
+                    == _old_style(repo, "tag", payload).raw)
+
+    def test_override_changes_the_key(self):
+        repo = Repository("t")
+        base = scaled_sum(3, 4).compile(repo).raw
+        h1 = scaled_sum(3, 4, factor=2).compile(repo).raw
+        h2 = scaled_sum(3, 4, offset=9).compile(repo).raw
+        assert len({base, h1, h2}) == 3
+
+    def test_override_key_is_deterministic_and_order_insensitive(self):
+        repo = Repository("t")
+        # kwargs pairs ride in *signature* order, not call order
+        h1 = scaled_sum(3, 4, factor=2, offset=9).compile(repo).raw
+        h2 = scaled_sum(3, 4, offset=9, factor=2).compile(repo).raw
+        assert h1 == h2
+
+
+class TestEvaluation:
+    def test_defaults_and_overrides_evaluate(self):
+        with fix.local() as be:
+            assert be.run(scaled_sum(3, 4)) == 7
+            assert be.run(scaled_sum(3, 4, factor=2)) == 14
+            assert be.run(scaled_sum(3, 4, offset=9)) == 16
+            assert be.run(scaled_sum(3, 4, factor=2, offset=9)) == 23
+            assert be.run(tag(b"p")) == b"default:p"
+            assert be.run(tag(b"p", label="v2")) == b"v2:p"
+
+    def test_lazy_value_in_kwarg_position(self):
+        with fix.local() as be:
+            assert be.run(scaled_sum(1, 1, factor=add(1, 2))) == 6
+
+    def test_legacy_positional_combination_still_evaluates(self):
+        """A combination minted before ``factor``/``offset`` had defaults
+        carries them positionally; the same shim must accept it."""
+        with fix.local() as be:
+            comb = _old_style(be.repo, "scaled_sum", 3, 4, 2, 9)
+            assert be.fetch(be.submit(comb), as_type=int) == 23
+
+    def test_remote_backend_agrees(self):
+        with fix.local() as lb:
+            want = lb.evaluate(scaled_sum(5, 6, factor=3)).raw
+        with fix.remote(n_workers=2) as be:
+            assert be.evaluate(scaled_sum(5, 6, factor=3)).raw == want
+            assert be.run(scaled_sum(5, 6, factor=3)) == 33
+
+
+class TestValidation:
+    def test_required_after_default_rejected(self):
+        # (Python itself forbids `a: int = 1, b: int` positionally —
+        # keyword-only is the spelling that can reach our decorator)
+        with pytest.raises(MarshalError, match="follows a defaulted"):
+            @fix.codelet
+            def bad2(a: int = 1, *, b: int) -> int:
+                return a + b
+
+    def test_wrong_arity_still_rejected(self):
+        with fix.local() as be:
+            comb = _old_style(be.repo, "scaled_sum", 1, 2, 3)  # 3 of 2|4 args
+            from repro.core import FixError
+            with pytest.raises(FixError):
+                be.fetch(be.submit(comb), as_type=int, timeout=30)
+
+    def test_unknown_kwarg_rejected_client_side(self):
+        with pytest.raises(MarshalError):
+            scaled_sum(1, 2, scale=3)

@@ -1,0 +1,273 @@
+"""The real multi-process backend: protocol, object stores, fix.remote().
+
+Everything the simulated cluster asserts semantically, asserted again
+across an actual process boundary: byte-identical content keys, storage-
+routed data movement, PR-4-schema traces that pass the invariant checker,
+and typed errors (never hangs) when a worker process dies.
+"""
+import os
+import socket
+import time
+
+import pytest
+
+import repro.fix as fix
+from repro.core import Repository
+from repro.core.handle import TREE
+from repro.core.stdlib import add, checksum_tree, fib, identity, inc_chain
+from repro.fix.future import DeadlineExceeded
+from repro.remote import (
+    FileStore,
+    MemoryStore,
+    RemoteBackend,
+    StoreError,
+    WorkerCrashed,
+)
+from repro.remote.protocol import (
+    ProtocolError,
+    pack,
+    recv_msg,
+    send_msg,
+    unpack,
+)
+from repro.remote.storage import encode_tree_payload, payload_nbytes
+from repro.runtime import TraceRecorder, verify_invariants
+
+pytestmark = pytest.mark.usefixtures("no_thread_leaks")
+
+
+# A codelet that blocks long enough to kill its worker mid-flight.  Defined
+# at module import so it is registered before fix.remote() forks workers.
+@fix.codelet
+def stall(ms: int) -> int:
+    time.sleep(ms / 1000.0)
+    return ms
+
+
+@fix.codelet
+def crash_div(a: int, b: int) -> int:
+    return a // b
+
+
+# ---------------------------------------------------------------- protocol
+class TestProtocol:
+    def test_roundtrip_values(self):
+        samples = [
+            None, True, False, 0, -1, 2**40, b"", b"\x00\xffpayload",
+            "unicode ☃", [1, [2, b"x"], "y"],
+            {"op": "submit", "needs": [b"a", b"b"], "n": 3},
+        ]
+        for v in samples:
+            assert unpack(pack(v)) == v
+
+    def test_unpack_rejects_trailing_garbage(self):
+        with pytest.raises(ProtocolError):
+            unpack(pack(1) + b"x")
+
+    def test_unpack_rejects_bad_tag(self):
+        with pytest.raises(ProtocolError):
+            unpack(b"Z")
+
+    def test_socket_framing(self):
+        a, b = socket.socketpair()
+        try:
+            msg = {"op": "fetch", "key": b"k" * 24, "deep": [1, 2, 3]}
+            send_msg(a, msg)
+            assert recv_msg(b) == msg
+            a.close()
+            assert recv_msg(b) is None  # clean EOF at a frame boundary
+        finally:
+            for s in (a, b):
+                try:
+                    s.close()
+                except OSError:
+                    pass
+
+    def test_midframe_eof_is_an_error(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall((1 << 20).to_bytes(4, "big") + b"partial")
+            a.close()
+            with pytest.raises(ProtocolError):
+                recv_msg(b)
+        finally:
+            b.close()
+
+
+# ------------------------------------------------------------------ stores
+class TestStores:
+    @staticmethod
+    def _canonical(repo, h):
+        """Canonical store payload: blob bytes, or a tree's concatenated
+        child raws (what the backend itself ships over the wire)."""
+        if h.content_type == TREE:
+            return encode_tree_payload(repo.get_tree(h))
+        return repo.get_blob(h)
+
+    def _exercise(self, store):
+        repo = Repository("t")
+        blob = repo.put_blob(b"remote-store-payload" * 100)
+        tree = repo.put_tree([blob, repo.put_blob(b"x" * 64)])
+        for h in (blob, tree):
+            payload = self._canonical(repo, h)
+            assert store.put(h, payload, src="client")      # fresh
+            assert not store.put(h, payload, src="client")  # dup
+            assert store.contains(h)
+            assert store.get(h) == payload
+        missing = repo.put_blob(b"n" * 77)  # resident in repo, not in store
+        assert not store.contains(missing)
+        assert store.get(missing) is None
+        st = store.stats()
+        assert st["objects"] == 2 and st["bytes"] == (
+            payload_nbytes(blob) + payload_nbytes(tree))
+
+    def test_memory_store(self):
+        self._exercise(MemoryStore())
+
+    def test_file_store(self, tmp_path):
+        self._exercise(FileStore(tmp_path))
+
+    def test_file_store_persistence(self, tmp_path):
+        repo = Repository("t")
+        h = repo.put_blob(b"durable" * 50)
+        FileStore(tmp_path).put(h, repo.raw_payload(h))
+        reopened = FileStore(tmp_path)  # a new instance over the same root
+        assert reopened.contains(h)
+        assert reopened.get(h) == repo.raw_payload(h)
+
+    def test_put_verifies_payload(self):
+        repo = Repository("t")
+        h = repo.put_blob(b"honest bytes" * 10)
+        with pytest.raises(StoreError):
+            MemoryStore().put(h, b"forged bytes!" * 10)
+
+    def test_literals_never_stored(self):
+        h = Repository("t").put_blob(b"tiny")
+        store = MemoryStore()
+        assert not store.put(h, b"tiny")
+        assert store.stats()["objects"] == 0
+
+    def test_put_listener_fires_on_fresh_only(self):
+        repo = Repository("t")
+        h = repo.put_blob(b"listened" * 20)
+        store = MemoryStore()
+        seen = []
+        store.add_put_listener(lambda hh, n, src: seen.append((hh.raw, n, src)))
+        store.put(h, repo.raw_payload(h), src="w0")
+        store.put(h, repo.raw_payload(h), src="w1")
+        assert seen == [(h.raw, payload_nbytes(h), "w0")]
+
+
+# ------------------------------------------------------------- the backend
+class TestRemoteBackend:
+    def test_quick_results(self):
+        with fix.remote(n_workers=2) as be:
+            assert be.run(add(40, 2)) == 42
+            assert be.run(fib(10)) == 55
+            assert be.run(inc_chain(0, 7)) == 7  # tail-call chain
+
+    def test_matches_local_content_keys(self):
+        progs = [add(40, 2), fib(9), inc_chain(3, 4)]
+        with fix.local() as lb:
+            want = [lb.evaluate(p).raw for p in progs]
+        with fix.remote(n_workers=2) as be:
+            got = [be.evaluate(p).raw for p in progs]
+        assert got == want
+
+    def test_memo_hit_no_second_run(self):
+        with fix.remote(n_workers=2) as be:
+            h1 = be.evaluate(fib(8))
+            h2 = be.evaluate(fib(8))
+            assert h1.raw == h2.raw
+
+    def test_selection_and_handle_passthrough(self):
+        with fix.remote(n_workers=2) as be:
+            tree = be.repo.put_tree(
+                [be.repo.put_blob(bytes([i]) * 40) for i in range(4)])
+            assert be.run(fix.lit(identity(tree))[2],
+                          timeout=60) == bytes([2]) * 40
+
+    def test_error_propagates_typed(self):
+        # the evaluator wraps codelet exceptions in FixError on every
+        # backend; remote must rebuild the same type, not hang or bury it
+        from repro.core import FixError
+        with fix.local() as lb:
+            with pytest.raises(FixError):
+                lb.run(crash_div(1, 0), timeout=60)
+        with fix.remote(n_workers=2) as be:
+            with pytest.raises(FixError, match="ZeroDivision"):
+                be.run(crash_div(1, 0), timeout=60)
+            assert be.run(crash_div(6, 3), timeout=60) == 2  # backend survives
+
+    def test_ping(self):
+        with fix.remote(n_workers=2) as be:
+            assert be.ping() == {"w0": True, "w1": True}
+
+    def test_deadline(self):
+        with fix.remote(n_workers=1) as be:
+            with pytest.raises(DeadlineExceeded):
+                be.submit(stall(5000), deadline_s=0.2).result(timeout=30)
+
+    def test_file_store_backend(self, tmp_path):
+        with fix.remote(n_workers=2, store="file", store_dir=tmp_path) as be:
+            assert be.run(fib(9)) == 34
+            assert be.stats()["store"]["objects"] > 0
+        # the store outlives the backend: a fresh run reuses nothing but
+        # proves the on-disk objects still verify
+        fs = FileStore(tmp_path)
+        assert fs.stats()["objects"] > 0
+
+    def test_all_movement_is_store_routed_and_trace_verifies(self, tmp_path):
+        path = tmp_path / "remote_trace.jsonl"
+        tr = TraceRecorder()
+        with fix.local() as lb:
+            ltree = lb.repo.put_tree(
+                [lb.repo.put_blob(bytes([i]) * 4096) for i in range(5)])
+            want = lb.run(checksum_tree(ltree))
+        with RemoteBackend(n_workers=2, trace=tr) as be:
+            tree = be.repo.put_tree(
+                [be.repo.put_blob(bytes([i]) * 4096) for i in range(5)])
+            assert be.run(checksum_tree(tree), timeout=120) == want
+            assert be.run(fib(9)) == 34
+        tr.save(path)
+        assert verify_invariants(tr.events) == []
+        moves = [e for e in tr.events if e.kind == "transfer_deliver"]
+        assert moves, "expected store-routed transfers"
+        # the store is always one endpoint: never worker-to-worker ad hoc
+        for e in moves:
+            assert "store" in (e.fields["src"], e.fields["dst"])
+        assert any(e.kind == "job_finish" for e in tr.events)
+        # the saved JSONL round-trips through the PR-4 loader/checker
+        from repro.runtime.trace import load_trace
+        assert verify_invariants(load_trace(path)) == []
+
+    def test_worker_crash_is_typed_not_a_hang(self):
+        with fix.remote(n_workers=2) as be:
+            fut = be.submit(stall(60000))
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                if any(w.outstanding for w in be._workers.values()):
+                    break
+                time.sleep(0.01)
+            for w in be._workers.values():
+                w.proc.kill()
+            with pytest.raises(WorkerCrashed):
+                fut.result(timeout=30)
+            # with every worker dead, new submissions fail fast too
+            with pytest.raises(WorkerCrashed):
+                be.submit(add(1, 2)).result(timeout=30)
+
+    def test_worker_logs_exist(self):
+        with fix.remote(n_workers=2) as be:
+            be.run(add(1, 2))
+            logs = [w.log_path for w in be._workers.values()]
+        assert all(os.path.exists(p) for p in logs)
+
+
+# ------------------------------------------------------ streaming the tree
+def test_remote_fetch_stream_children_arrive_incrementally():
+    with fix.remote(n_workers=2) as be:
+        tree = be.repo.put_tree(
+            [be.repo.put_blob(bytes([i]) * 512) for i in range(4)])
+        out = list(be.fetch_stream(fix.lit(identity(tree)), timeout=60))
+        assert out == [bytes([i]) * 512 for i in range(4)]
