@@ -26,6 +26,7 @@ FIGS = {
     "sweep": figures.fig_sweep,
     "waterfall": figures.fig_waterfall,
     "chaos": figures.fig_chaos,
+    "remote_chaos": figures.fig_remote_chaos,
 }
 
 

@@ -10,11 +10,20 @@ externalized-I/O claims meet a real process boundary.
 Entry point: ``fix.remote(n_workers=...)`` (or :func:`remote` here).
 """
 from .backend import RemoteBackend, RemoteError, WorkerCrashed, remote
-from .protocol import ProtocolError
+from .chaos import RemoteChaos, seeded_chaos
+from .protocol import (
+    BadTag,
+    FrameTooLarge,
+    FrameTruncated,
+    ProtocolError,
+    retriable,
+)
 from .storage import FileStore, MemoryStore, ObjectStore, StoreError
 
 __all__ = [
     "RemoteBackend", "RemoteError", "WorkerCrashed", "remote",
+    "RemoteChaos", "seeded_chaos",
     "ObjectStore", "MemoryStore", "FileStore", "StoreError",
-    "ProtocolError",
+    "ProtocolError", "FrameTruncated", "FrameTooLarge", "BadTag",
+    "retriable",
 ]

@@ -1,0 +1,259 @@
+"""Deterministic fault injection for the real multi-process backend.
+
+The simulated cluster's :mod:`repro.runtime.faults` pins faults to
+virtual-clock instants; real processes have no virtual clock, so this shim
+pins them to **deterministic event counts** instead — the Nth control-plane
+send to a worker, the Nth store put, the Nth heartbeat — and acts through
+*real* mechanisms:
+
+==========================  ===============================================
+injection                   mechanism
+==========================  ===============================================
+``kill_worker``             SIGKILL the worker process at the Nth
+                            control-plane send (after the frame leaves) or
+                            the Nth reply received from it
+``truncate_frame``          write a partial frame then ``shutdown(WR)`` the
+                            control socket: the worker sees a mid-frame EOF
+                            (:class:`~repro.remote.protocol.FrameTruncated`)
+                            and dies; the backend sees the EOF and recovers
+``drop_frame``              swallow the Nth control-plane send entirely
+                            (pair with ``dispatch_timeout_s`` so the
+                            watchdog resubmits the stranded step)
+``delay_frame``             sleep before the Nth control-plane send
+``stall_heartbeats``        swallow the next N pongs from a worker so the
+                            monitor counts misses and (past the budget)
+                            fences the process
+``rot_store``               flip a byte of the Nth freshly-put store object
+                            *at rest* (the backend's ``verify_reads``
+                            catches it on the next read → quarantine +
+                            recovery)
+==========================  ===============================================
+
+Every applied injection is recorded in :attr:`log` and emitted as a PR-6
+typed ``fault`` trace event, so fault-mode ``verify_invariants`` checks a
+chaotic real run exactly like a chaotic simulated one: the backend's own
+recovery events (``fault fault=crash``, ``worker_respawn``, ``node_join``,
+``corruption_detected``, ``quarantine``, ``job_resubmit``) answer every
+injected loss.
+
+Determinism caveat, stated honestly: the *schedule* is deterministic (same
+seed → same injection points, counted per worker), but real thread/process
+interleaving varies between runs, so which logical step a given send index
+carries can vary.  The chaos invariant the tests assert is therefore
+schedule-shaped, not replay-shaped: every run either completes with
+byte-identical results or fails with an attributed typed error — never
+hangs, never silently corrupts.
+
+Usage::
+
+    chaos = (RemoteChaos(seed=7)
+             .kill_worker("w0", after_send=1)
+             .rot_store(at_put=3))
+    with fix.remote(n_workers=2, chaos=chaos, trace=tr) as be:
+        ...
+
+or seeded, mirroring the simulator's schedule-from-seed idiom::
+
+    chaos = seeded_chaos(seed, wids=["w0", "w1"])
+"""
+from __future__ import annotations
+
+import random
+import socket
+import struct
+import threading
+import time
+from typing import Optional
+
+from .protocol import pack, send_msg
+
+__all__ = ["RemoteChaos", "seeded_chaos"]
+
+
+class RemoteChaos:
+    """A declarative, count-indexed fault schedule for ``fix.remote()``.
+
+    Build with the chainable ``kill_worker`` / ``truncate_frame`` /
+    ``drop_frame`` / ``delay_frame`` / ``stall_heartbeats`` / ``rot_store``
+    methods, then pass as ``fix.remote(chaos=...)`` — the backend binds the
+    shim (arming ``store.verify_reads``) and routes control-plane sends,
+    reply receipts, heartbeat pongs and store puts through it.  All indices
+    are 0-based per-worker (or per-store) event counts.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self._lock = threading.Lock()
+        self._backend = None
+        # event counters
+        self._sends: dict[str, int] = {}
+        self._recvs: dict[str, int] = {}
+        self._puts = 0
+        # armed injections
+        self._kills: set[tuple] = set()          # (wid, plane, idx)
+        self._truncs: set[tuple] = set()         # (wid, idx)
+        self._drops: set[tuple] = set()          # (wid, idx)
+        self._delays: dict[tuple, float] = {}    # (wid, idx) -> seconds
+        self._stalls: dict[str, int] = {}        # wid -> pongs to swallow
+        self._rots: set[int] = set()             # put indices
+        self.log: list[tuple] = []               # applied injections
+
+    # ------------------------------------------------------------ builders
+    def kill_worker(self, wid: str, *, after_send: Optional[int] = None,
+                    after_recv: Optional[int] = None) -> "RemoteChaos":
+        """SIGKILL ``wid`` right after its Nth control-plane send (the
+        frame still arrives — mid-job death) or Nth received reply."""
+        if after_send is None and after_recv is None:
+            raise ValueError("need after_send or after_recv")
+        if after_send is not None:
+            self._kills.add((wid, "send", after_send))
+        if after_recv is not None:
+            self._kills.add((wid, "recv", after_recv))
+        return self
+
+    def truncate_frame(self, wid: str, *, at_send: int) -> "RemoteChaos":
+        """Cut the Nth control frame to ``wid`` in half and close the write
+        side — a mid-frame EOF on a real socket."""
+        self._truncs.add((wid, at_send))
+        return self
+
+    def drop_frame(self, wid: str, *, at_send: int) -> "RemoteChaos":
+        """Swallow the Nth control frame to ``wid`` (silent loss)."""
+        self._drops.add((wid, at_send))
+        return self
+
+    def delay_frame(self, wid: str, *, at_send: int,
+                    delay_s: float = 0.2) -> "RemoteChaos":
+        """Stall the Nth control frame to ``wid`` for ``delay_s``."""
+        self._delays[(wid, at_send)] = delay_s
+        return self
+
+    def stall_heartbeats(self, wid: str, *, count: int) -> "RemoteChaos":
+        """Swallow the next ``count`` pongs from ``wid`` — past the miss
+        budget the monitor fences (SIGKILLs) the worker."""
+        self._stalls[wid] = self._stalls.get(wid, 0) + count
+        return self
+
+    def rot_store(self, *, at_put: int) -> "RemoteChaos":
+        """Flip a byte of the Nth freshly-installed store object at rest."""
+        self._rots.add(at_put)
+        return self
+
+    # ------------------------------------------------------------- binding
+    def bind(self, backend) -> None:
+        """Called by the backend constructor: subscribe to store puts (for
+        at-rest rot) and remember where to emit trace events."""
+        self._backend = backend
+        backend.store.add_put_listener(self._on_store_put)
+
+    def close(self) -> None:
+        self._backend = None
+
+    # ------------------------------------------------------------ hooks
+    def ctl_send(self, w, msg: dict) -> None:
+        """The backend's control-plane send, with injections applied."""
+        wid = w.wid
+        with self._lock:
+            idx = self._sends.get(wid, 0)
+            self._sends[wid] = idx + 1
+            delay = self._delays.get((wid, idx))
+            drop = (wid, idx) in self._drops
+            trunc = (wid, idx) in self._truncs
+            kill = (wid, "send", idx) in self._kills
+        if delay:
+            self._emit("delay_frame", node=wid, at=idx, delay_s=delay)
+            time.sleep(delay)
+        if drop:
+            self._emit("drop_frame", node=wid, at=idx)
+            return
+        if trunc:
+            self._emit("truncate_frame", node=wid, at=idx)
+            body = pack(msg)
+            frame = struct.pack(">I", len(body)) + body
+            with w.send_lock:
+                try:
+                    w.ctl.sendall(frame[:max(5, len(frame) // 2)])
+                    w.ctl.shutdown(socket.SHUT_WR)
+                except OSError:
+                    pass
+            return
+        send_msg(w.ctl, msg, lock=w.send_lock)
+        if kill:
+            self._emit("kill_worker", node=wid, at=idx, plane="send")
+            self._kill(w)
+
+    def on_ctl_recv(self, w) -> None:
+        """Called by the backend's reader for every worker reply."""
+        with self._lock:
+            idx = self._recvs.get(w.wid, 0)
+            self._recvs[w.wid] = idx + 1
+            kill = (w.wid, "recv", idx) in self._kills
+        if kill:
+            self._emit("kill_worker", node=w.wid, at=idx, plane="recv")
+            self._kill(w)
+
+    def take_pong(self, wid: str) -> bool:
+        """Consulted per received pong; False = swallow it (stall)."""
+        with self._lock:
+            n = self._stalls.get(wid, 0)
+            if n <= 0:
+                return True
+            self._stalls[wid] = n - 1
+        self._emit("stall_heartbeat", node=wid)
+        return False
+
+    # ------------------------------------------------------------ internal
+    def _on_store_put(self, handle, nbytes: int, src: str) -> None:
+        be = self._backend
+        with self._lock:
+            idx = self._puts
+            self._puts += 1
+            rot = idx in self._rots
+        if rot and be is not None:
+            if be.store._corrupt(handle.content_key()):
+                self._emit("rot_store", node="store", at=idx,
+                           key=handle.content_key().hex())
+
+    @staticmethod
+    def _kill(w) -> None:
+        try:
+            w.proc.kill()
+        except Exception:  # noqa: BLE001 - already dead is fine
+            pass
+
+    def _emit(self, fault: str, **fields) -> None:
+        self.log.append((fault, fields))
+        be = self._backend
+        tr = be.trace if be is not None else None
+        if tr is not None:
+            tr.emit("fault", fault=fault, applied=True, **fields)
+
+
+def seeded_chaos(seed: int, wids, *, n_faults: int = 2,
+                 kinds=("kill", "truncate", "rot", "stall")) -> RemoteChaos:
+    """Build a :class:`RemoteChaos` schedule from a seed — the remote
+    analogue of the simulator's schedule-from-seed idiom.  The same seed
+    always arms the same injections at the same event counts."""
+    rng = random.Random(seed)
+    chaos = RemoteChaos(seed=seed)
+    wids = list(wids)
+    for _ in range(n_faults):
+        kind = rng.choice(list(kinds))
+        wid = rng.choice(wids)
+        if kind == "kill":
+            plane = rng.choice(["send", "recv"])
+            chaos.kill_worker(wid, **{f"after_{plane}": rng.randrange(0, 6)})
+        elif kind == "truncate":
+            chaos.truncate_frame(wid, at_send=rng.randrange(0, 6))
+        elif kind == "drop":
+            chaos.drop_frame(wid, at_send=rng.randrange(0, 6))
+        elif kind == "delay":
+            chaos.delay_frame(wid, at_send=rng.randrange(0, 6),
+                              delay_s=rng.uniform(0.02, 0.2))
+        elif kind == "rot":
+            chaos.rot_store(at_put=rng.randrange(0, 10))
+        elif kind == "stall":
+            chaos.stall_heartbeats(wid, count=rng.randrange(2, 8))
+        else:
+            raise ValueError(f"unknown chaos kind {kind!r}")
+    return chaos

@@ -42,7 +42,44 @@ MAX_FRAME = 1 << 30  # 1 GiB: far above any single message we produce
 
 
 class ProtocolError(RuntimeError):
-    """A malformed frame or an unknown tag on the wire."""
+    """A malformed frame or an unknown tag on the wire.
+
+    Subclasses split the failure modes the backend treats differently:
+    :class:`FrameTruncated` is a *connection*-level loss (the peer or the
+    wire died mid-frame) — the stream is gone but nothing says the peer
+    misbehaved, so the backend may retry the work elsewhere.
+    :class:`FrameTooLarge` and :class:`BadTag` are *protocol*-level: the
+    peer produced bytes our codec cannot have produced, so resending the
+    same message can only fail the same way — fatal, never retried.
+    """
+
+
+class FrameTruncated(ProtocolError):
+    """The connection closed (or the buffer ended) mid-frame: a partial
+    length header, a short payload, or a value cut off inside a message.
+    Retriable — the *channel* failed, not the conversation."""
+
+
+class FrameTooLarge(ProtocolError):
+    """A frame length over ``MAX_FRAME`` (ours or the peer's).  Fatal: a
+    header this size means framing desync or a hostile/buggy peer."""
+
+
+class BadTag(ProtocolError):
+    """An unknown type tag, a non-str dict key, an unencodable value, or
+    trailing garbage — the payload is not our encoding.  Fatal."""
+
+
+def retriable(exc: BaseException) -> bool:
+    """Is this wire failure safe to answer with respawn-and-resubmit?
+
+    ``OSError`` (socket died) and :class:`FrameTruncated` (stream cut
+    mid-frame) are connection casualties: the work they carried is
+    re-derivable, so the backend retries it.  Everything else —
+    :class:`BadTag`, :class:`FrameTooLarge`, generic
+    :class:`ProtocolError` — indicates a corrupted conversation where a
+    retry would re-poison the channel."""
+    return isinstance(exc, (OSError, FrameTruncated))
 
 
 # ---------------------------------------------------------------- encoding
@@ -57,7 +94,7 @@ def _encode(obj: Any, out: list) -> None:
         try:
             out.append(b"I" + obj.to_bytes(8, "little", signed=True))
         except OverflowError as e:
-            raise ProtocolError(f"int {obj!r} does not fit 8 bytes") from e
+            raise BadTag(f"int {obj!r} does not fit 8 bytes") from e
     elif isinstance(obj, (bytes, bytearray, memoryview)):
         b = bytes(obj)
         out.append(b"B" + struct.pack(">I", len(b)))
@@ -74,13 +111,13 @@ def _encode(obj: Any, out: list) -> None:
         out.append(b"D" + struct.pack(">I", len(obj)))
         for k, v in obj.items():
             if not isinstance(k, str):
-                raise ProtocolError(f"dict keys must be str, got {type(k).__name__}")
+                raise BadTag(f"dict keys must be str, got {type(k).__name__}")
             kb = k.encode("utf-8")
             out.append(struct.pack(">I", len(kb)))
             out.append(kb)
             _encode(v, out)
     else:
-        raise ProtocolError(f"cannot encode {type(obj).__name__} on the wire")
+        raise BadTag(f"cannot encode {type(obj).__name__} on the wire")
 
 
 def pack(obj: Any) -> bytes:
@@ -99,7 +136,7 @@ class _Cursor:
 
     def take(self, n: int) -> bytes:
         if self.pos + n > len(self.data):
-            raise ProtocolError("truncated message")
+            raise FrameTruncated("truncated message")
         b = self.data[self.pos:self.pos + n]
         self.pos += n
         return b
@@ -130,7 +167,7 @@ def _decode(c: _Cursor) -> Any:
             key = c.take(c.u32()).decode("utf-8")
             d[key] = _decode(c)
         return d
-    raise ProtocolError(f"unknown tag {tag!r}")
+    raise BadTag(f"unknown tag {tag!r}")
 
 
 def unpack(data: bytes) -> Any:
@@ -138,7 +175,7 @@ def unpack(data: bytes) -> Any:
     c = _Cursor(data)
     obj = _decode(c)
     if c.pos != len(data):
-        raise ProtocolError(f"{len(data) - c.pos} trailing bytes in message")
+        raise BadTag(f"{len(data) - c.pos} trailing bytes in message")
     return obj
 
 
@@ -152,7 +189,7 @@ def recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
         if not chunk:
             if got == 0:
                 return None
-            raise ProtocolError("connection closed mid-frame")
+            raise FrameTruncated("connection closed mid-frame")
         chunks.append(chunk)
         got += len(chunk)
     return b"".join(chunks)
@@ -162,7 +199,7 @@ def send_msg(sock: socket.socket, obj: Any, lock=None) -> None:
     """Frame and send one message (``lock`` serializes multi-writer sides)."""
     body = pack(obj)
     if len(body) > MAX_FRAME:
-        raise ProtocolError(f"frame of {len(body)} bytes exceeds MAX_FRAME")
+        raise FrameTooLarge(f"frame of {len(body)} bytes exceeds MAX_FRAME")
     frame = struct.pack(">I", len(body)) + body
     if lock is not None:
         with lock:
@@ -178,8 +215,8 @@ def recv_msg(sock: socket.socket) -> Any:
         return None
     (length,) = struct.unpack(">I", header)
     if length > MAX_FRAME:
-        raise ProtocolError(f"incoming frame of {length} bytes exceeds MAX_FRAME")
+        raise FrameTooLarge(f"incoming frame of {length} bytes exceeds MAX_FRAME")
     body = recv_exact(sock, length) if length else b""
     if body is None:
-        raise ProtocolError("connection closed mid-frame")
+        raise FrameTruncated("connection closed mid-frame")
     return unpack(body)

@@ -35,6 +35,7 @@ import threading
 from typing import Callable, Optional
 
 from ..core.handle import BLOB, Handle, _hash
+from ..core.repository import CorruptData
 from .protocol import ProtocolError, recv_msg, send_msg
 
 
@@ -86,6 +87,11 @@ class ObjectStore(abc.ABC):
         self.puts = 0
         self.gets = 0
         self.dup_puts = 0
+        # Re-hash every payload on read; CorruptData instead of rot.  Off
+        # by default (content is immutable and put-verified), switched on
+        # by the backend when a chaos plane can rot payloads at rest —
+        # parity with ``Repository.verify_reads``.
+        self.verify_reads = False
 
     def add_put_listener(self, fn: Callable[[Handle, int, str], None]) -> None:
         self._listeners.append(fn)
@@ -109,16 +115,33 @@ class ObjectStore(abc.ABC):
         return fresh
 
     def get(self, handle: Handle) -> Optional[bytes]:
-        """Canonical payload bytes, or None when absent."""
+        """Canonical payload bytes, or None when absent.
+
+        With :attr:`verify_reads` on, the payload is re-hashed against the
+        handle's digest and a mismatch raises
+        :class:`~repro.core.repository.CorruptData` — rot is *detected*,
+        never served."""
         if handle.is_literal:
             return handle.literal_payload()
         self.gets += 1
-        return self._read(handle.content_key())
+        payload = self._read(handle.content_key())
+        if (payload is not None and self.verify_reads
+                and not verify_payload(handle, payload)):
+            raise CorruptData(handle)
+        return payload
 
     def contains(self, handle: Handle) -> bool:
         if handle.is_literal:
             return True
         return self._has(handle.content_key())
+
+    def delete(self, handle: Handle) -> bool:
+        """Evict one object (quarantine of a rotten replica); True when an
+        entry was actually removed.  A later ``put`` of verified content
+        re-installs it as fresh."""
+        if handle.is_literal:
+            return False
+        return self._delete(handle.content_key())
 
     # ------------------------------------------------------------- backend
     @abc.abstractmethod
@@ -132,6 +155,15 @@ class ObjectStore(abc.ABC):
     def _has(self, key: bytes) -> bool: ...
 
     @abc.abstractmethod
+    def _delete(self, key: bytes) -> bool:
+        """Remove the entry; True when it existed."""
+
+    @abc.abstractmethod
+    def _corrupt(self, key: bytes) -> bool:
+        """Flip a byte of the stored payload *in place* (at-rest rot) —
+        the chaos plane's hook; True when an entry was rotted."""
+
+    @abc.abstractmethod
     def stats(self) -> dict: ...
 
     def close(self) -> None:  # pragma: no cover - overridden where needed
@@ -141,10 +173,11 @@ class ObjectStore(abc.ABC):
 class MemoryStore(ObjectStore):
     """The in-memory server-backed store (default for ``fix.remote()``)."""
 
-    def __init__(self):
+    def __init__(self, *, verify_reads: bool = False):
         super().__init__()
         self._data: dict[bytes, bytes] = {}
         self._lock = threading.Lock()
+        self.verify_reads = verify_reads
 
     def _install(self, key: bytes, payload: bytes) -> bool:
         with self._lock:
@@ -161,6 +194,20 @@ class MemoryStore(ObjectStore):
         with self._lock:
             return key in self._data
 
+    def _delete(self, key: bytes) -> bool:
+        with self._lock:
+            return self._data.pop(key, None) is not None
+
+    def _corrupt(self, key: bytes) -> bool:
+        with self._lock:
+            payload = self._data.get(key)
+            if not payload:
+                return False
+            rotted = bytearray(payload)
+            rotted[0] ^= 0xFF
+            self._data[key] = bytes(rotted)
+            return True
+
     def stats(self) -> dict:
         with self._lock:
             return {
@@ -174,18 +221,27 @@ class MemoryStore(ObjectStore):
 class FileStore(ObjectStore):
     """One file per content key under ``root`` — a local-filesystem store.
 
-    Writes are atomic (tempfile + rename into place), so a crashed writer
-    never leaves a torn object, and because names are content keys a
-    half-written temp file can never be served.  The directory outlives
-    the backend: a second run of the same program finds its inputs (and
-    any memoizable intermediate content) already present.
+    Writes are durable *then* atomic: payload bytes are fsynced to the
+    temp file before the rename installs it (and the directory entry is
+    fsynced after), so a crashed writer never leaves a torn object and a
+    machine crash never leaves an installed name pointing at unflushed
+    bytes.  Because names are content keys a half-written temp file can
+    never be served.  The directory outlives the backend: a second run of
+    the same program finds its inputs (and any memoizable intermediate
+    content) already present.
+
+    ``verify_reads=True`` re-hashes every payload against its content key
+    on read (:class:`~repro.core.repository.CorruptData` on mismatch) —
+    bit-rot on disk is detected, quarantined and recomputed instead of
+    silently feeding a computation.
     """
 
-    def __init__(self, root: str):
+    def __init__(self, root: str, *, verify_reads: bool = False):
         super().__init__()
         self.root = root
         os.makedirs(root, exist_ok=True)
         self._lock = threading.Lock()
+        self.verify_reads = verify_reads
 
     def _path(self, key: bytes) -> str:
         return os.path.join(self.root, key.hex())
@@ -199,7 +255,10 @@ class FileStore(ObjectStore):
             try:
                 with os.fdopen(fd, "wb") as f:
                     f.write(payload)
+                    f.flush()
+                    os.fsync(f.fileno())
                 os.replace(tmp, path)
+                self._fsync_dir()
             except BaseException:
                 try:
                     os.unlink(tmp)
@@ -207,6 +266,19 @@ class FileStore(ObjectStore):
                     pass
                 raise
             return True
+
+    def _fsync_dir(self) -> None:
+        # the rename itself must survive a crash, not just the bytes
+        try:
+            dfd = os.open(self.root, os.O_RDONLY)
+        except OSError:  # pragma: no cover - platform without dir-open
+            return
+        try:
+            os.fsync(dfd)
+        except OSError:  # pragma: no cover - fs without dir-fsync
+            pass
+        finally:
+            os.close(dfd)
 
     def _read(self, key: bytes) -> Optional[bytes]:
         try:
@@ -217,6 +289,28 @@ class FileStore(ObjectStore):
 
     def _has(self, key: bytes) -> bool:
         return os.path.exists(self._path(key))
+
+    def _delete(self, key: bytes) -> bool:
+        with self._lock:
+            try:
+                os.unlink(self._path(key))
+                return True
+            except FileNotFoundError:
+                return False
+
+    def _corrupt(self, key: bytes) -> bool:
+        with self._lock:
+            path = self._path(key)
+            try:
+                with open(path, "r+b") as f:
+                    first = f.read(1)
+                    if not first:
+                        return False
+                    f.seek(0)
+                    f.write(bytes([first[0] ^ 0xFF]))
+                return True
+            except FileNotFoundError:
+                return False
 
     def stats(self) -> dict:
         n = nbytes = 0
@@ -246,6 +340,11 @@ class StoreServer:
         self._mutex = mutex if mutex is not None else threading.Lock()
         self._threads: list[threading.Thread] = []
         self._socks: list = []
+        # Called as ``fn(handle, peer)`` when a fetch hit rot (the store's
+        # verify_reads tripped).  The backend installs its quarantine +
+        # recovery hook here; the server itself just refuses to serve the
+        # bytes (the peer sees "absent", never the rot).
+        self.on_corrupt: Optional[Callable[[Handle, str], None]] = None
 
     def serve(self, sock, peer: str) -> None:
         t = threading.Thread(target=self._serve_loop, args=(sock, peer),
@@ -262,7 +361,13 @@ class StoreServer:
                     return
                 op = msg.get("op")
                 if op == "fetch":
-                    payload = self.store.get(Handle(msg["raw"]))
+                    h = Handle(msg["raw"])
+                    try:
+                        payload = self.store.get(h)
+                    except CorruptData:
+                        payload = None
+                        if self.on_corrupt is not None:
+                            self.on_corrupt(h, peer)
                     send_msg(sock, {"payload": payload})
                 elif op == "put":
                     h = Handle(msg["raw"])

@@ -7,7 +7,12 @@ process holding a private :class:`~repro.core.repository.Repository` and
 * a **control socket** — the coordinator dispatches ``submit`` steps
   (one ``think`` reduction or one ``strictify``) with the memo pairs and
   the pre-computed list of content the step needs; the worker answers
-  ``ran`` / ``error``.  ``heartbeat`` → ``pong`` is the liveness probe.
+  ``ran`` / ``error``.
+* a **heartbeat socket** — ``heartbeat`` → ``pong``, answered by a
+  dedicated responder thread so liveness is observable *while a codelet
+  runs*: the coordinator's monitor can tell "busy" (pongs flow, reply
+  pending) from "gone" (pongs stop) without interrupting compute.  The
+  control loop still answers heartbeats between steps for compatibility.
 * a **store socket** — the *only* data path.  Before running, the worker
   pre-stages every needed handle from the object store (externalized I/O:
   all movement happens before compute starts); after running, it pushes
@@ -31,6 +36,7 @@ from __future__ import annotations
 
 import os
 import sys
+import threading
 import traceback
 
 from ..core.evaluator import Evaluator
@@ -119,8 +125,23 @@ def _handle_list(handles: list) -> list:
     return [[h.raw, payload_nbytes(h)] for h in handles]
 
 
+def _heartbeat_loop(hb_sock) -> None:
+    """Sidecar liveness responder: answer every ping until the channel
+    dies.  Runs on its own thread so a long codelet on the main thread
+    never makes the process look dead (the GIL still schedules us)."""
+    try:
+        while True:
+            msg = recv_msg(hb_sock)
+            if msg is None:
+                return
+            if msg.get("op") == "heartbeat":
+                send_msg(hb_sock, {"op": "pong", "nonce": msg.get("nonce")})
+    except (OSError, ProtocolError):
+        return
+
+
 def worker_main(ctl_sock, store_sock, worker_id: str,
-                log_path: str = None) -> None:
+                log_path: str = None, hb_sock=None) -> None:
     """Entry point of the forked worker process.  Never returns normally —
     exits the process via ``os._exit`` so inherited atexit handlers (test
     runners, coverage hooks) don't run twice."""
@@ -140,6 +161,9 @@ def worker_main(ctl_sock, store_sock, worker_id: str,
             sys.stderr = open(2, "w", buffering=1, closefd=False)
         sys.stdin = open(os.devnull)
         print(f"[{worker_id}] up, pid={os.getpid()}", flush=True)
+        if hb_sock is not None:
+            threading.Thread(target=_heartbeat_loop, args=(hb_sock,),
+                             daemon=True, name="fix-worker-hb").start()
         _serve(ctl_sock, store_sock, worker_id)
         print(f"[{worker_id}] clean shutdown", flush=True)
     except BaseException:
@@ -168,6 +192,24 @@ def _serve(ctl_sock, store_sock, worker_id: str) -> None:
             continue
         if op == "submit":
             send_msg(ctl_sock, _run_submit(evaluator, state, msg, worker_id))
+            continue
+        if op == "push":
+            # quarantine recovery: re-publish content this worker holds
+            # (fire-and-forget — a dup put is a no-op, and the coordinator
+            # watches the store's put notifications, not a reply)
+            for raw in msg.get("raws", ()):
+                h = Handle(bytes(raw))
+                try:
+                    if h.content_type == BLOB:
+                        payload = repo.get_blob(h)
+                    else:
+                        payload = encode_tree_payload(repo.get_tree(h))
+                    state.store.put(h, payload)
+                    print(f"[{worker_id}] pushed {h!r} back to store",
+                          flush=True)
+                except MissingData:
+                    print(f"[{worker_id}] push miss: {h!r} not held",
+                          flush=True)
             continue
         raise ProtocolError(f"unknown op {op!r}")
 

@@ -66,7 +66,21 @@ only the surviving subset of a plan whose other items failed verification:
                         ``attempts``, ``reason``, ``jobs`` (ids failed)
 ``job_cancel``          a job was torn down: ``job``, ``reason``
                         ("cancel" | "deadline")
+``worker_respawn``      the remote backend replaced a dead worker process
+                        under the same node id: ``node``, ``pid``, ``gen``,
+                        ``reason`` (always paired with a ``node_join``)
+``job_resubmit``        a step was rescheduled after a worker death,
+                        content loss or dispatch timeout: ``job``,
+                        ``epoch``, ``attempt``, ``delay_s``, ``reason``
+                        (recovery bookkeeping — not itself a fault, so it
+                        does not flip a trace into fault mode)
 ======================  ===================================================
+
+The remote backend (``fix.remote``) emits the same vocabulary from real
+processes — ``fault`` kinds there include the chaos shim's injections
+(``kill_worker``, ``truncate_frame``, ``drop_frame``, ``delay_frame``,
+``stall_heartbeat``, ``rot_store``) alongside the backend's observed
+``crash`` — so ``verify_invariants`` checks a chaotic real run unchanged.
 
 Serialization is JSONL with sorted keys and no whitespace, so *identical
 schedules produce byte-identical files* — the double-run determinism the
@@ -303,7 +317,8 @@ def starvation_intervals(events: Iterable) -> list[dict]:
 # -------------------------------------------------------------- invariants
 _FAULT_KINDS = frozenset({
     "fault", "node_join", "transfer_drop", "corruption_detected",
-    "quarantine", "transfer_retry", "transfer_gaveup", "job_cancel"})
+    "quarantine", "transfer_retry", "transfer_gaveup", "job_cancel",
+    "worker_respawn"})
 
 
 def verify_invariants(events: Iterable) -> list[str]:

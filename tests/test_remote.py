@@ -242,7 +242,10 @@ class TestRemoteBackend:
         assert verify_invariants(load_trace(path)) == []
 
     def test_worker_crash_is_typed_not_a_hang(self):
-        with fix.remote(n_workers=2) as be:
+        # max_respawns=0 restores fail-fast: with recovery on (the
+        # default) a killed worker is replaced and the job resubmitted —
+        # that path is pinned in tests/test_remote_chaos.py
+        with fix.remote(n_workers=2, max_respawns=0) as be:
             fut = be.submit(stall(60000))
             deadline = time.monotonic() + 10
             while time.monotonic() < deadline:
