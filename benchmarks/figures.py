@@ -696,3 +696,73 @@ def fig_remote_chaos(n_seeds: int = 6) -> dict:
         "faulted_overhead_median": overheads[len(overheads) // 2],
         "faulted_overhead_max": overheads[-1],
     }
+
+
+def fig_serving(n_requests: int = 2000, seed: int = 0) -> dict:
+    """Production serving on the Fix core: continuous batching with
+    memoized-prefix KV reuse vs the no-memo ablation, on the simulated
+    cluster under a virtual clock.
+
+    Traffic is the seeded generator from ``tests/workloads.py`` — Zipf
+    popularity over a shared-prefix pool, multi-tenant tags, ragged tails
+    and budgets.  The memoized run and the ablation (every request's
+    chain salted by a per-request nonce, so identical prefixes stop
+    folding) must produce **bit-identical token streams** — the ablation
+    differs only in placement/recompute, never in values — and the memo
+    run must convert > 0 prefill bytes into cache hits while the
+    ablation converts exactly 0.  Both are asserted, so a correctness
+    regression fails the benchmark instead of skewing it.
+
+    Latencies are virtual-clock seconds (queueing + staging + compute in
+    the seconds-to-stage model); per-tenant attribution comes from the
+    tenant-tagged trace (``tenant_report``), with starvation seconds
+    from the same ``starvation_intervals`` analysis PR 4 introduced."""
+    sys.path.insert(0, "tests")
+    from workloads import make_serving_spec, run_serving
+
+    from repro.runtime import TraceRecorder
+    from repro.runtime.trace import tenant_report, verify_invariants
+
+    spec = make_serving_spec(seed, n_requests=n_requests)
+    tr = TraceRecorder()
+    t0 = time.perf_counter()
+    memo = run_serving(spec, backend="simulated", trace=tr)
+    memo_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    abl = run_serving(spec, backend="simulated", prefix_memo=False)
+    abl_wall = time.perf_counter() - t0
+
+    assert memo["errors"] == [] and abl["errors"] == []
+    assert memo["streams"] == abl["streams"], \
+        "memoized streams diverged from the no-memo ablation"
+    rm, ra = memo["report"], abl["report"]
+    assert rm["prefill_bytes_hit"] > 0, "memo run never hit a prefix block"
+    assert ra["prefill_bytes_hit"] == 0, "ablation must never hit"
+    assert verify_invariants(tr.events) == []
+
+    tenants = tenant_report(tr.events)
+    tagged = {t: s for t, s in tenants.items() if t != "-"}
+    return {
+        "requests": n_requests,
+        "tenants": len(tagged),
+        "streams_bit_identical": True,
+        "hit_ratio": rm["hit_ratio"],
+        "prefill_bytes_total": rm["prefill_bytes_total"],
+        "prefill_bytes_hit_memo": rm["prefill_bytes_hit"],
+        "prefill_bytes_hit_ablation": ra["prefill_bytes_hit"],
+        "p50_latency_s": rm["p50_latency_s"],
+        "p99_latency_s": rm["p99_latency_s"],
+        "p99_latency_s_ablation": ra["p99_latency_s"],
+        "p99_queue_wait_s": rm["p99_queue_wait_s"],
+        "tail_starved_s": sum(s["starved_s"] for s in tenants.values()),
+        "max_tenant_p99_s": max(s["p99_latency_s"] for s in tagged.values()),
+        "memo_jobs": sum(s["jobs"] for s in tagged.values()),
+        "memo_wall_s": memo_wall,
+        "ablation_wall_s": abl_wall,
+        "per_tenant": {
+            t: {"jobs": s["jobs"], "finished": s["finished"],
+                "p50_latency_s": s["p50_latency_s"],
+                "p99_latency_s": s["p99_latency_s"],
+                "starved_s": s["starved_s"]}
+            for t, s in sorted(tagged.items())},
+    }

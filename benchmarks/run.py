@@ -27,6 +27,7 @@ FIGS = {
     "waterfall": figures.fig_waterfall,
     "chaos": figures.fig_chaos,
     "remote_chaos": figures.fig_remote_chaos,
+    "serving": figures.fig_serving,
 }
 
 

@@ -48,13 +48,21 @@ class Backend(abc.ABC):
         """The client repository programs compile against."""
 
     @abc.abstractmethod
-    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None,
+               tenant: Optional[str] = None) -> Future:
         """Compile ``program`` (Lazy or Handle) and start evaluating it.
 
         ``deadline_s`` bounds the whole job in backend-clock seconds from
         submission (simulated seconds on a virtual-clock cluster): expiry
         fails the future with :class:`~repro.fix.future.DeadlineExceeded`
-        and — where the backend can — cancels orphaned child work."""
+        and — where the backend can — cancels orphaned child work.
+
+        ``tenant`` is an opaque accounting tag: backends with a trace plane
+        thread it onto the job's ``job_submit``/``job_memo_hit`` events (and
+        child jobs inherit it), so per-tenant latency/starvation reports
+        fall out of ordinary trace analysis
+        (:func:`repro.runtime.trace.tenant_report`).  Semantics are
+        unaffected — same program, same content keys, same memoization."""
 
     def evaluate(self, program, timeout: Optional[float] = 120.0) -> Handle:
         """Submit and wait; returns the result Handle."""
@@ -196,9 +204,11 @@ class LocalBackend(Backend):
     def repo(self) -> Repository:
         return self._repo
 
-    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None,
+               tenant: Optional[str] = None) -> Future:
         if self._closed:
             raise RuntimeError("backend is closed")
+        del tenant  # no trace plane locally; accepted for portability
         encode, out_type = self._compile(program)
         fut = Future()
         fut.out_type = out_type
@@ -263,9 +273,11 @@ class ClusterBackend(Backend):
     def repo(self) -> Repository:
         return self.cluster.client_repo
 
-    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None,
+               tenant: Optional[str] = None) -> Future:
         encode, out_type = self._compile(program)
-        fut = self.cluster._submit_encode(encode, deadline_s=deadline_s)
+        fut = self.cluster._submit_encode(encode, deadline_s=deadline_s,
+                                          tenant=tenant)
         fut.out_type = out_type
         return fut
 

@@ -1,7 +1,23 @@
-"""Serving driver: prefill + continuous-batched decode on a real model.
+"""Serving driver: resumable prefill + group-batched decode on a real model.
+
+Bridges the family ops to the engine's contracts
+(:class:`~repro.serving.engine.ServeEngine`):
+
+* ``prefill_fn(tokens, state) -> state`` — ``state=None`` runs the jitted
+  full-block prefill; with a cached state the uncovered tail is fed through
+  the decode step (resume-from-KV, the per-boundary states land in the
+  :class:`~repro.serving.engine.PrefixCache`);
+* ``decode_fn(states, tokens[B,1]) -> (logits[B,1,V], states)`` — the
+  batched contract from ``parallel.steps``.  Per-row caches are stacked
+  along the batch axis (every family lays caches out ``[layers, batch,
+  ...]`` with scalar counters) and decoded in one jitted call per group of
+  rows whose cache shapes/counters agree — rows admitted together stay in
+  lockstep, so continuous batching forms groups naturally; a lone ragged
+  row decodes at width 1.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_8b --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --smoke
 """
 from __future__ import annotations
 
@@ -18,29 +34,72 @@ from ..parallel.sharding import Sharder
 from ..serving import PrefixCache, Request, ServeEngine
 
 
-def build_model_fns(cfg, max_seq: int):
-    """Per-row prefill/greedy-decode callables over the family ops."""
+def _group_key(cache) -> tuple:
+    """Rows are batchable iff their cache pytrees agree on structure, leaf
+    shapes, and scalar counters (``pos`` — SSM states are O(1)-shaped, so
+    shape alone can't prove rows are at the same position)."""
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    return (treedef,
+            tuple((x.shape, int(x) if x.ndim == 0 else None) for x in leaves))
+
+
+def _stack_rows(caches: list):
+    """Concatenate per-row (batch-1) caches along the batch axis."""
+    return jax.tree.map(
+        lambda *xs: xs[0] if xs[0].ndim == 0 else jnp.concatenate(xs, axis=1),
+        *caches)
+
+
+def _split_rows(cache, n: int) -> list:
+    return [jax.tree.map(
+        lambda x, i=i: x if x.ndim == 0 else x[:, i: i + 1], cache)
+        for i in range(n)]
+
+
+def build_model_fns(cfg):
+    """(prefill_fn, decode_fn) in the engine contracts, over family ops."""
     ops = ops_for(cfg)
     params = init_params(ops.specs(cfg), cfg)
     sh = Sharder(None)
 
     @jax.jit
-    def prefill_one(tokens):
+    def prefill_jit(tokens):
         _logits, cache = ops.prefill(params, {"tokens": tokens[None]}, cfg, sh)
         return cache
 
     @jax.jit
-    def decode_one(cache, token):
-        logits, cache = ops.decode_step(params, cache,
-                                        jnp.asarray([[token]], jnp.int32), cfg, sh)
-        return jnp.argmax(logits[0, -1]), cache
+    def decode_jit(cache, tokens):
+        return ops.decode_step(params, cache, tokens, cfg, sh)
 
-    def prefill_fn(prompt_np):
-        return prefill_one(jnp.asarray(prompt_np, jnp.int32))
+    def prefill_fn(tokens, state=None):
+        tokens = np.ascontiguousarray(tokens, np.int32)
+        if state is None:
+            return prefill_jit(jnp.asarray(tokens))
+        # resume from a cached boundary: append the uncovered tail through
+        # the decode step (same KV entries as a fresh prefill would write)
+        cache = state
+        for t in tokens:
+            _logits, cache = decode_jit(cache,
+                                        jnp.asarray([[int(t)]], jnp.int32))
+        return cache
 
-    def decode_fn(cache, last_token):
-        tok, cache = decode_one(cache, last_token)
-        return int(tok), cache
+    def decode_fn(states, tokens):
+        tokens = np.ascontiguousarray(tokens, np.int32)
+        groups: dict = {}
+        for i, c in enumerate(states):
+            groups.setdefault(_group_key(c), []).append(i)
+        out_states: list = [None] * len(states)
+        logits_rows: list = [None] * len(states)
+        for rows in groups.values():
+            cache = _stack_rows([states[i] for i in rows])
+            toks = jnp.asarray(tokens[rows], jnp.int32)
+            logits, cache = decode_jit(cache, toks)
+            logits = np.asarray(logits, np.float32)
+            for row_pos, i in enumerate(rows):
+                logits_rows[i] = logits[row_pos: row_pos + 1]
+            for i, st in zip(rows, _split_rows(cache, len(rows))):
+                out_states[i] = st
+        return np.concatenate(logits_rows, axis=0), out_states
 
     return prefill_fn, decode_fn
 
@@ -52,30 +111,56 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--block", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: tiny workload + cached-vs-uncached "
+                         "stream equivalence check")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.prompt_len, args.max_new, args.batch = 4, 24, 4, 2
 
     cfg = get_config(args.arch, smoke=True)
-    prefill_fn, decode_fn = build_model_fns(cfg, args.prompt_len + args.max_new)
-    engine = ServeEngine(prefill_fn, decode_fn, batch=args.batch, eos=-1,
-                         prefix_cache=PrefixCache(capacity=8))
-    rng = np.random.default_rng(0)
-    shared_prefix = rng.integers(1, cfg.vocab, 16)  # one full prefix block
-    reqs = []
-    for i in range(args.requests):
-        tail = rng.integers(1, cfg.vocab, args.prompt_len - len(shared_prefix))
-        prompt = np.concatenate([shared_prefix, tail]).astype(np.int32)
-        req = Request(rid=i, prompt=prompt, max_new=args.max_new)
-        reqs.append(req)
-        engine.submit(req)
+    prefill_fn, decode_fn = build_model_fns(cfg)
 
-    t0 = time.time()
-    engine.run()
-    dt = time.time() - t0
+    def make_requests():
+        rng = np.random.default_rng(0)
+        shared_prefix = rng.integers(1, cfg.vocab, args.block)  # 1 full block
+        reqs = []
+        for i in range(args.requests):
+            tail = rng.integers(1, cfg.vocab,
+                                args.prompt_len - len(shared_prefix))
+            prompt = np.concatenate([shared_prefix, tail]).astype(np.int32)
+            reqs.append(Request(rid=i, prompt=prompt, max_new=args.max_new))
+        return reqs
+
+    def serve(cache_capacity):
+        engine = ServeEngine(prefill_fn, decode_fn, batch=args.batch, eos=-1,
+                             prefix_cache=PrefixCache(capacity=cache_capacity),
+                             block=args.block)
+        reqs = make_requests()
+        for r in reqs:
+            engine.submit(r)
+        t0 = time.time()
+        engine.run()
+        return reqs, engine, time.time() - t0
+
+    reqs, engine, dt = serve(cache_capacity=64)
     total_new = sum(len(r.out_tokens) for r in reqs)
     print(f"served {len(reqs)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s), {engine.steps} engine steps")
-    print(f"prefix cache: {engine.cache.hits} hits / {engine.cache.misses} misses")
+    print(f"prefix cache: {engine.cache.hits} block hits / "
+          f"{engine.cache.misses} block misses")
     assert all(r.done for r in reqs)
+    assert engine.cache.hits > 0, "shared prefix block never hit"
+
+    if args.smoke:
+        # cached streams must be bit-identical to the cache-disabled run
+        # (capacity 0 => every lookup misses, every insert evicts)
+        base, _, _ = serve(cache_capacity=0)
+        for a, b in zip(reqs, base):
+            assert a.out_tokens == b.out_tokens, \
+                f"request {a.rid}: cached stream diverged from uncached"
+        print(f"smoke: cached == uncached streams for {len(reqs)} requests")
 
 
 if __name__ == "__main__":

@@ -133,6 +133,7 @@ class _RJob:
     encode: Handle
     thunk: Handle
     strict: bool
+    tenant: Optional[str] = None   # accounting tag, inherited by children
     phase: int = RESOLVE
     epoch: int = 0
     node: Optional[str] = None
@@ -420,7 +421,8 @@ class RemoteBackend(Backend):
     def repo(self) -> Repository:
         return self._repo
 
-    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None,
+               tenant: Optional[str] = None) -> Future:
         if self._closed:
             raise RuntimeError("backend is closed")
         encode, out_type = self._compile(program)
@@ -433,7 +435,7 @@ class RemoteBackend(Backend):
             timer.daemon = True
             timer.start()
             fut.add_done_callback(lambda _f: timer.cancel())
-        self._events.put(("submit", encode, fut, None, False))
+        self._events.put(("submit", encode, fut, None, False, tenant))
         return fut
 
     def _request_cancel(self, fut: Future, reason: str) -> None:
@@ -568,15 +570,22 @@ class RemoteBackend(Backend):
 
     # ------------------------------------------------------------ submit
     def _on_submit(self, encode: Handle, fut: Optional[Future],
-                   parent: Optional[int], ignore_memo: bool) -> None:
+                   parent: Optional[int], ignore_memo: bool,
+                   tenant: Optional[str] = None) -> None:
         tr = self.trace
+        if tenant is None and parent is not None:
+            # child work bills to whoever submitted the root program
+            pj = self._jobs.get(parent)
+            if pj is not None:
+                tenant = pj.tenant
         if not ignore_memo:
             memo = self._memo.get(encode.raw)
             if memo is not None:
                 # the content universe (client repo ∪ store) never evicts,
                 # so a memoized result is always fetchable
                 if tr is not None:
-                    tr.emit("job_memo_hit", encode=encode.raw.hex())
+                    extra = {} if tenant is None else {"tenant": tenant}
+                    tr.emit("job_memo_hit", encode=encode.raw.hex(), **extra)
                 if fut is not None:
                     fut.set(memo)
                 if parent is not None:
@@ -596,7 +605,7 @@ class RemoteBackend(Backend):
                 return
         jid = next(self._ids)
         job = _RJob(jid, encode, encode.unwrap_encode(),
-                    encode.interp == STRICT)
+                    encode.interp == STRICT, tenant=tenant)
         if fut is not None:
             fut._jid = jid
             job.futures.append(fut)
@@ -609,8 +618,12 @@ class RemoteBackend(Backend):
         if not ignore_memo:
             self._by_encode[encode.raw] = jid
         if tr is not None:
+            # tenant only when tagged: untagged runs keep byte-identical
+            # traces (the golden-fixture replay diff)
+            extra = {} if tenant is None else {"tenant": tenant}
             tr.emit("job_submit", job=jid, encode=encode.raw.hex(),
-                    strict=job.strict, parent=parent, recompute=ignore_memo)
+                    strict=job.strict, parent=parent, recompute=ignore_memo,
+                    **extra)
         self._advance_guarded(job)
 
     def _advance_guarded(self, job: _RJob) -> None:
@@ -645,7 +658,7 @@ class RemoteBackend(Backend):
             job.phase = WAIT_CHILDREN
             job.pending_children = {c.raw for c in unresolved}
             for c in unresolved:
-                self._events.put(("submit", c, None, job.id, False))
+                self._events.put(("submit", c, None, job.id, False, None))
             return
         for enc in children:
             res = self._memo[enc.raw]
@@ -703,7 +716,7 @@ class RemoteBackend(Backend):
             job.phase = STRICT_WAIT
             job.pending_children = {c.raw for c in unresolved}
             for c in unresolved:
-                self._events.put(("submit", c, None, job.id, False))
+                self._events.put(("submit", c, None, job.id, False, None))
             return
         self._advance_strict(job)
 
@@ -1165,7 +1178,8 @@ class RemoteBackend(Backend):
                 tr.emit("stage_request", job=None, dst="store", key=key_hex,
                         nbytes=payload_nbytes(h), action="recompute",
                         src=None)
-            self._events.put(("submit", Handle(enc_raw), None, None, True))
+            self._events.put(("submit", Handle(enc_raw), None, None, True,
+                              None))
 
     # ------------------------------------------------------------ terminal
     def _finalize(self, job: _RJob, result: Handle) -> None:

@@ -100,6 +100,7 @@ class Job:
     thunk: Handle             # current WHNF-in-progress thunk
     strict: bool
     ignore_memo: bool = False  # recompute-on-loss path
+    tenant: Optional[str] = None  # accounting tag, inherited by children
     phase: int = RESOLVE
     epoch: int = 0
     node: Optional[str] = None
@@ -262,13 +263,16 @@ class Cluster:
     def worker_nodes(self) -> list[Node]:
         return [n for n in self.nodes.values() if n.n_workers > 0 and n.alive]
 
-    def submit(self, program, *, deadline_s: Optional[float] = None) -> Future:
+    def submit(self, program, *, deadline_s: Optional[float] = None,
+               tenant: Optional[str] = None) -> Future:
         """Thin delegate: accepts a Lazy program or a Handle (thunks are
         strict-wrapped), compiled by the Backend against the client repo.
         ``deadline_s`` bounds the job itself (clock-seconds from submit):
         expiry fails the future with DeadlineExceeded and cancels orphaned
-        child work."""
-        return self.backend.submit(program, deadline_s=deadline_s)
+        child work.  ``tenant`` tags the job (and its children) in trace
+        events for per-tenant SLO attribution."""
+        return self.backend.submit(program, deadline_s=deadline_s,
+                                   tenant=tenant)
 
     def evaluate(self, program, timeout: float = 120.0) -> Handle:
         return self.backend.evaluate(program, timeout)
@@ -279,14 +283,16 @@ class Cluster:
         return self.backend.fetch_result(handle, into)
 
     def _submit_encode(self, encode: Handle,
-                       deadline_s: Optional[float] = None) -> Future:
+                       deadline_s: Optional[float] = None,
+                       tenant: Optional[str] = None) -> Future:
         """Raw submission path the Backend compiles down to."""
         fut = Future()
         fut._clock = self.clock  # clock-aware deadlines (virtual timeouts)
         # cancel() routes through the scheduler thread, which owns job
         # state and can prune orphaned child submissions
         fut._canceller = lambda f: self._events.put(("cancel", f))
-        self._events.put(("submit", encode, fut, None, False, deadline_s))
+        self._events.put(("submit", encode, fut, None, False, deadline_s,
+                          tenant))
         return fut
 
     def kill_node(self, node_id: str) -> None:
@@ -416,7 +422,7 @@ class Cluster:
         in-flight job — alive."""
         jids: set[int] = set()
         if kind == "submit":
-            _, encode, fut, parent, _ignore, _deadline = ev
+            encode, fut, parent = ev[1], ev[2], ev[3]
             if fut is not None and not fut.done():
                 fut.set_exception(exc)
             if parent is not None:
@@ -490,8 +496,14 @@ class Cluster:
     # ------------------------------------------------------------- events
     def _on_submit(self, encode: Handle, fut: Optional[Future],
                    parent: Optional[int], ignore_memo: bool,
-                   deadline_s: Optional[float] = None) -> None:
+                   deadline_s: Optional[float] = None,
+                   tenant: Optional[str] = None) -> None:
         tr = self.trace
+        if tenant is None and parent is not None:
+            # child work bills to whoever submitted the root program
+            pj = self._jobs.get(parent)
+            if pj is not None:
+                tenant = pj.tenant
         if fut is not None and deadline_s is not None:
             # the deadline runs on the cluster clock (virtual deadlines are
             # simulated seconds); completing first cancels the timer so the
@@ -503,7 +515,8 @@ class Cluster:
             memo = self._memo.get(encode.raw)
             if memo is not None and self._find_source_name(memo) is not None:
                 if tr is not None:
-                    tr.emit("job_memo_hit", encode=encode.raw.hex())
+                    extra = {} if tenant is None else {"tenant": tenant}
+                    tr.emit("job_memo_hit", encode=encode.raw.hex(), **extra)
                 if fut is not None:
                     fut.set(memo)
                 if parent is not None:
@@ -520,7 +533,7 @@ class Cluster:
                 return
         jid = next(self._ids)
         job = Job(jid, encode, encode.unwrap_encode(), encode.interp == STRICT,
-                  ignore_memo=ignore_memo)
+                  ignore_memo=ignore_memo, tenant=tenant)
         if fut is not None:
             fut._jid = jid
             job.futures.append(fut)
@@ -530,8 +543,12 @@ class Cluster:
         if not ignore_memo:
             self._by_encode[encode.raw] = jid
         if tr is not None:
+            # tenant only when tagged: untagged runs keep byte-identical
+            # traces (the golden-fixture replay diff)
+            extra = {} if tenant is None else {"tenant": tenant}
             tr.emit("job_submit", job=jid, encode=encode.raw.hex(),
-                    strict=job.strict, parent=parent, recompute=ignore_memo)
+                    strict=job.strict, parent=parent, recompute=ignore_memo,
+                    **extra)
         self._advance(job)
 
     def _on_child_done(self, parent_id: int, child_encode: Handle) -> None:
@@ -804,7 +821,8 @@ class Cluster:
             job.phase = WAIT_CHILDREN
             job.pending_children = {c.raw for c in unresolved}
             for c in unresolved:
-                self._events.put(("submit", c, None, job.id, False, None))
+                self._events.put(("submit", c, None, job.id, False, None,
+                                  None))
             # overlap child compute with data movement: stage what we
             # already know this job needs toward its tentative placement
             self._maybe_prefetch(needs, children=unresolved)
@@ -906,7 +924,8 @@ class Cluster:
             job.pending_children = {c.raw for c in unresolved}
             job._strict_children = children  # type: ignore[attr-defined]
             for c in unresolved:
-                self._events.put(("submit", c, None, job.id, False, None))
+                self._events.put(("submit", c, None, job.id, False, None,
+                                  None))
             self._maybe_prefetch(stage, node_id=job.node, children=unresolved)
             return
         job._strict_children = children  # type: ignore[attr-defined]

@@ -13,8 +13,12 @@ counts blob bytes / 32 bytes per tree child, like the rest of the runtime):
 
 ===================  ======================================================
 ``job_submit``       new job created: ``job``, ``encode``, ``strict``,
-                     ``parent`` (submitting job id or null), ``recompute``
+                     ``parent`` (submitting job id or null), ``recompute``,
+                     plus ``tenant`` *only when the submission was tagged*
+                     (``Backend.submit(..., tenant=...)``; children
+                     inherit) — untagged runs stay byte-identical
 ``job_memo_hit``     a submission satisfied from the cluster memo table
+                     (``tenant`` again only when tagged)
 ``job_place``        placement decision: ``job``, ``node``, ``epoch``,
                      ``n_missing``, ``missing_nbytes``
 ``job_start``        run bound to a worker queue: ``job``, ``node``,
@@ -92,6 +96,7 @@ from __future__ import annotations
 
 import itertools
 import json
+import math
 import threading
 from collections import Counter, defaultdict
 from dataclasses import dataclass
@@ -312,6 +317,68 @@ def starvation_intervals(events: Iterable) -> list[dict]:
             iv["declared"] = sorted(iv["declared"])
             out.append(iv)
     return out
+
+
+def percentile(values: list, p: float) -> float:
+    """Nearest-rank percentile of ``values`` (0.0 on empty input)."""
+    if not values:
+        return 0.0
+    vals = sorted(values)
+    rank = max(1, math.ceil(p / 100.0 * len(vals)))
+    return float(vals[min(rank, len(vals)) - 1])
+
+
+def tenant_report(events: Iterable) -> dict[str, dict]:
+    """Per-tenant SLO report, joined from tenant-tagged trace events.
+
+    Serving (and any other tagged workload) threads a ``tenant`` tag
+    through ``Backend.submit``; the schedulers stamp it on ``job_submit``
+    / ``job_memo_hit`` and children inherit it — so fairness auditing is
+    ordinary trace analysis, not new machinery.  For every tenant seen:
+    job counts (submitted / finished / failed / memo hits), job latency
+    percentiles (submit → finish, backend-clock seconds), and the
+    starvation seconds charged to the tenant's jobs (the
+    :func:`starvation_intervals` windows whose starved job it owns).
+    Untagged jobs land under the pseudo-tenant ``"-"`` so the report
+    always partitions the run.
+    """
+    evs = event_dicts(events)
+    owner: dict[int, str] = {}
+    submit_t: dict[int, float] = {}
+    stats: dict[str, dict] = defaultdict(lambda: {
+        "jobs": 0, "finished": 0, "failed": 0, "memo_hits": 0,
+        "latencies": []})
+    for ev in evs:
+        k = ev["kind"]
+        if k == "job_submit":
+            ten = ev.get("tenant") or "-"
+            owner[ev["job"]] = ten
+            submit_t[ev["job"]] = ev["t"]
+            stats[ten]["jobs"] += 1
+        elif k == "job_memo_hit":
+            stats[ev.get("tenant") or "-"]["memo_hits"] += 1
+        elif k == "job_finish":
+            ten = owner.get(ev["job"], "-")
+            stats[ten]["finished"] += 1
+            t0 = submit_t.get(ev["job"])
+            if t0 is not None:
+                stats[ten]["latencies"].append(ev["t"] - t0)
+        elif k == "job_fail":
+            stats[owner.get(ev["job"], "-")]["failed"] += 1
+    starved: dict[str, float] = defaultdict(float)
+    for iv in starvation_intervals(evs):
+        starved[owner.get(iv["job"], "-")] += iv["end"] - iv["start"]
+    report: dict[str, dict] = {}
+    for ten in sorted(stats):
+        s = stats[ten]
+        report[ten] = {
+            "jobs": s["jobs"], "finished": s["finished"],
+            "failed": s["failed"], "memo_hits": s["memo_hits"],
+            "p50_latency_s": percentile(s["latencies"], 50),
+            "p99_latency_s": percentile(s["latencies"], 99),
+            "starved_s": starved.get(ten, 0.0),
+        }
+    return report
 
 
 # -------------------------------------------------------------- invariants

@@ -1,2 +1,36 @@
-from .engine import PrefixCache, Request, ServeEngine, prompt_key
-__all__ = ["ServeEngine", "Request", "PrefixCache", "prompt_key"]
+"""Serving on the Fix core: continuous batching + memoized-prefix reuse.
+
+:mod:`~repro.serving.engine` is the host-level engine (callables in,
+callables out); :mod:`~repro.serving.fixserve` runs the same discipline
+with every prefill block / decode step as a Fix codelet through any
+:class:`~repro.fix.backend.Backend`; :mod:`~repro.serving.admission` is
+the per-tenant weighted-fair admission policy shared by both.
+"""
+from .admission import TenantQueue
+from .engine import (
+    BudgetError,
+    EmptyPromptError,
+    PrefixCache,
+    Request,
+    RequestError,
+    ServeEngine,
+    prompt_key,
+    validate_request,
+)
+from .fixserve import FixServeEngine
+from .model import make_weights, toy_fns
+
+__all__ = [
+    "BudgetError",
+    "EmptyPromptError",
+    "FixServeEngine",
+    "PrefixCache",
+    "Request",
+    "RequestError",
+    "ServeEngine",
+    "TenantQueue",
+    "make_weights",
+    "prompt_key",
+    "toy_fns",
+    "validate_request",
+]

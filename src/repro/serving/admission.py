@@ -1,0 +1,118 @@
+"""Per-tenant admission control: weighted fair queuing + inflight caps.
+
+When demand exceeds decode slots, *who waits* is policy.  The policy here
+is stride scheduling — the classic weighted-fair discipline: each tenant
+carries a virtual time that advances by ``1 / weight`` per admission, and
+the next slot goes to the backlogged tenant with the smallest virtual
+time.  Over any busy window, tenant admissions converge to the weight
+ratio, and a newly arriving tenant joins at the current virtual floor
+(``max`` with its own clock), so it can neither starve nor bank credit
+while idle.
+
+``max_inflight`` bounds how many of one tenant's requests may occupy
+decode slots at once — the knob that keeps one tenant's long generations
+from monopolizing the batch even when the queue discipline is fair.
+
+The queue is deliberately engine-agnostic: ``push`` / ``pop`` /
+``release`` with no clock and no threads, so the same policy drives the
+host-level :class:`~repro.serving.engine.ServeEngine` and the Fix-backed
+:class:`~repro.serving.fixserve.FixServeEngine`, and unit tests can drive
+it directly.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+
+class _Tenant:
+    __slots__ = ("name", "weight", "vtime", "queue", "inflight", "admitted")
+
+    def __init__(self, name: str, weight: float, vtime: float):
+        self.name = name
+        self.weight = weight
+        self.vtime = vtime
+        self.queue: deque = deque()
+        self.inflight = 0
+        self.admitted = 0
+
+
+class TenantQueue:
+    """Stride-scheduled weighted fair queue with per-tenant inflight caps.
+
+    ``weights`` maps tenant name -> share (default ``default_weight``);
+    ``max_inflight`` (None = unlimited) caps a tenant's concurrently
+    admitted requests.  Deterministic: ties break on tenant name, FIFO
+    within a tenant.
+    """
+
+    def __init__(self, weights: Optional[dict] = None,
+                 default_weight: float = 1.0,
+                 max_inflight: Optional[int] = None):
+        if default_weight <= 0:
+            raise ValueError("default_weight must be > 0")
+        if weights and any(w <= 0 for w in weights.values()):
+            raise ValueError("tenant weights must be > 0")
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1 (or None)")
+        self._weights = dict(weights or {})
+        self._default_weight = default_weight
+        self.max_inflight = max_inflight
+        self._tenants: dict[str, _Tenant] = {}
+        self._vfloor = 0.0  # virtual time of the last admission
+
+    def _tenant(self, name: str) -> _Tenant:
+        t = self._tenants.get(name)
+        if t is None:
+            w = self._weights.get(name, self._default_weight)
+            t = _Tenant(name, w, self._vfloor)
+            self._tenants[name] = t
+        return t
+
+    def __len__(self) -> int:
+        return sum(len(t.queue) for t in self._tenants.values())
+
+    def queued(self, tenant: str) -> int:
+        t = self._tenants.get(tenant)
+        return 0 if t is None else len(t.queue)
+
+    def inflight(self, tenant: str) -> int:
+        t = self._tenants.get(tenant)
+        return 0 if t is None else t.inflight
+
+    def admitted(self, tenant: str) -> int:
+        t = self._tenants.get(tenant)
+        return 0 if t is None else t.admitted
+
+    def push(self, req) -> None:
+        t = self._tenant(req.tenant)
+        # an idle tenant rejoins at the floor: no banked credit from the
+        # past, no starvation penalty for having been away
+        if not t.queue and t.inflight == 0:
+            t.vtime = max(t.vtime, self._vfloor)
+        t.queue.append(req)
+
+    def pop(self):
+        """Admit the fair-queue choice, or None if nothing is eligible
+        (empty, or every backlogged tenant is at its inflight cap)."""
+        best: Optional[_Tenant] = None
+        for t in self._tenants.values():
+            if not t.queue:
+                continue
+            if self.max_inflight is not None and t.inflight >= self.max_inflight:
+                continue
+            if best is None or (t.vtime, t.name) < (best.vtime, best.name):
+                best = t
+        if best is None:
+            return None
+        self._vfloor = best.vtime
+        best.vtime += 1.0 / best.weight
+        best.inflight += 1
+        best.admitted += 1
+        return best.queue.popleft()
+
+    def release(self, tenant: str) -> None:
+        """A previously popped request finished — frees its inflight slot."""
+        t = self._tenants.get(tenant)
+        if t is not None and t.inflight > 0:
+            t.inflight -= 1

@@ -8,13 +8,37 @@ dedup block-wise — the B+-tree trick applied to token streams) and performs
 all "I/O" (prefill compute, cache fetch) before binding a decode slot: late
 binding again, at the request level.
 
-This is a host-level engine driving the jitted serve steps; the batching
-discipline is continuous: finished rows are refilled from the queue each
-step without stopping the batch.
+This module is the *host-level* engine: callables in, callables out, no Fix
+runtime required (``launch/serve.py`` drives it over jitted model steps).
+:mod:`repro.serving.fixserve` is the same engine shape with every prefill
+block and decode step running as a Fix codelet through a
+:class:`~repro.fix.backend.Backend` — there the prefix cache holds content
+handles instead of host states and a hit is a *placement* decision.
+
+The batching discipline is continuous: finished rows are refilled from the
+queue each step without stopping the batch.  The decode contract is the
+batched one from ``parallel.steps``::
+
+    decode_fn(states, tokens[B, 1]) -> (logits[B, 1, V], states)
+
+where ``states`` is a list of per-row opaque states (the engine owns greedy
+argmax), and prefill is *resumable* so a cached prefix is actually reused::
+
+    prefill_fn(tokens[S'], state) -> state      # state=None starts fresh
+
+Cache correctness contract (the seed engine violated both halves):
+
+* ``PrefixCache`` stores the state *at each block boundary* — a lookup that
+  matches ``n`` blocks returns a state covering exactly those ``n`` blocks,
+  never tokens beyond them;
+* eviction drops whole chains: if a boundary's entry goes, every cached
+  descendant boundary (whose chain runs through it) goes too, so a lookup
+  can never land on a dangling interior block.
 """
 from __future__ import annotations
 
 import hashlib
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -22,109 +46,287 @@ from typing import Callable, Optional
 import numpy as np
 
 
+class RequestError(ValueError):
+    """A request rejected at ``submit()`` — typed, never a mid-batch crash."""
+
+
+class EmptyPromptError(RequestError):
+    """Prompt is empty or not a 1-D integer token array."""
+
+
+class BudgetError(RequestError):
+    """``max_new`` is not a non-negative integer."""
+
+
 @dataclass
 class Request:
     rid: int
     prompt: np.ndarray              # int32 [prompt_len]
     max_new: int
+    tenant: str = "default"
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    # ---- filled by the engine (host-clock seconds; None until reached)
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Admission-queue time — the per-request starvation metric."""
+        if self.t_submit is None or self.t_admit is None:
+            return 0.0
+        return self.t_admit - self.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        if self.t_submit is None or self.t_done is None:
+            return 0.0
+        return self.t_done - self.t_submit
 
 
 def prompt_key(tokens: np.ndarray, block: int = 16) -> list:
-    """Content-addressed prefix-block keys (block-wise prefix identity)."""
+    """Content-addressed prefix-block keys (block-wise prefix identity).
+
+    ``keys[j]`` names the token prefix ``tokens[: min((j+1)*block, len)]``
+    — a chained hash, so two prompts share ``keys[j]`` iff they agree on
+    every token through that boundary (a trailing partial block gets its
+    own boundary and can only match exactly).
+    """
     keys = []
     h = hashlib.blake2b(digest_size=16)
     for i in range(0, len(tokens), block):
-        h.update(tokens[i : i + block].tobytes())
+        h.update(np.ascontiguousarray(tokens[i: i + block],
+                                      np.int32).tobytes())
         keys.append(h.copy().digest())
     return keys
 
 
+def validate_request(req: "Request") -> None:
+    """Shared ``submit()``-time validation (host and Fix engines): typed
+    errors for malformed requests, prompt normalized to contiguous int32."""
+    prompt = np.asarray(req.prompt)
+    if prompt.ndim != 1 or prompt.size == 0:
+        raise EmptyPromptError(
+            f"request {req.rid}: prompt must be a non-empty 1-D token "
+            f"array (got shape {prompt.shape})")
+    if not np.issubdtype(prompt.dtype, np.integer):
+        raise EmptyPromptError(
+            f"request {req.rid}: prompt dtype {prompt.dtype} is not an "
+            f"integer token type")
+    if isinstance(req.max_new, bool) or not isinstance(req.max_new, int):
+        raise BudgetError(
+            f"request {req.rid}: max_new must be an int, got "
+            f"{type(req.max_new).__name__}")
+    if req.max_new < 0:
+        raise BudgetError(
+            f"request {req.rid}: max_new must be >= 0, got {req.max_new}")
+    req.prompt = np.ascontiguousarray(prompt, np.int32)
+
+
+class _Entry:
+    __slots__ = ("state", "chain")
+
+    def __init__(self, state, chain: tuple):
+        self.state = state
+        self.chain = chain  # the full key chain through this boundary
+
+
 class PrefixCache:
-    """LRU of per-sequence KV states keyed by prefix-block hash chains."""
+    """LRU of per-*boundary* states keyed by prefix-block hash chains.
+
+    Each entry holds the state covering exactly its chain of blocks, so a
+    lookup can never return tokens beyond the matched prefix.  Hits and
+    misses are counted **per block**: a prompt of 5 blocks matching 3 is
+    3 hits + 2 misses, not one of either.
+
+    Invariant (checked by tests): for every cached boundary, every
+    ancestor boundary on its chain is also cached — inserts that would
+    dangle are refused and eviction cascades to descendants.
+    """
 
     def __init__(self, capacity: int = 16):
         self.capacity = capacity
-        self._lru: "OrderedDict[bytes, object]" = OrderedDict()
-        self.hits = 0
-        self.misses = 0
+        self._lru: "OrderedDict[bytes, _Entry]" = OrderedDict()
+        self.hits = 0          # blocks served from cache
+        self.misses = 0        # blocks that had to be prefilled
+        self.evictions = 0     # entries dropped (including cascades)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._lru
+
+    def chain_of(self, key: bytes) -> Optional[tuple]:
+        ent = self._lru.get(key)
+        return None if ent is None else ent.chain
 
     def lookup(self, keys: list):
-        """Longest cached prefix: returns (n_blocks_covered, state or None)."""
+        """Longest cached prefix: returns ``(n_blocks_covered, state)``.
+
+        The whole matched chain is refreshed to MRU (not just the matched
+        boundary) so eviction can't orphan the ancestors of a hot entry.
+        """
         for n in range(len(keys), 0, -1):
-            st = self._lru.get(keys[n - 1])
-            if st is not None:
-                self._lru.move_to_end(keys[n - 1])
-                self.hits += 1
-                return n, st
-        self.misses += 1
+            ent = self._lru.get(keys[n - 1])
+            if ent is not None:
+                for k in ent.chain:
+                    if k in self._lru:
+                        self._lru.move_to_end(k)
+                self.hits += n
+                self.misses += len(keys) - n
+                return n, ent.state
+        self.misses += len(keys)
         return 0, None
 
-    def insert(self, keys: list, state) -> None:
-        # register every block boundary so future prompts sharing any
-        # prefix length find the longest match (block-wise prefix identity)
-        for k in keys:
-            self._lru[k] = state
-            self._lru.move_to_end(k)
+    def insert(self, chain: list, state) -> bool:
+        """Cache ``state`` for the boundary named by ``chain[-1]``.
+
+        ``chain`` is the *full* key chain ``prompt_key(...)[: j + 1]`` and
+        ``state`` covers exactly those blocks.  Refused (returns False)
+        when an ancestor is missing — a dangling insert would break the
+        chain invariant that eviction relies on.
+        """
+        if not chain:
+            return False
+        key = chain[-1]
+        for k in chain[:-1]:
+            if k not in self._lru:
+                return False
+        ent = self._lru.get(key)
+        if ent is None:
+            self._lru[key] = _Entry(state, tuple(chain))
+        else:
+            ent.state = state
+        self._lru.move_to_end(key)
         while len(self._lru) > self.capacity:
-            self._lru.popitem(last=False)
+            victim, _ = self._lru.popitem(last=False)
+            self.evictions += 1
+            self._evict_descendants(victim)
+        return True
+
+    def _evict_descendants(self, victim: bytes) -> None:
+        """Chains evict whole: drop every entry whose chain runs through
+        ``victim`` so no lookup can land beyond a missing ancestor."""
+        dangling = [k for k, e in self._lru.items() if victim in e.chain]
+        for k in dangling:
+            del self._lru[k]
+            self.evictions += 1
 
 
 class ServeEngine:
-    """Continuous batching over a fixed-width decode step.
+    """Continuous batching over a fixed-width batched decode step.
 
-    ``prefill_fn(tokens[B,S]) -> per-row cache states`` and
-    ``decode_fn(states, tokens[B,1]) -> (logits[B,1,V], states)`` come from
-    parallel.steps; here they're small-model callables in tests/examples.
+    ``prefill_fn(tokens, state) -> state`` (resumable, ``state=None``
+    starts fresh) and ``decode_fn(states, tokens[B,1]) ->
+    (logits[B,1,V], states)`` come from ``parallel.steps`` /
+    ``launch.serve``; in tests they are small deterministic callables
+    (:func:`repro.serving.model.toy_fns`).
+
+    ``admission`` is an optional :class:`repro.serving.admission.TenantQueue`
+    — without one, admission is FIFO and tenant-blind.
     """
 
     def __init__(self, prefill_fn: Callable, decode_fn: Callable,
-                 batch: int, eos: int = 0, prefix_cache: Optional[PrefixCache] = None):
+                 batch: int, eos: int = 0,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 block: int = 16, admission=None,
+                 now: Callable[[], float] = time.monotonic):
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
         self.batch = batch
         self.eos = eos
-        self.cache = prefix_cache or PrefixCache()
-        self.queue: list[Request] = []
+        self.block = block
+        # `is None`, not `or`: an empty PrefixCache is falsy (len 0), and a
+        # caller-supplied capacity-0 cache is the cache-disabled ablation
+        self.cache = PrefixCache() if prefix_cache is None else prefix_cache
+        self.admission = admission
+        self.queue: list[Request] = []        # FIFO path (admission=None)
         self.active: list[Optional[Request]] = [None] * batch
+        self.finished: list[Request] = []
         self.steps = 0
+        self._now = now
 
+    # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        """Validate and enqueue; raises :class:`RequestError` subtypes."""
+        validate_request(req)
+        req.t_submit = self._now()
+        if req.max_new == 0:
+            # zero-budget: a valid request that asks for nothing — complete
+            # immediately, never occupy a slot, never emit a token
+            req.t_admit = req.t_done = req.t_submit
+            req.done = True
+            self.finished.append(req)
+            return
+        if self.admission is not None:
+            self.admission.push(req)
+        else:
+            self.queue.append(req)
 
+    def pending(self) -> int:
+        return (len(self.admission) if self.admission is not None
+                else len(self.queue))
+
+    def _next_request(self) -> Optional[Request]:
+        if self.admission is not None:
+            return self.admission.pop()
+        return self.queue.pop(0) if self.queue else None
+
+    # ----------------------------------------------------------- prefill
     def _admit(self) -> None:
         for slot in range(self.batch):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                keys = prompt_key(req.prompt)
-                _n, _st = self.cache.lookup(keys)  # counted; state reuse is
-                # exercised at the block level in tests
-                state = self.prefill_fn(req.prompt)
-                self.cache.insert(keys, state)
-                req._state = state  # type: ignore[attr-defined]
-                req._last = int(req.prompt[-1])  # type: ignore[attr-defined]
-                self.active[slot] = req
+            if self.active[slot] is not None:
+                continue
+            req = self._next_request()
+            if req is None:
+                break
+            keys = prompt_key(req.prompt, self.block)
+            n, state = self.cache.lookup(keys)
+            # resume from the longest cached boundary; prefill only the
+            # uncovered tail, caching every new boundary on the way
+            for j in range(n, len(keys)):
+                seg = req.prompt[j * self.block: (j + 1) * self.block]
+                state = self.prefill_fn(seg, state)
+                self.cache.insert(keys[: j + 1], state)
+            req._state = state  # type: ignore[attr-defined]
+            req._last = int(req.prompt[-1])  # type: ignore[attr-defined]
+            req.t_admit = self._now()
+            self.active[slot] = req
 
+    # ------------------------------------------------------------ decode
     def step(self) -> int:
-        """One decode step for the whole batch; returns #finished."""
+        """One batched decode step; returns the number of finished rows."""
         self._admit()
         live = [(i, r) for i, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
+        states = [r._state for _, r in live]
+        tokens = np.asarray([[r._last] for _, r in live], np.int32)
+        logits, states = self.decode_fn(states, tokens)
         finished = 0
-        for i, req in live:
-            tok, req._state = self.decode_fn(req._state, req._last)
+        now = self._now()
+        for row, (i, req) in enumerate(live):
+            req._state = states[row]
+            tok = int(np.argmax(logits[row, -1]))
             req._last = tok
             req.out_tokens.append(tok)
+            if req.t_first is None:
+                req.t_first = now
             if tok == self.eos or len(req.out_tokens) >= req.max_new:
                 req.done = True
+                req.t_done = now
                 self.active[i] = None
+                self.finished.append(req)
+                if self.admission is not None:
+                    self.admission.release(req.tenant)
                 finished += 1
         self.steps += 1
         return finished
 
     def run(self, max_steps: int = 10_000) -> None:
-        while (self.queue or any(r is not None for r in self.active)) \
+        while (self.pending() or any(r is not None for r in self.active)) \
                 and self.steps < max_steps:
             self.step()

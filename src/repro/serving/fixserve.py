@@ -1,0 +1,338 @@
+"""FixServeEngine: continuous batching where serving *is* a Fix workload.
+
+Every prefill block and every decode step is an ordinary Fix application
+(:mod:`repro.serving.model` codelets) submitted through the
+:class:`~repro.fix.backend.Backend` protocol — so the same engine runs
+unchanged on ``fix.local()``, a simulated ``fix.on(cluster)`` under
+``VirtualClock``, and real processes via ``fix.remote()``.
+
+What "KV cache" means here:
+
+* a prefix state is a **content-addressed blob** in the backend's
+  repository universe, produced by the deterministic chain
+  ``state_j = prefill_block(weights, state_{j-1}, block_j)``;
+* the cross-request index is the repository's **strict-memo table**:
+  boundary ``j``'s canonical strict Encode (the fully-lazy chain from the
+  empty state — a pure function of weights + token blocks, independent of
+  where any request resumed) maps to its state handle via
+  ``strict_memo_get/put``.  A client-side :class:`PrefixCache` of
+  ``prompt_key`` chains fronts it so the common case never recompiles;
+* a cache **hit is a placement decision**: the engine passes the state
+  *handle* to the next codelet and never localizes state bytes — the
+  scheduler decides whether the holding node computes, or the blob is
+  staged over a link (the seconds-to-stage model), exactly like any other
+  dependency.  Decode reads use ``fetch_stream`` to pull only the token
+  child; state blobs stay wherever they were produced.
+
+The no-memo ablation (``prefix_memo=False``) threads each request's chain
+through ``serve/nonce_state`` — identity on values, unique content keys —
+so identical prefixes genuinely recompute per request while token streams
+stay bit-identical (the benchmark's correctness check).
+
+Per-tenant admission is a :class:`~repro.serving.admission.TenantQueue`;
+every submission carries ``tenant=`` so the PR-4 trace plane
+(``tenant_report`` / ``starvation_intervals`` / ``link_utilization``)
+doubles as the SLO report.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+from ..fix.backend import Backend
+from ..fix.future import Future
+from .admission import TenantQueue
+from .engine import PrefixCache, Request, prompt_key, validate_request
+from .model import (
+    decode_step,
+    nonce_state,
+    prefill_block,
+    token_block_bytes,
+    weights_meta,
+)
+
+
+class FixServeEngine:
+    """Continuous batching + memoized-prefix reuse over a Fix backend.
+
+    ``backend`` is any :class:`~repro.fix.backend.Backend`; ``weights`` a
+    toy-LM blob (:func:`repro.serving.model.make_weights`).  ``batch`` is
+    the decode width (slots), ``block`` the prefix-block size in tokens.
+    ``prefix_cache`` (a :class:`PrefixCache`) holds *(canonical encode,
+    state handle)* pairs per boundary — handles, never bytes.  ``now``
+    lets simulated runs report virtual-clock latencies
+    (``now=cluster.clock.now``).
+    """
+
+    def __init__(self, backend: Backend, weights: bytes, *,
+                 batch: int = 4, block: int = 16,
+                 prefix_memo: bool = True,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 admission: Optional[TenantQueue] = None,
+                 timeout_s: Optional[float] = 600.0,
+                 now: Callable[[], float] = time.monotonic):
+        self.be = backend
+        self.weights = weights
+        self.vocab, self.eos = weights_meta(weights)
+        self.w_h = backend.repo.put_blob(weights)
+        self.batch = batch
+        self.block = block
+        self.prefix_memo = prefix_memo
+        self.chain = (PrefixCache(capacity=4096) if prefix_cache is None
+                      else prefix_cache)
+        self.admission = admission
+        self.timeout_s = timeout_s
+        self._now = now
+        self._lock = threading.Lock()  # chain map vs. completion callbacks
+        self.queue: list[Request] = []
+        self.active: list[Optional[Request]] = [None] * batch
+        self.finished: list[Request] = []
+        self.steps = 0
+        # ---- block-level accounting (the ablation's comparison axis)
+        self.blocks_total = 0
+        self.blocks_hit = 0
+        self.prefill_bytes_total = 0
+        self.prefill_bytes_hit = 0
+        self.decode_steps = 0
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        """Same typed validation as the host engine (shared helper)."""
+        validate_request(req)
+        req.t_submit = self._now()
+        if req.max_new == 0:
+            req.t_admit = req.t_done = req.t_submit
+            req.done = True
+            self.finished.append(req)
+            return
+        if self.admission is not None:
+            self.admission.push(req)
+        else:
+            self.queue.append(req)
+
+    def pending(self) -> int:
+        return (len(self.admission) if self.admission is not None
+                else len(self.queue))
+
+    def _next_request(self) -> Optional[Request]:
+        if self.admission is not None:
+            return self.admission.pop()
+        return self.queue.pop(0) if self.queue else None
+
+    # ----------------------------------------------------------- prefill
+    def _canonical_encode(self, prompt, j: int):
+        """Boundary ``j``'s canonical strict Encode: the fully-lazy chain
+        from the empty state — same content key regardless of where any
+        particular request resumed, so it is *the* memo identity."""
+        expr = None
+        for i in range(j + 1):
+            seg = token_block_bytes(
+                prompt[i * self.block: (i + 1) * self.block])
+            expr = prefill_block(self.w_h,
+                                 expr if expr is not None else b"", seg)
+        enc, _ = self.be._compile(expr)
+        return enc
+
+    def _record_boundary(self, chain_keys: tuple, enc, fut: Future) -> None:
+        """Completion callback: index the boundary's state handle in the
+        chain map and the repo's strict-memo table."""
+        try:
+            state_h = fut.result(0)
+        except Exception:  # noqa: BLE001 — failed prefills just don't cache
+            return
+        with self._lock:
+            self.chain.insert(list(chain_keys), (enc, state_h))
+            self.be.repo.strict_memo_put(enc, state_h)
+
+    def _admit(self) -> None:
+        for slot in range(self.batch):
+            if self.active[slot] is not None:
+                continue
+            req = self._next_request()
+            if req is None:
+                break
+            self._start_prefill(req)
+            req.t_admit = self._now()
+            self.active[slot] = req
+
+    def _start_prefill(self, req: Request) -> None:
+        keys = prompt_key(req.prompt, self.block)
+        seg_bytes = [len(token_block_bytes(
+            req.prompt[j * self.block: (j + 1) * self.block]))
+            for j in range(len(keys))]
+        n, state_h = 0, None
+        if self.prefix_memo:
+            with self._lock:
+                n, ent = self.chain.lookup(keys)
+                if ent is not None:
+                    state_h = ent[1]
+                # extend through the strict-memo table: survives chain-map
+                # eviction because the canonical encode is recomputable
+                # from the prompt alone
+                while n < len(keys):
+                    enc = self._canonical_encode(req.prompt, n)
+                    memo_h = self.be.repo.strict_memo_get(enc)
+                    if memo_h is None:
+                        break
+                    self.chain.insert(list(keys[: n + 1]), (enc, memo_h))
+                    state_h = memo_h
+                    n += 1
+        self.blocks_total += len(keys)
+        self.blocks_hit += n
+        self.prefill_bytes_total += sum(seg_bytes)
+        self.prefill_bytes_hit += sum(seg_bytes[:n])
+        req._last = int(req.prompt[-1])  # type: ignore[attr-defined]
+        if n == len(keys):
+            # full hit: decode-ready with zero prefill submissions — the
+            # state handle IS the cache, wherever its bytes live
+            req._state_h = state_h  # type: ignore[attr-defined]
+            req._prefill_fut = None  # type: ignore[attr-defined]
+            return
+        # resume from the longest known boundary; submit one strict
+        # expression per uncovered boundary (children dedup by content
+        # key, so total work is one job per block) and index each result
+        # as it lands
+        prev = state_h if state_h is not None else b""
+        if not self.prefix_memo:
+            # ablation: thread the chain through a per-request nonce —
+            # unique content keys, identical values, no folding
+            prev = nonce_state(prev, int(req.rid))
+        fut = None
+        for j in range(n, len(keys)):
+            seg = token_block_bytes(
+                req.prompt[j * self.block: (j + 1) * self.block])
+            expr = prefill_block(self.w_h, prev, seg)
+            fut = self.be.submit(expr, tenant=req.tenant)
+            if self.prefix_memo:
+                enc = self._canonical_encode(req.prompt, j)
+                fut.add_done_callback(
+                    lambda f, c=tuple(keys[: j + 1]), e=enc:
+                    self._record_boundary(c, e, f))
+            prev = expr
+        req._state_h = None  # type: ignore[attr-defined]
+        req._prefill_fut = fut  # type: ignore[attr-defined]
+
+    # ------------------------------------------------------------ decode
+    def _promote(self) -> list:
+        """Resolve finished prefills; returns decode-ready (slot, req)."""
+        ready = []
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            if req._state_h is None:
+                fut = req._prefill_fut
+                if fut is None or not fut.done():
+                    continue
+                try:
+                    req._state_h = fut.result(0)
+                except Exception as e:  # noqa: BLE001 — typed fail-fast
+                    req.error = e  # type: ignore[attr-defined]
+                    self._finish(i, req)
+                    continue
+                req._prefill_fut = None
+            ready.append((i, req))
+        return ready
+
+    def _finish(self, slot: int, req: Request) -> None:
+        req.done = True
+        req.t_done = self._now()
+        self.active[slot] = None
+        self.finished.append(req)
+        if self.admission is not None:
+            self.admission.release(req.tenant)
+
+    def step(self) -> int:
+        """One continuous-batching step: admit, promote, one batched
+        decode wave; returns the number of requests finished."""
+        self._admit()
+        live = self._promote()
+        if not live:
+            # nothing decode-ready: block on the earliest prefill so
+            # simulated time advances instead of busy-spinning
+            waiting = [r._prefill_fut for r in self.active
+                       if r is not None and r._prefill_fut is not None]
+            if waiting:
+                next(iter(Backend.as_completed(waiting, self.timeout_s)))
+            return 0
+        # one decode wave: submit every live row's step, then read back.
+        # fetch_stream pulls only the tree node + token child — the state
+        # blob never crosses to the client (placement, not transfer).
+        futs = []
+        for i, req in live:
+            expr = decode_step(self.w_h, req._state_h, req._last)
+            futs.append(self.be.submit(expr, tenant=req.tenant))
+        finished = 0
+        for (i, req), fut in zip(live, futs):
+            try:
+                h = fut.result(self.timeout_s)
+                gen = self.be.fetch_stream(h, as_type=tuple[int, bytes],
+                                           timeout=self.timeout_s)
+                tok = next(gen)
+                gen.close()
+                obj = h.as_object() if h.is_ref() else h
+                req._state_h = self.be.repo.get_tree(obj)[1]
+            except Exception as e:  # noqa: BLE001 — typed fail-fast
+                req.error = e  # type: ignore[attr-defined]
+                self._finish(i, req)
+                finished += 1
+                continue
+            self.decode_steps += 1
+            req._last = int(tok)
+            req.out_tokens.append(int(tok))
+            if req.t_first is None:
+                req.t_first = self._now()
+            if tok == self.eos or len(req.out_tokens) >= req.max_new:
+                self._finish(i, req)
+                finished += 1
+        self.steps += 1
+        return finished
+
+    def run(self, max_steps: int = 1_000_000) -> None:
+        while (self.pending()
+               or any(r is not None for r in self.active)) \
+                and self.steps < max_steps:
+            self.step()
+
+    def serve(self, requests) -> list[Request]:
+        """Submit everything, run to completion, return finished order."""
+        for req in requests:
+            self.submit(req)
+        self.run()
+        return self.finished
+
+    # ------------------------------------------------------------ report
+    def report(self) -> dict:
+        """Request-level SLOs + block-level memo accounting.  The
+        trace-level per-tenant view comes from
+        :func:`repro.runtime.trace.tenant_report` on the backend's trace."""
+        from ..runtime.trace import percentile
+        lat = [r.latency_s for r in self.finished]
+        wait = [r.queue_wait_s for r in self.finished]
+        per_tenant: dict[str, dict] = {}
+        for r in self.finished:
+            d = per_tenant.setdefault(
+                r.tenant, {"requests": 0, "latencies": [], "waits": []})
+            d["requests"] += 1
+            d["latencies"].append(r.latency_s)
+            d["waits"].append(r.queue_wait_s)
+        return {
+            "requests": len(self.finished),
+            "engine_steps": self.steps,
+            "decode_steps": self.decode_steps,
+            "p50_latency_s": percentile(lat, 50),
+            "p99_latency_s": percentile(lat, 99),
+            "p99_queue_wait_s": percentile(wait, 99),
+            "blocks_total": self.blocks_total,
+            "blocks_hit": self.blocks_hit,
+            "hit_ratio": (self.blocks_hit / self.blocks_total
+                          if self.blocks_total else 0.0),
+            "prefill_bytes_total": self.prefill_bytes_total,
+            "prefill_bytes_hit": self.prefill_bytes_hit,
+            "per_tenant": {
+                t: {"requests": d["requests"],
+                    "p50_latency_s": percentile(d["latencies"], 50),
+                    "p99_latency_s": percentile(d["latencies"], 99),
+                    "p99_queue_wait_s": percentile(d["waits"], 99)}
+                for t, d in sorted(per_tenant.items())},
+        }

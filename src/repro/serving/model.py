@@ -1,0 +1,132 @@
+"""A tiny deterministic "language model" whose whole state is 32 bytes.
+
+Serving correctness here is about *plumbing*, not quality: what must hold
+is that a KV state is a pure function of (weights, token prefix) and a
+decode step a pure function of (weights, state, last token) — then prefix
+states are content-addressed, memoizable, and bit-identical wherever they
+are computed.  A blake2b chain gives exactly those properties at zero
+model cost, so the same token streams fall out of the host engine, the
+local backend, the simulated cluster and real worker processes — the
+property every serving test pins.
+
+Layout of a weights blob (``make_weights``)::
+
+    b"TLM1" | vocab:u16 | eos:u16 | 32 bytes of seeded key material
+
+State chain::
+
+    state_0   = H(weights || 0^32        || block_0_token_bytes)
+    state_j   = H(weights || state_{j-1} || block_j_token_bytes)
+    tok, st'  = decode:  d = H(weights || state || last:i64);
+                tok = d[:4] % vocab;  st' = d
+
+Token ``eos`` therefore appears with probability ~1/vocab per step —
+some generations end early, most run to budget, deterministically.
+
+The ``@fix.codelet`` forms (``serve/prefill_block``, ``serve/decode_step``)
+make each prefill block / decode step an ordinary Fix application: the
+weights travel as a content-addressed blob handle, states as blobs, and
+the strict-memo table does cross-request prefix sharing.
+``serve/nonce_state`` is the ablation device: identity on the state but
+salted by a nonce, so wrapping each request's chain in it gives the
+*same values* with *distinct content keys* — memoization off, semantics
+unchanged.
+"""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from ..fix import codelet
+
+_MAGIC = b"TLM1"
+_STATE0 = b"\x00" * 32
+
+
+def make_weights(seed: int = 0, vocab: int = 64, eos: int = 0) -> bytes:
+    """A content-addressed weights blob for the toy LM."""
+    if not 0 <= eos < vocab <= 0xFFFF:
+        raise ValueError(f"need 0 <= eos < vocab <= 65535, got {eos}/{vocab}")
+    key = hashlib.blake2b(b"toy-lm-%d" % seed, digest_size=32).digest()
+    return (_MAGIC + vocab.to_bytes(2, "big") + eos.to_bytes(2, "big") + key)
+
+
+def weights_meta(weights: bytes) -> tuple[int, int]:
+    """(vocab, eos) parsed back out of a weights blob."""
+    if weights[:4] != _MAGIC or len(weights) != 40:
+        raise ValueError("not a toy-LM weights blob")
+    return (int.from_bytes(weights[4:6], "big"),
+            int.from_bytes(weights[6:8], "big"))
+
+
+def token_block_bytes(tokens) -> bytes:
+    """Canonical byte form of a token block — must match ``prompt_key``'s
+    hashing (int32, contiguous) so host and codelet chains agree."""
+    return np.ascontiguousarray(tokens, np.int32).tobytes()
+
+
+def lm_prefill_block(weights: bytes, state: bytes, block: bytes) -> bytes:
+    """Fold one token block into the running prefix state (b"" starts)."""
+    h = hashlib.blake2b(digest_size=32)
+    h.update(weights)
+    h.update(state if state else _STATE0)
+    h.update(block)
+    return h.digest()
+
+
+def lm_decode(weights: bytes, state: bytes, last: int) -> tuple[int, bytes]:
+    """One greedy decode step: (token, next state)."""
+    vocab, _eos = weights_meta(weights)
+    h = hashlib.blake2b(digest_size=32)
+    h.update(weights)
+    h.update(state if state else _STATE0)
+    h.update(int(last).to_bytes(8, "big", signed=True))
+    d = h.digest()
+    return int.from_bytes(d[:4], "big") % vocab, d
+
+
+# --------------------------------------------------------------- codelets
+@codelet(name="serve/prefill_block")
+def prefill_block(weights: bytes, state: bytes, block: bytes) -> bytes:
+    """One prefill block as a Fix application — the unit of prefix memo."""
+    return lm_prefill_block(weights, state, block)
+
+
+@codelet(name="serve/decode_step")
+def decode_step(weights: bytes, state: bytes, last: int) -> tuple[int, bytes]:
+    """One decode step as a Fix application: (token, next-state blob)."""
+    return lm_decode(weights, state, last)
+
+
+@codelet(name="serve/nonce_state")
+def nonce_state(state: bytes, nonce: int) -> bytes:
+    """Identity on ``state``, distinct content key per ``nonce`` — the
+    no-memo ablation threads each request's chain through a fresh nonce so
+    identical prefixes stop folding without changing any value."""
+    del nonce
+    return state
+
+
+# ------------------------------------------------------- host-level fns
+def toy_fns(weights: bytes):
+    """(prefill_fn, decode_fn) over the toy LM, in the ServeEngine
+    contract: resumable block prefill + batched decode with one-hot
+    logits.  Streams are bit-identical to the codelet path."""
+    vocab, _eos = weights_meta(weights)
+
+    def prefill_fn(tokens, state=None):
+        return lm_prefill_block(weights, state if state else b"",
+                                token_block_bytes(tokens))
+
+    def decode_fn(states, tokens):
+        tokens = np.asarray(tokens)
+        out_states = []
+        logits = np.zeros((len(states), 1, vocab), np.float32)
+        for b, (st, last) in enumerate(zip(states, tokens[:, 0])):
+            tok, st2 = lm_decode(weights, st, int(last))
+            logits[b, 0, tok] = 1.0
+            out_states.append(st2)
+        return logits, out_states
+
+    return prefill_fn, decode_fn

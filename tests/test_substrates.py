@@ -84,15 +84,21 @@ class TestCheckpoint:
 # --------------------------------------------------------------- serving
 class TestServing:
     def test_engine_continuous_batching(self):
-        # toy "model": state = last token; next token = (last + 1) % 7
-        def prefill(prompt):
-            return int(prompt[-1])
+        # toy "model" in the batched contracts: state = last token seen;
+        # next token = (last + 1) % 7 (eos -1 never fires)
+        def prefill(tokens, state=None):
+            return int(tokens[-1])
 
-        def decode(state, last):
-            nxt = (last + 1) % 7
-            return nxt, nxt
+        def decode(states, tokens):
+            logits = np.zeros((len(states), 1, 8), np.float32)
+            out = []
+            for b, last in enumerate(tokens[:, 0]):
+                nxt = (int(last) + 1) % 7
+                logits[b, 0, nxt] = 1.0
+                out.append(nxt)
+            return logits, out
 
-        eng = ServeEngine(prefill, decode, batch=2, eos=-1)
+        eng = ServeEngine(prefill, decode, batch=2, eos=-1, block=16)
         reqs = [Request(rid=i, prompt=np.asarray([i, i + 1], np.int32), max_new=5)
                 for i in range(5)]
         for r in reqs:
@@ -110,9 +116,14 @@ class TestServing:
         assert ka[0] == kb[0] and ka[1] == kb[1]  # shared 32-token prefix
         assert ka[2] != kb[2]
         cache = PrefixCache(4)
-        cache.insert(ka, "state-a")
+        # states are per-boundary: a 4-block insert without its ancestors
+        # would dangle (the seed engine cached one whole-prompt state here,
+        # which a shorter lookup then wrongly resumed from) — refused now
+        assert not cache.insert(ka, "state-a3")
+        for j in range(4):
+            assert cache.insert(ka[: j + 1], f"state-a{j}")
         n, st = cache.lookup(kb)
-        assert n == 2 and st == "state-a"  # longest shared prefix found
+        assert n == 2 and st == "state-a1"  # the state of exactly 2 blocks
 
 
 # -------------------------------------------------------------- optimizers

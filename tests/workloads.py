@@ -368,6 +368,127 @@ def run_ab_case(seed: int, placement: str,
         clk.close()
 
 
+# ---------------------------------------------------------- serving traffic
+@dataclass(frozen=True)
+class ServingSpec:
+    """A seeded serving-traffic case: Zipf-shared prefixes over tenants."""
+
+    seed: int
+    n_requests: int
+    n_tenants: int
+    block: int           # prefix-block size in tokens
+    vocab: int
+    n_prefixes: int      # shared-prefix pool size
+    zipf_a: float        # popularity skew over the pool (rank^-a)
+    prefix_blocks: tuple # (min, max) whole blocks per pool prefix
+    tail_tokens: tuple   # (min, max) per-request unique tail tokens
+    max_new: tuple       # (min, max) decode budget
+    batch: int           # engine decode width
+
+
+def make_serving_spec(seed: int, n_requests: int = 64) -> ServingSpec:
+    rng = random.Random(seed * 6271 + 7)
+    return ServingSpec(
+        seed=seed,
+        n_requests=n_requests,
+        n_tenants=rng.randint(2, 4),
+        block=8,
+        vocab=64,
+        n_prefixes=rng.randint(4, 8),
+        zipf_a=rng.uniform(0.8, 1.4),
+        prefix_blocks=(1, 3),
+        tail_tokens=(0, 12),
+        max_new=(1, 6),
+        batch=rng.choice((2, 4)),
+    )
+
+
+def make_serving_requests(spec: ServingSpec) -> list:
+    """Seeded traffic: each request draws a pool prefix Zipf-style, adds a
+    unique tail, lands on a random tenant.  Shared prefixes are whole
+    blocks, so block-level memoization has something to find."""
+    import numpy as np  # heavy import kept local: workloads.py is also a CLI
+
+    from repro.serving import Request
+
+    rng = random.Random(spec.seed * 517 + 29)
+    pool = []
+    for _ in range(spec.n_prefixes):
+        nb = rng.randint(*spec.prefix_blocks)
+        pool.append([rng.randrange(1, spec.vocab)
+                     for _ in range(nb * spec.block)])
+    zipf = [1.0 / (r ** spec.zipf_a) for r in range(1, spec.n_prefixes + 1)]
+    reqs = []
+    for i in range(spec.n_requests):
+        prefix = pool[rng.choices(range(spec.n_prefixes), zipf)[0]]
+        tail = [rng.randrange(1, spec.vocab)
+                for _ in range(rng.randint(*spec.tail_tokens))]
+        reqs.append(Request(
+            rid=i,
+            prompt=np.asarray(prefix + tail, np.int32),
+            max_new=rng.randint(*spec.max_new),
+            tenant=f"t{rng.randrange(spec.n_tenants)}"))
+    return reqs
+
+
+def run_serving(spec: ServingSpec, *, backend: str = "simulated",
+                prefix_memo: bool = True, trace: TraceRecorder | None = None,
+                max_inflight: int | None = 2,
+                tenant_weights: dict | None = None,
+                n_workers: int = 2) -> dict:
+    """Serve one seeded traffic case end to end on a backend.
+
+    ``backend``: "local" | "simulated" (VirtualClock cluster, traceable) |
+    "remote" (real worker processes).  Returns the engine report, the
+    per-request token streams (the cross-backend / ablation equivalence
+    oracle) and any typed per-request errors.
+    """
+    from repro.serving import FixServeEngine, TenantQueue, make_weights
+
+    weights = make_weights(seed=0, vocab=spec.vocab, eos=0)
+    reqs = make_serving_requests(spec)
+    admission = TenantQueue(weights=tenant_weights, max_inflight=max_inflight)
+    cluster = None
+    clock = None
+    be = None
+    try:
+        if backend == "simulated":
+            clock = VirtualClock()
+            cluster = Cluster(n_nodes=3, workers_per_node=2, clock=clock,
+                              seed=spec.seed, trace=trace)
+            if trace is not None:
+                trace.bind(clock)
+            be = fix.on(cluster)
+            now = clock.now
+        elif backend == "local":
+            be = fix.local()
+            now = None
+        elif backend == "remote":
+            be = fix.remote(n_workers=n_workers)
+            now = None
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        kw = {} if now is None else {"now": now}
+        engine = FixServeEngine(be, weights, batch=spec.batch,
+                                block=spec.block, prefix_memo=prefix_memo,
+                                admission=admission, **kw)
+        engine.serve(reqs)
+        return {
+            "report": engine.report(),
+            "streams": {r.rid: list(r.out_tokens) for r in engine.finished},
+            "errors": sorted((r.rid, type(r.error).__name__)
+                             for r in engine.finished
+                             if getattr(r, "error", None) is not None),
+        }
+    finally:
+        if cluster is not None:
+            cluster.shutdown()
+        elif be is not None:
+            be.close()
+        if clock is not None:
+            clock.close()
+
+
 # -------------------------------------------------------------------- CLI
 def main(argv: list[str]) -> int:
     import argparse
