@@ -28,6 +28,7 @@ FIGS = {
     "chaos": figures.fig_chaos,
     "remote_chaos": figures.fig_remote_chaos,
     "serving": figures.fig_serving,
+    "obs": figures.fig_obs,
 }
 
 

@@ -49,13 +49,19 @@ class FixError(RuntimeError):
 
 
 class Evaluator:
-    __slots__ = ("repo", "applications", "reductions", "codelet_seconds")
+    __slots__ = ("repo", "applications", "reductions", "codelet_seconds",
+                 "codelets", "last_codelet")
 
     def __init__(self, repo: Repository):
         self.repo = repo
         self.applications = 0  # codelet invocations
         self.reductions = 0  # total thunk reduction steps
         self.codelet_seconds = 0.0
+        # per-codelet wall accounting: name -> [count, total integer ns]
+        # (integer ns so remote workers can ship deltas over a wire codec
+        # with no float tag, and sums merge without rounding drift)
+        self.codelets: dict[str, list] = {}
+        self.last_codelet: Optional[str] = None
 
     # ----------------------------------------------------------- evaluate
     def evaluate(self, handle: Handle) -> Handle:
@@ -165,7 +171,16 @@ class Evaluator:
             raise  # runtime faults pass through for the scheduler to handle
         except Exception as e:  # noqa: BLE001 — codelet fault, not runtime fault
             raise FixError(f"codelet {name_of(proc)!r} failed: {e!r}") from e
-        self.codelet_seconds += (time.perf_counter_ns() - t0) * 1e-9
+        dt_ns = time.perf_counter_ns() - t0
+        self.codelet_seconds += dt_ns * 1e-9
+        name = name_of(proc) or proc.content_key().hex()[:12]
+        ent = self.codelets.get(name)
+        if ent is None:
+            self.codelets[name] = [1, dt_ns]
+        else:
+            ent[0] += 1
+            ent[1] += dt_ns
+        self.last_codelet = name
         if not isinstance(out, Handle):
             raise FixError(f"codelet {name_of(proc)!r} returned {type(out)}")
         return out
@@ -218,4 +233,6 @@ class Evaluator:
             "applications": self.applications,
             "reductions": self.reductions,
             "codelet_seconds": self.codelet_seconds,
+            "codelets": {name: {"count": ent[0], "total_ns": ent[1]}
+                         for name, ent in sorted(self.codelets.items())},
         }

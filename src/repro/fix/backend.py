@@ -144,6 +144,15 @@ class Backend(abc.ABC):
                      timeout: Optional[float] = None):
         return as_completed(futures, timeout)
 
+    def stats(self) -> dict:
+        """One live telemetry snapshot, same shape on every backend:
+        ``backend`` (which engine), ``metrics`` (a
+        :class:`~repro.runtime.telemetry.MetricsRegistry` snapshot — may
+        be empty), and ``codelets`` (per-codelet wall accounting,
+        ``name -> {"count", "total_ns"}``), plus backend-specific
+        sections.  This is what ``repro.obs.top`` renders."""
+        return {"backend": "none", "metrics": {}, "codelets": {}}
+
     # ---------------------------------------------------------- internals
     @abc.abstractmethod
     def _localize(self, handle: Handle) -> None:
@@ -251,6 +260,18 @@ class LocalBackend(Backend):
             except BaseException as e:  # noqa: BLE001 — delivered via the future
                 fut.set_exception(e)
 
+    def stats(self) -> dict:
+        # codelet table inlined from the evaluator (this module cannot
+        # import repro.runtime, where CodeletProfile lives)
+        return {
+            "backend": "local",
+            "metrics": {},
+            "codelets": {name: {"count": ent[0], "total_ns": ent[1]}
+                         for name, ent
+                         in sorted(self.evaluator.codelets.items())},
+            "evaluator": self.evaluator.stats(),
+        }
+
     def close(self) -> None:
         if not self._closed:
             self._closed = True
@@ -321,6 +342,9 @@ class ClusterBackend(Backend):
             if moved:
                 c._account_transfer(1, moved)
         return into
+
+    def stats(self) -> dict:
+        return self.cluster.stats()
 
     def close(self) -> None:
         self.cluster.shutdown()

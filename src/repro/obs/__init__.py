@@ -1,0 +1,26 @@
+"""Observability surfaces over the telemetry plane.
+
+The runtime half lives in :mod:`repro.runtime.telemetry` (the metrics
+registry, span emitter, and codelet profiles threaded through all three
+backends).  This package holds the *views*:
+
+* :mod:`repro.obs.perfetto` — export a PR-4 trace stream (including the
+  PR-10 ``span_begin``/``span_end`` events) to Chrome/Perfetto
+  ``trace_event`` JSON, byte-stable so CI can diff it;
+* :mod:`repro.obs.top` — a ``top``-style live renderer over the unified
+  ``stats()`` snapshot shape shared by ``fix.local()``, ``fix.on()``,
+  ``fix.remote()`` and :class:`~repro.serving.fixserve.FixServeEngine`.
+"""
+__all__ = ["export_json", "to_trace_events", "render_snapshot"]
+
+
+def __getattr__(name):
+    # lazy: keeps `python -m repro.obs.top` free of the runpy
+    # found-in-sys.modules warning
+    if name in ("export_json", "to_trace_events"):
+        from . import perfetto
+        return getattr(perfetto, name)
+    if name == "render_snapshot":
+        from .top import render_snapshot
+        return render_snapshot
+    raise AttributeError(name)

@@ -1,0 +1,152 @@
+"""Chrome/Perfetto ``trace_event`` export for PR-4 trace streams.
+
+The trace plane already records everything a timeline viewer needs —
+job stage/run intervals, link serialization windows, and (with
+``spans=True``) causal spans.  This module maps those onto the
+``trace_event`` JSON format that ``chrome://tracing`` and
+https://ui.perfetto.dev load directly:
+
+* every :func:`repro.runtime.trace.waterfall` interval becomes an ``X``
+  (complete) event on its lane — node lanes carry ``stage``/``run``
+  slices, link lanes carry ``xfer`` slices;
+* job lifecycle and transfer events that aren't intervals
+  (``job_submit``, ``job_memo_hit``, ``job_fail``, ... ,
+  ``transfer_deliver``, ``stage_request``) become ``i`` (instant)
+  events, so *every* job/transfer trace event is represented in the
+  export — the round-trip test's coverage invariant;
+* ``span_begin``/``span_end`` pairs become ``X`` events on a dedicated
+  ``spans`` lane, with the parent span id in ``args``.
+
+Lanes map to Perfetto threads (one ``M`` thread-name metadata record
+per lane, tids assigned in sorted lane order), all under ``pid`` 1.
+Timestamps are trace-clock seconds scaled to integer microseconds;
+output is ``json.dumps(sort_keys=True, separators=(",", ":"))`` so the
+same trace always exports byte-identically.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from ..runtime.trace import event_dicts, waterfall
+
+# job/transfer kinds exported as instants (interval kinds — job_place,
+# job_start, job_finish, link_acquire — are consumed by waterfall())
+_INSTANT_KINDS = frozenset({
+    "job_submit", "job_memo_hit", "job_fail", "job_cancel", "job_resubmit",
+    "stage_request", "transfer_deliver", "transfer_retry", "transfer_gaveup",
+})
+
+_SCHED_LANE = "scheduler"
+_SPAN_LANE = "spans"
+
+
+def _us(t: float) -> int:
+    return int(round(t * 1e6))
+
+
+def _instant_lane(ev: dict) -> str:
+    if ev.get("node") is not None:
+        return str(ev["node"])
+    src, dst = ev.get("src"), ev.get("dst")
+    if src is not None and dst is not None:
+        return f"{src}->{dst}"
+    if dst is not None:
+        return str(dst)
+    return _SCHED_LANE
+
+
+def _instant_name(ev: dict) -> str:
+    k = ev["kind"]
+    if k.startswith("job_") and ev.get("job") is not None:
+        return f"{k}:{ev['job']}"
+    return k
+
+
+def to_trace_events(events) -> list[dict]:
+    """Build the ``traceEvents`` list (metadata first, then sorted
+    slices/instants) from an iterable of trace events or dicts."""
+    evs = event_dicts(events)
+    out: list[dict] = []
+    lanes: set[str] = set()
+
+    for lane, slices in waterfall(evs).items():
+        lanes.add(lane)
+        for s in slices:
+            args = {k: v for k, v in s.items() if k not in ("start", "end")}
+            name = (f"job:{s['job']} {s['phase']}" if "job" in s
+                    else s["phase"])
+            out.append({"ph": "X", "name": name, "cat": s["phase"],
+                        "ts": _us(s["start"]),
+                        "dur": max(_us(s["end"]) - _us(s["start"]), 1),
+                        "pid": 1, "lane": lane, "args": args})
+
+    open_spans: dict[int, dict] = {}
+    for ev in evs:
+        k = ev["kind"]
+        if k in _INSTANT_KINDS:
+            lane = _instant_lane(ev)
+            lanes.add(lane)
+            args = {kk: vv for kk, vv in ev.items()
+                    if kk not in ("t", "seq", "kind") and vv is not None}
+            out.append({"ph": "i", "name": _instant_name(ev), "cat": k,
+                        "ts": _us(ev["t"]), "s": "t",
+                        "pid": 1, "lane": lane, "args": args})
+        elif k == "span_begin":
+            open_spans[ev["span"]] = ev
+        elif k == "span_end":
+            begin = open_spans.pop(ev.get("span"), None)
+            if begin is None:
+                continue
+            lanes.add(_SPAN_LANE)
+            args = {"span": begin["span"]}
+            if begin.get("parent") is not None:
+                args["parent"] = begin["parent"]
+            for kk, vv in ev.items():
+                if kk not in ("t", "seq", "kind", "span") and vv is not None:
+                    args[kk] = vv
+            out.append({"ph": "X", "name": begin.get("name", "span"),
+                        "cat": "span", "ts": _us(begin["t"]),
+                        "dur": max(_us(ev["t"]) - _us(begin["t"]), 1),
+                        "pid": 1, "lane": _SPAN_LANE, "args": args})
+
+    tid = {lane: i + 1 for i, lane in enumerate(sorted(lanes))}
+    for e in out:
+        e["tid"] = tid[e.pop("lane")]
+    out.sort(key=lambda e: (e["ts"], e["tid"], e["name"]))
+    meta = [{"ph": "M", "name": "thread_name", "pid": 1, "tid": n,
+             "args": {"name": lane}}
+            for lane, n in sorted(tid.items(), key=lambda kv: kv[1])]
+    return meta + out
+
+
+def export_json(events) -> str:
+    """Byte-stable ``trace_event`` JSON document for an event stream."""
+    doc = {"displayTimeUnit": "ms", "traceEvents": to_trace_events(events)}
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+def export_file(jsonl_path: str, out_path: str) -> int:
+    """Export a saved JSONL trace to a Perfetto JSON file; returns the
+    number of ``traceEvents`` written."""
+    from ..runtime.trace import load_trace
+    evs = load_trace(jsonl_path)
+    text = export_json(evs)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(json.loads(text)["traceEvents"])
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print("usage: python -m repro.obs.perfetto TRACE.jsonl OUT.json",
+              file=sys.stderr)
+        return 2
+    n = export_file(argv[0], argv[1])
+    print(f"wrote {n} trace events to {argv[1]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

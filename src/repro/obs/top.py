@@ -1,0 +1,199 @@
+"""``python -m repro.obs.top`` — a top(1)-style view of a running Fix.
+
+Renders the unified ``stats()`` snapshot shape (``backend`` /
+``metrics`` / ``codelets`` plus backend-specific sections) that every
+backend and the serving engine produce.  Three modes:
+
+* ``--stats PATH`` — render a JSON stats snapshot from a file (the
+  shape ``json.dump(backend.stats())`` writes), repeatedly unless
+  ``--once``;
+* default (no ``--stats``) — run a small self-contained demo workload
+  on a ``VirtualClock`` cluster and render its stats, so
+  ``python -m repro.obs.top --once`` works anywhere the package
+  imports (the CI smoke);
+* ``--interval S`` — refresh cadence for live mode.
+
+:func:`render_snapshot` is pure (dict in, string out) and is what the
+tests pin.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def _fmt_bytes(n) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return (f"{int(n)}{unit}" if unit == "B"
+                    else f"{n:.1f}{unit}")
+        n /= 1024
+    return f"{n:.1f}GiB"  # pragma: no cover - unreachable
+
+
+def _counter_total(metrics: dict, name: str) -> int:
+    """Sum a counter across label sets (``name`` and ``name{...}``)."""
+    total = 0
+    for key, val in metrics.get("counters", {}).items():
+        if key == name or key.startswith(name + "{"):
+            total += val
+    return total
+
+
+def _hist_quantile(hist: dict, q: float) -> float:
+    """Upper-edge quantile estimate from fixed-bucket counts."""
+    count = hist.get("count", 0)
+    if count <= 0:
+        return 0.0
+    target = q * count
+    seen = 0
+    edges, counts = hist["edges"], hist["counts"]
+    for i, c in enumerate(counts):
+        seen += c
+        if seen >= target:
+            return edges[i] if i < len(edges) else float("inf")
+    return edges[-1] if edges else 0.0
+
+
+def _job_hist(metrics: dict) -> dict:
+    """Merge ``job_latency_s`` histograms across tenant labels."""
+    merged = None
+    for key, h in metrics.get("histograms", {}).items():
+        if key != "job_latency_s" and not key.startswith("job_latency_s{"):
+            continue
+        if merged is None:
+            merged = {"edges": list(h["edges"]),
+                      "counts": list(h["counts"]),
+                      "sum": h["sum"], "count": h["count"]}
+        else:
+            merged["counts"] = [a + b for a, b in
+                                zip(merged["counts"], h["counts"])]
+            merged["sum"] += h["sum"]
+            merged["count"] += h["count"]
+    return merged or {"edges": [], "counts": [], "sum": 0.0, "count": 0}
+
+
+def render_snapshot(stats: dict) -> str:
+    """Render one unified stats snapshot as fixed-width text."""
+    lines = []
+    be = stats.get("backend", "?")
+    if isinstance(be, dict):  # FixServeEngine.stats() nests the backend
+        serving = stats.get("serving", {})
+        tenants = stats.get("tenants", {})
+        body = render_snapshot(be)
+        lines.append("== serving ==")
+        lines.append(
+            "  steps={steps} decode={decode_steps} "
+            "pending={pending} active={active} finished={finished}".format(
+                **{k: serving.get(k, 0) for k in
+                   ("steps", "decode_steps", "pending", "active",
+                    "finished")}))
+        bt, bh = serving.get("blocks_total", 0), serving.get("blocks_hit", 0)
+        lines.append(f"  prefix blocks: {bh}/{bt} hit "
+                     f"({(bh / bt if bt else 0.0):.0%})")
+        if tenants:
+            lines.append("  tenant      queued  inflight  admitted")
+            for t, d in sorted(tenants.items()):
+                lines.append(f"  {t:<10}  {d['queued']:>6}  "
+                             f"{d['inflight']:>8}  {d['admitted']:>8}")
+        return body + "\n" + "\n".join(lines) + "\n"
+
+    metrics = stats.get("metrics", {}) or {}
+    lines.append(f"fix obs  backend={be}")
+    jobs = {o: _counter_total(metrics, "jobs_" + o)
+            for o in ("submitted", "finished", "failed", "cancelled",
+                      "memo_hit")}
+    lines.append("jobs: " + " ".join(f"{k}={v}" for k, v in jobs.items()))
+    xfers = _counter_total(metrics, "transfers_total")
+    moved = _counter_total(metrics, "bytes_moved_total")
+    if not xfers:  # metrics off: fall back to the legacy counters
+        xfers = stats.get("transfers", 0)
+        moved = stats.get("bytes_moved", 0)
+    lines.append(f"transfers: total={xfers} bytes={_fmt_bytes(moved)}")
+    hist = _job_hist(metrics)
+    if hist["count"]:
+        lines.append(
+            f"job latency: n={hist['count']} "
+            f"mean={hist['sum'] / hist['count']:.4f}s "
+            f"p50<={_hist_quantile(hist, 0.50):g}s "
+            f"p99<={_hist_quantile(hist, 0.99):g}s")
+    codelets = stats.get("codelets", {}) or {}
+    if codelets:
+        lines.append("codelet            count   mean_ms")
+        for name, ent in sorted(codelets.items()):
+            cnt = ent["count"]
+            mean_ms = (ent["total_ns"] / cnt / 1e6) if cnt else 0.0
+            lines.append(f"{name:<18} {cnt:>6}  {mean_ms:>8.3f}")
+    nodes = stats.get("nodes")
+    if nodes:
+        lines.append("node   busy_s    jobs")
+        for name, acct in sorted(nodes.items()):
+            busy = acct.get("busy_s", 0.0)
+            njobs = acct.get("jobs", acct.get("items", 0))
+            lines.append(f"{name:<5} {busy:>8.4f} {njobs:>6}")
+    workers = stats.get("workers")
+    if workers:
+        lines.append("worker  alive  gen  jobs")
+        for wid, w in sorted(workers.items()):
+            lines.append(f"{wid:<6}  {str(w.get('alive', '?')):<5}  "
+                         f"{w.get('gen', 0):>3}  {w.get('jobs', 0):>4}")
+    rec = stats.get("recovery")
+    if rec:
+        lines.append("recovery: " + " ".join(
+            f"{k}={v}" for k, v in sorted(rec.items())))
+    return "\n".join(lines) + "\n"
+
+
+def _demo_stats() -> dict:
+    """A tiny deterministic VirtualClock workload; returns its stats."""
+    from .. import fix
+    from ..core.stdlib import add, fib, inc_chain
+    from ..runtime import Cluster, VirtualClock
+
+    clk = VirtualClock()
+    cluster = Cluster(n_nodes=2, workers_per_node=1, clock=clk)
+    try:
+        be = fix.on(cluster)
+        futs = [be.submit(fib(6)), be.submit(inc_chain(0, 4)),
+                be.submit(add(20, 22))]
+        for f in futs:
+            f.result(timeout=60)
+        return cluster.stats()
+    finally:
+        cluster.shutdown()
+        clk.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.obs.top",
+        description="top-style view over a Fix stats snapshot")
+    ap.add_argument("--stats", metavar="PATH",
+                    help="JSON stats snapshot to render (default: run a "
+                         "small demo workload)")
+    ap.add_argument("--once", action="store_true",
+                    help="render a single frame and exit")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="refresh interval in seconds (live mode)")
+    args = ap.parse_args(argv)
+
+    while True:
+        if args.stats:
+            with open(args.stats) as f:
+                stats = json.load(f)
+        else:
+            stats = _demo_stats()
+        frame = render_snapshot(stats)
+        if args.once:
+            sys.stdout.write(frame)
+            return 0
+        sys.stdout.write("\x1b[2J\x1b[H" + frame)
+        sys.stdout.flush()
+        time.sleep(args.interval)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -86,6 +86,7 @@ from ..core.repository import (
 from ..fix.backend import Backend
 from ..fix.future import CancelledError, DeadlineExceeded, Future
 from ..runtime.faults import TransferFailed
+from ..runtime.telemetry import CodeletProfile, MetricsRegistry, SpanEmitter
 from ..runtime.transfers import LocationIndex
 from .protocol import ProtocolError, recv_msg, retriable, send_msg
 from .storage import (
@@ -148,12 +149,14 @@ class _RJob:
     result: Optional[Handle] = None
     strict_children: list = field(default_factory=list)
     strict_stage: list = field(default_factory=list)
+    span: Optional[int] = None     # causal span id (spans=True only)
+    _metric_t0: float = 0.0        # monotonic submit instant
 
 
 class _Worker:
     __slots__ = ("wid", "proc", "ctl", "hb", "send_lock", "hb_lock", "reader",
                  "alive", "outstanding", "log_path", "gen", "hb_misses",
-                 "hb_lost")
+                 "hb_lost", "jobs_reported")
 
     def __init__(self, wid: str, proc, ctl, hb, log_path: str, gen: int):
         self.wid = wid
@@ -169,6 +172,7 @@ class _Worker:
         self.gen = gen            # respawn generation under this wid
         self.hb_misses = 0        # consecutive missed heartbeats
         self.hb_lost = False      # fenced by the monitor (budget exhausted)
+        self.jobs_reported = 0    # steps-completed count from the last pong
 
 
 class RemoteBackend(Backend):
@@ -213,13 +217,18 @@ class RemoteBackend(Backend):
                  retry_backoff_cap_s: float = 2.0, store_retry_limit: int = 3,
                  dispatch_timeout_s: Optional[float] = None,
                  drain_timeout_s: float = 10.0,
-                 recover_wait_s: float = 5.0):
+                 recover_wait_s: float = 5.0,
+                 metrics: bool = True, spans: bool = False):
         if n_workers < 1:
             raise ValueError("need at least one worker process")
         self._repo = Repository("client")
         self.trace = trace
         if trace is not None:
             trace.bind(_MonotonicClock())
+        self.metrics = MetricsRegistry() if metrics else None
+        self.spans = (SpanEmitter(trace)
+                      if spans and trace is not None else None)
+        self.profile = CodeletProfile()  # folded from worker ran replies
         self._locs = LocationIndex()
         self._store_mutex = threading.Lock()
         self.store = self._resolve_store(store, store_dir)
@@ -491,15 +500,30 @@ class RemoteBackend(Backend):
                     if (self._chaos is not None
                             and not self._chaos.take_pong(w.wid)):
                         return False  # injected heartbeat stall
+                    w.jobs_reported = msg.get("jobs", w.jobs_reported)
                     return True
         except (OSError, ProtocolError):
             return False
 
+    def _count_job(self, job: _RJob, outcome: str) -> None:
+        m = self.metrics
+        if m is not None:
+            tl = {} if job.tenant is None else {"tenant": job.tenant}
+            m.counter("jobs_" + outcome, **tl).inc()
+
+    def codelet_profile(self) -> CodeletProfile:
+        return self.profile
+
     def stats(self) -> dict:
         return {
+            "backend": "remote",
+            "metrics": (self.metrics.snapshot()
+                        if self.metrics is not None else {}),
+            "codelets": self.profile.to_dict(),
             "store": self.store.stats(),
             "workers": {wid: {"alive": w.alive, "pid": w.proc.pid,
-                              "gen": w.gen, "log": w.log_path}
+                              "gen": w.gen, "jobs": w.jobs_reported,
+                              "log": w.log_path}
                         for wid, w in self._workers.items()},
             "transfers": self.transfers,
             "bytes_moved": self.bytes_moved,
@@ -586,6 +610,9 @@ class RemoteBackend(Backend):
                 if tr is not None:
                     extra = {} if tenant is None else {"tenant": tenant}
                     tr.emit("job_memo_hit", encode=encode.raw.hex(), **extra)
+                if self.metrics is not None:
+                    tl = {} if tenant is None else {"tenant": tenant}
+                    self.metrics.counter("jobs_memo_hit", **tl).inc()
                 if fut is not None:
                     fut.set(memo)
                 if parent is not None:
@@ -624,6 +651,13 @@ class RemoteBackend(Backend):
             tr.emit("job_submit", job=jid, encode=encode.raw.hex(),
                     strict=job.strict, parent=parent, recompute=ignore_memo,
                     **extra)
+        job._metric_t0 = time.monotonic()
+        self._count_job(job, "submitted")
+        if self.spans is not None:
+            pj = self._jobs.get(parent) if parent is not None else None
+            job.span = self.spans.begin(
+                f"job:{jid}", parent=(pj.span if pj is not None else None),
+                job=jid)
         self._advance_guarded(job)
 
     def _advance_guarded(self, job: _RJob) -> None:
@@ -912,6 +946,9 @@ class RemoteBackend(Backend):
                     nbytes=nbytes, keys=[key_hex], ok=True, via="store")
         self.transfers += 1
         self.bytes_moved += nbytes
+        if self.metrics is not None:
+            self.metrics.counter("transfers_total").inc()
+            self.metrics.counter("bytes_moved_total").inc(nbytes)
 
     # ------------------------------------------------------------- replies
     def _on_msg(self, wid: str, msg: dict, gen: int) -> None:
@@ -921,8 +958,13 @@ class RemoteBackend(Backend):
         jid = msg.get("job")
         w.outstanding.discard(jid)
         # Residency/trace accounting first — the movement happened whether
-        # or not the job is still current.
+        # or not the job is still current; same for codelet wall time
+        # (the profile deltas are high-water-marked worker-side, so folding
+        # a stale reply cannot double-count).
         self._record_movement(wid, msg, jid)
+        prof = msg.get("profile")
+        if prof:
+            self.profile.update(prof)
         job = self._jobs.get(jid)
         if job is None or job.phase != RUNNING or msg.get("epoch") != job.epoch:
             return  # stale reply (job failed over or already finished)
@@ -976,6 +1018,9 @@ class RemoteBackend(Backend):
             resident.add(key, wid)
             self.transfers += 1
             self.bytes_moved += nbytes
+            if self.metrics is not None:
+                self.metrics.counter("transfers_total").inc()
+                self.metrics.counter("bytes_moved_total").inc(nbytes)
         for raw, nbytes in msg.get("created", ()):
             h = Handle(bytes(raw))
             key = h.content_key()
@@ -1188,6 +1233,14 @@ class RemoteBackend(Backend):
         if self.trace is not None:
             self.trace.emit("job_finish", job=job.id, node=job.node,
                             result=result.raw.hex())
+        self._count_job(job, "finished")
+        if self.metrics is not None:
+            tl = {} if job.tenant is None else {"tenant": job.tenant}
+            self.metrics.histogram("job_latency_s", **tl).observe(
+                time.monotonic() - job._metric_t0)
+        if self.spans is not None and job.span is not None:
+            self.spans.end(job.span, status="ok")
+            job.span = None
         self._memo.setdefault(job.encode.raw, result)
         for f in job.futures:
             f.set(result)
@@ -1200,6 +1253,10 @@ class RemoteBackend(Backend):
         job.phase = DONE
         if self.trace is not None:
             self.trace.emit("job_fail", job=job.id, error=type(exc).__name__)
+        self._count_job(job, "failed")
+        if self.spans is not None and job.span is not None:
+            self.spans.end(job.span, status="fail")
+            job.span = None
         for f in job.futures:
             f.set_exception(exc)
         self._notify_parents_exc(job, exc)
@@ -1233,6 +1290,10 @@ class RemoteBackend(Backend):
         job.phase = DONE
         if self.trace is not None:
             self.trace.emit("job_cancel", job=job.id, reason=reason)
+        self._count_job(job, "cancelled")
+        if self.spans is not None and job.span is not None:
+            self.spans.end(job.span, status="cancel")
+            job.span = None
         exc = self._cancel_exc(reason)
         for f in job.futures:
             f.set_exception(exc)
@@ -1314,6 +1375,9 @@ class RemoteBackend(Backend):
                         nbytes=nbytes, keys=[key_hex], ok=True, via="store")
         self.transfers += 1
         self.bytes_moved += nbytes
+        if self.metrics is not None:
+            self.metrics.counter("transfers_total").inc()
+            self.metrics.counter("bytes_moved_total").inc(nbytes)
 
     # ----------------------------------------------------------- listeners
     def _on_store_put(self, handle: Handle, nbytes: int, src: str) -> None:

@@ -125,17 +125,37 @@ def _handle_list(handles: list) -> list:
     return [[h.raw, payload_nbytes(h)] for h in handles]
 
 
-def _heartbeat_loop(hb_sock) -> None:
+def _profile_delta(evaluator: Evaluator, reported: dict) -> list:
+    """Per-codelet wall accounting accrued since the last reply, as
+    ``[name, count, total_ns]`` triples — integer nanoseconds because the
+    wire codec has no float tag.  ``reported`` is mutated to the new
+    high-water marks, so each triple is shipped exactly once and the
+    coordinator's fold cannot double-count a codelet across steps."""
+    out = []
+    for name, ent in evaluator.codelets.items():
+        seen = reported.get(name)
+        dc = ent[0] - (seen[0] if seen else 0)
+        dns = ent[1] - (seen[1] if seen else 0)
+        if dc > 0 or dns > 0:
+            out.append([name, dc, dns])
+        reported[name] = [ent[0], ent[1]]
+    return sorted(out)
+
+
+def _heartbeat_loop(hb_sock, jobs_box: list = None) -> None:
     """Sidecar liveness responder: answer every ping until the channel
     dies.  Runs on its own thread so a long codelet on the main thread
-    never makes the process look dead (the GIL still schedules us)."""
+    never makes the process look dead (the GIL still schedules us).
+    Pongs carry the steps-completed count (``jobs``) so the monitor gets
+    a cheap progress signal with every liveness probe."""
     try:
         while True:
             msg = recv_msg(hb_sock)
             if msg is None:
                 return
             if msg.get("op") == "heartbeat":
-                send_msg(hb_sock, {"op": "pong", "nonce": msg.get("nonce")})
+                send_msg(hb_sock, {"op": "pong", "nonce": msg.get("nonce"),
+                                   "jobs": jobs_box[0] if jobs_box else 0})
     except (OSError, ProtocolError):
         return
 
@@ -161,10 +181,12 @@ def worker_main(ctl_sock, store_sock, worker_id: str,
             sys.stderr = open(2, "w", buffering=1, closefd=False)
         sys.stdin = open(os.devnull)
         print(f"[{worker_id}] up, pid={os.getpid()}", flush=True)
+        jobs_box = [0]  # steps completed; shared with the hb responder
         if hb_sock is not None:
-            threading.Thread(target=_heartbeat_loop, args=(hb_sock,),
+            threading.Thread(target=_heartbeat_loop,
+                             args=(hb_sock, jobs_box),
                              daemon=True, name="fix-worker-hb").start()
-        _serve(ctl_sock, store_sock, worker_id)
+        _serve(ctl_sock, store_sock, worker_id, jobs_box)
         print(f"[{worker_id}] clean shutdown", flush=True)
     except BaseException:
         traceback.print_exc()
@@ -176,10 +198,13 @@ def worker_main(ctl_sock, store_sock, worker_id: str,
         os._exit(code)
 
 
-def _serve(ctl_sock, store_sock, worker_id: str) -> None:
+def _serve(ctl_sock, store_sock, worker_id: str,
+           jobs_box: list = None) -> None:
     repo = Repository(worker_id)
     evaluator = Evaluator(repo)
     state = _WorkerState(repo, StoreClient(store_sock))
+    reported: dict = {}  # per-codelet high-water marks already shipped
+    jobs_box = jobs_box if jobs_box is not None else [0]
     while True:
         msg = recv_msg(ctl_sock)
         if msg is None:
@@ -188,10 +213,14 @@ def _serve(ctl_sock, store_sock, worker_id: str) -> None:
         if op == "shutdown":
             return
         if op == "heartbeat":
-            send_msg(ctl_sock, {"op": "pong", "nonce": msg.get("nonce")})
+            send_msg(ctl_sock, {"op": "pong", "nonce": msg.get("nonce"),
+                                "jobs": jobs_box[0]})
             continue
         if op == "submit":
-            send_msg(ctl_sock, _run_submit(evaluator, state, msg, worker_id))
+            reply = _run_submit(evaluator, state, msg, worker_id)
+            reply["profile"] = _profile_delta(evaluator, reported)
+            jobs_box[0] += 1
+            send_msg(ctl_sock, reply)
             continue
         if op == "push":
             # quarantine recovery: re-publish content this worker holds

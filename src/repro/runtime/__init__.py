@@ -9,6 +9,12 @@ from .faults import (
     TransferFailed,
 )
 from .node import Node, WorkItem
+from .telemetry import (
+    CodeletProfile,
+    MetricsRegistry,
+    SpanEmitter,
+    job_wall_durations,
+)
 from .trace import (
     TraceDiff,
     TraceEvent,
@@ -28,6 +34,8 @@ __all__ = ["Clock", "Cluster", "Future", "Link", "Network", "Node",
            "LocationIndex", "TransferManager", "TransferPlan",
            "Fault", "FaultSchedule", "FaultError", "TransferFailed",
            "DataUnrecoverable",
+           "CodeletProfile", "MetricsRegistry", "SpanEmitter",
+           "job_wall_durations",
            "TraceDiff", "TraceEvent", "TraceRecorder", "diff_traces",
            "link_utilization", "load_trace", "replay_check",
            "starvation_intervals", "verify_invariants", "waterfall"]

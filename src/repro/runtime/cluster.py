@@ -64,6 +64,7 @@ from ..fix.future import CancelledError, DeadlineExceeded, Future
 from .clock import Clock, WallClock
 from .faults import DataUnrecoverable, FaultState, TransferFailed
 from .node import Node, WorkItem
+from .telemetry import CodeletProfile, MetricsRegistry, SpanEmitter
 from .trace import TraceRecorder
 from .transfers import LocationIndex, TransferManager, single_transfer
 
@@ -115,6 +116,10 @@ class Job:
     spec_timer: Optional[object] = None                  # pending speculation wakeup
     on_complete: list = field(default_factory=list)      # callbacks (scheduler thread)
     on_fail: list = field(default_factory=list)          # cb(job, exc) on failure
+    span: Optional[int] = None        # causal span ids (spans=True only)
+    stage_span: Optional[int] = None
+    run_span: Optional[int] = None
+    _metric_t0: float = 0.0           # submit instant on the cluster clock
 
 
 class Cluster:
@@ -142,6 +147,10 @@ class Cluster:
         transfer_retries: int = 4,         # per-(node, key) staging attempts
         retry_backoff_s: float = 0.05,     # first retry delay (doubles)
         retry_backoff_max_s: float = 1.0,  # backoff cap
+        metrics: bool = True,              # always-on MetricsRegistry
+        spans: bool = False,               # causal span events (needs trace)
+        compute_model=None,                # codelet -> modeled seconds, or
+        #                                    a CodeletProfile (calibrate()d)
     ):
         if placement not in ("locality", "bytes", "random"):
             raise ValueError(f"unknown placement {placement!r}")
@@ -161,6 +170,23 @@ class Cluster:
         self.trace = trace
         if trace is not None:
             trace.bind(self.clock)
+        # Live telemetry: metrics are pure in-memory arithmetic — no clock
+        # reads, no trace events — so the default-on registry leaves
+        # VirtualClock schedules (and the golden trace) byte-identical.
+        self.metrics = MetricsRegistry() if metrics else None
+        # instrument-handle cache: label-key rendering off the hot path
+        # (one dict hit per counter bump instead of kwargs + formatting)
+        self._instruments: dict = {}
+        if self.metrics is not None:
+            self._m_transfers = self.metrics.counter("transfers_total")
+            self._m_bytes = self.metrics.counter("bytes_moved_total")
+        # Spans ride the trace stream and are opt-in: the default event
+        # vocabulary, and the committed golden fixture, stay untouched.
+        self.spans = (SpanEmitter(trace)
+                      if spans and trace is not None else None)
+        if compute_model is not None and hasattr(compute_model, "calibrate"):
+            compute_model = compute_model.calibrate()
+        self.compute_model = compute_model
         # Under a virtual clock the creating thread becomes the registered
         # driver: its blocking waits (Future deadlines, fetches) participate
         # in the deterministic token handoff.  No-op for WallClock.
@@ -180,7 +206,8 @@ class Cluster:
         self.nodes: dict[str, Node] = {}
         for i in range(n_nodes):
             self.nodes[f"n{i}"] = Node(f"n{i}", workers, node_ram,
-                                       clock=self.clock, trace=trace)
+                                       clock=self.clock, trace=trace,
+                                       compute_model=self.compute_model)
         for sid in storage_nodes:
             self.nodes[sid] = Node(sid, 0, node_ram,
                                    clock=self.clock, trace=trace)
@@ -211,7 +238,8 @@ class Cluster:
         self._xfer = TransferManager(
             self.network, self.nodes, self._events.put,
             account=self._account_transfer, mode=transfer_mode,
-            clock=self.clock, trace=trace, faults=self._fstate)
+            clock=self.clock, trace=trace, faults=self._fstate,
+            metrics=self.metrics, spans=self.spans)
 
         # The user-facing surface: Cluster.submit/evaluate/fetch_result are
         # thin delegates to this Backend (repro.fix), which owns program
@@ -336,6 +364,37 @@ class Cluster:
             "idle_iowait_frac": max(0.0, 1.0 - busy_frac - starved_frac),
             "transfers": self.transfers,
             "bytes_moved": self.bytes_moved,
+        }
+
+    def codelet_profile(self) -> CodeletProfile:
+        """Aggregate per-codelet wall timings across every node's
+        evaluator — the local/simulated half of the record → model →
+        replay seam (``fix.remote()`` workers ship theirs in ``ran``
+        replies)."""
+        prof = CodeletProfile()
+        for n in self.nodes.values():
+            prof.update((name, ent[0], ent[1])
+                        for name, ent in n.evaluator.codelets.items())
+        return prof
+
+    def stats(self) -> dict:
+        """One live snapshot, same top-level shape as
+        ``RemoteBackend.stats()`` / ``FixServeEngine.stats()``:
+        ``backend`` / ``metrics`` / ``codelets`` plus backend-specific
+        sections (node accounting, link backlog)."""
+        src_backlog, link_depth = self._xfer.backlog_snapshot()
+        return {
+            "backend": "cluster",
+            "metrics": (self.metrics.snapshot()
+                        if self.metrics is not None else {}),
+            "codelets": self.codelet_profile().to_dict(),
+            "nodes": {name: n.accounting()
+                      for name, n in sorted(self.nodes.items())},
+            "transfers": self.transfers,
+            "bytes_moved": self.bytes_moved,
+            "links": {f"{s}->{d}": depth
+                      for (s, d), depth in sorted(link_depth.items())},
+            "src_backlog_bytes": dict(sorted(src_backlog.items())),
         }
 
     def shutdown(self) -> None:
@@ -465,6 +524,8 @@ class Cluster:
         if self.trace is not None:
             self.trace.emit("job_fail", job=job.id,
                             error=type(exc).__name__)
+        self._count_job(job, "failed")
+        self._end_job_spans(job, "fail")
         self._cancel_speculation(job)
         for f in job.futures:
             f.set_exception(exc)
@@ -480,6 +541,8 @@ class Cluster:
                 if self.trace is not None:
                     self.trace.emit("job_fail", job=job.id,
                                     error=type(exc).__name__)
+                self._count_job(job, "failed")
+                self._end_job_spans(job, "fail")
                 self._cancel_speculation(job)
                 self._run_on_fail(job, exc)
 
@@ -492,6 +555,35 @@ class Cluster:
                 cb(job, exc)
             except Exception:  # noqa: BLE001 — a callback must not cascade
                 pass
+
+    # ----------------------------------------------------------- telemetry
+    def _count_job(self, job: Job, outcome: str) -> None:
+        """``jobs_<outcome>`` counter, tenant-labelled when the job is
+        tagged — incremented exactly where the matching trace event is
+        emitted, so metrics and trace-derived counts always agree."""
+        m = self.metrics
+        if m is None:
+            return
+        key = (outcome, job.tenant)
+        c = self._instruments.get(key)
+        if c is None:
+            tl = {} if job.tenant is None else {"tenant": job.tenant}
+            c = self._instruments[key] = m.counter("jobs_" + outcome, **tl)
+        c.inc()
+
+    def _end_job_spans(self, job: Job, status: str) -> None:
+        """Close any open stage/run span and the job span itself (failure
+        and cancellation paths can leave inner spans dangling)."""
+        sp = self.spans
+        if sp is None:
+            return
+        sp.end(job.run_span)
+        job.run_span = None
+        sp.end(job.stage_span)
+        job.stage_span = None
+        if job.span is not None:
+            sp.end(job.span, status=status)
+            job.span = None
 
     # ------------------------------------------------------------- events
     def _on_submit(self, encode: Handle, fut: Optional[Future],
@@ -514,6 +606,9 @@ class Cluster:
         if not ignore_memo:
             memo = self._memo.get(encode.raw)
             if memo is not None and self._find_source_name(memo) is not None:
+                if self.metrics is not None:
+                    tl = {} if tenant is None else {"tenant": tenant}
+                    self.metrics.counter("jobs_memo_hit", **tl).inc()
                 if tr is not None:
                     extra = {} if tenant is None else {"tenant": tenant}
                     tr.emit("job_memo_hit", encode=encode.raw.hex(), **extra)
@@ -542,6 +637,15 @@ class Cluster:
         self._jobs[jid] = job
         if not ignore_memo:
             self._by_encode[encode.raw] = jid
+        job._metric_t0 = self.clock.now()
+        self._count_job(job, "submitted")
+        if self.spans is not None:
+            pspan = None
+            if parent is not None:
+                pj = self._jobs.get(parent)
+                if pj is not None:
+                    pspan = pj.span
+            job.span = self.spans.begin("job", parent=pspan, job=jid)
         if tr is not None:
             # tenant only when tagged: untagged runs keep byte-identical
             # traces (the golden-fixture replay diff)
@@ -741,6 +845,9 @@ class Cluster:
         job = self._jobs.get(item.job_id)
         if job is None or job.phase == DONE or item.epoch != job.epoch:
             return  # stale (straggler duplicate / failed-over epoch)
+        if self.spans is not None and job.run_span is not None:
+            self.spans.end(job.run_span)
+            job.run_span = None
         if isinstance(result, CorruptData):
             self._recover_corrupt_read(job, result)
             return
@@ -851,6 +958,9 @@ class Cluster:
             return
         if missing:
             job.phase = STAGING
+            if self.spans is not None:
+                job.stage_span = self.spans.begin(
+                    "stage", parent=job.span, job=job.id, n=len(missing))
             job.staging = self._stage_missing(node, missing, job.id)
             if not job.staging:
                 self._enqueue_run(job)
@@ -863,6 +973,11 @@ class Cluster:
         item = WorkItem(job.id, job.epoch, job.thunk, internal_fetches=fetches)
         job.phase = RUNNING
         job.started_at = self.clock.now()
+        if self.spans is not None:
+            self.spans.end(job.stage_span)
+            job.stage_span = None
+            job.run_span = self.spans.begin(
+                "run", parent=job.span, job=job.id, node=job.node, op="run")
         if self.trace is not None:
             self.trace.emit("job_start", job=job.id, node=job.node,
                             epoch=job.epoch, op="run", internal=len(fetches))
@@ -945,6 +1060,9 @@ class Cluster:
             self._scrub_resident(node, needs)
         missing = [h for h in needs if not node.repo.contains(h)]
         if missing:
+            if self.spans is not None and job.stage_span is None:
+                job.stage_span = self.spans.begin(
+                    "stage", parent=job.span, job=job.id, n=len(missing))
             job.staging = self._stage_missing(node, missing, job.id)
             if not job.staging:
                 self._enqueue_strictify(job)
@@ -959,6 +1077,12 @@ class Cluster:
         item = WorkItem(job.id, job.epoch, None, strict_target=job.whnf)
         job.phase = RUNNING
         job.started_at = self.clock.now()
+        if self.spans is not None:
+            self.spans.end(job.stage_span)
+            job.stage_span = None
+            job.run_span = self.spans.begin(
+                "run", parent=job.span, job=job.id, node=job.node,
+                op="strictify")
         if self.trace is not None:
             self.trace.emit("job_start", job=job.id, node=job.node,
                             epoch=job.epoch, op="strictify", internal=0)
@@ -972,6 +1096,17 @@ class Cluster:
         if self.trace is not None:
             self.trace.emit("job_finish", job=job.id, node=job.node,
                             result=result.raw.hex())
+        m = self.metrics
+        if m is not None:
+            key = ("latency", job.tenant)
+            h = self._instruments.get(key)
+            if h is None:
+                tl = {} if job.tenant is None else {"tenant": job.tenant}
+                h = self._instruments[key] = m.histogram(
+                    "job_latency_s", **tl)
+            h.observe(self.clock.now() - job._metric_t0)
+            self._count_job(job, "finished")
+        self._end_job_spans(job, "ok")
         self._cancel_speculation(job)
         self._memo.setdefault(job.encode.raw, result)
         if job.node:
@@ -997,6 +1132,8 @@ class Cluster:
                 if self.trace is not None:
                     self.trace.emit("job_fail", job=parent.id,
                                     error=type(exc).__name__)
+                self._count_job(parent, "failed")
+                self._end_job_spans(parent, "fail")
                 self._cancel_speculation(parent)
                 self._run_on_fail(parent, exc)
                 self._notify_parents_exc(parent, exc)
@@ -1219,8 +1356,13 @@ class Cluster:
                         key=h.content_key().hex(), nbytes=size,
                         action="enqueue", src=src)
             batches.setdefault(src, []).append((h, payload, size))
+        sp = None
+        if self.spans is not None and job_id is not None:
+            j = self._jobs.get(job_id)
+            if j is not None:
+                sp = j.stage_span if j.stage_span is not None else j.span
         for src, items in batches.items():
-            self._xfer.submit(src, node.id, items)
+            self._xfer.submit(src, node.id, items, span_parent=sp)
         return pending
 
     def _maybe_prefetch(self, needs: list[Handle],
@@ -1322,6 +1464,13 @@ class Cluster:
             return
         jid = next(self._ids)
         rejob = Job(jid, enc, enc.unwrap_encode(), enc.interp == STRICT, ignore_memo=True)
+        rejob._metric_t0 = self.clock.now()
+        self._count_job(rejob, "submitted")
+        if self.spans is not None:
+            pj = self._jobs.get(parent) if parent is not None else None
+            rejob.span = self.spans.begin(
+                "job", parent=pj.span if pj is not None else None,
+                job=jid, recompute=True)
         if self.trace is not None:
             self.trace.emit("job_submit", job=jid, encode=enc.raw.hex(),
                             strict=rejob.strict, parent=parent,
@@ -1426,6 +1575,11 @@ class Cluster:
     def _account_transfer(self, n_transfers: int, n_bytes: int) -> None:
         self.transfers += n_transfers
         self.bytes_moved += n_bytes
+        if self.metrics is not None:
+            # incremented in lockstep with the legacy counters, so the
+            # metric can never double-count what the trace/accounting saw
+            self._m_transfers.inc(n_transfers)
+            self._m_bytes.inc(n_bytes)
 
     # -------------------------------------------------------- node failure
     def _on_node_failed(self, node_id: str) -> None:
@@ -1508,7 +1662,8 @@ class Cluster:
                 self.trace.emit("node_join", node=node_id, fresh=False)
             return
         node = Node(node_id, workers or self._workers_per_node,
-                    self._node_ram, clock=self.clock, trace=self.trace)
+                    self._node_ram, clock=self.clock, trace=self.trace,
+                    compute_model=self.compute_model)
         self.nodes[node_id] = node
         self._wire_node(node_id, node)
         node.start(self._on_worker_done, fetcher=self._blocking_fetch)
@@ -1548,6 +1703,8 @@ class Cluster:
         job.phase = DONE
         if self.trace is not None:
             self.trace.emit("job_cancel", job=job.id, reason=reason)
+        self._count_job(job, "cancelled")
+        self._end_job_spans(job, "cancel")
         self._cancel_speculation(job)
         for f in job.futures:
             f.set_exception(exc)

@@ -36,10 +36,16 @@ class WorkItem:
 
 class Node:
     def __init__(self, node_id: str, n_workers: int, ram_bytes: int = 64 << 30,
-                 clock: Optional[Clock] = None, trace=None):
+                 clock: Optional[Clock] = None, trace=None,
+                 compute_model: Optional[dict] = None):
         self.id = node_id
         self.clock = clock if clock is not None else WallClock()
         self.trace = trace  # cluster's TraceRecorder (None = tracing off)
+        # codelet name -> modeled seconds, charged as clock.sleep after an
+        # APPLICATION step (CodeletProfile.calibrate() output).  None (the
+        # default) keeps codelet compute free — schedules byte-identical
+        # to every pre-model trace.
+        self.compute_model = compute_model
         self.repo = Repository(node_id)
         self.evaluator = Evaluator(self.repo)
         self.n_workers = n_workers
@@ -121,6 +127,7 @@ class Node:
                     on_done(self, item, fetch_exc)
                     continue
             t0 = self.clock.ns()
+            apps0 = self.evaluator.applications
             try:
                 if item.thunk is None:
                     result = self.evaluator.strictify(item.strict_target)
@@ -128,6 +135,16 @@ class Node:
                     result = self.evaluator.think(item.thunk)
             except Exception as e:  # noqa: BLE001 — reported to scheduler
                 result = e
+            if (self.compute_model is not None
+                    and self.evaluator.applications > apps0
+                    and not isinstance(result, Exception)):
+                # Charge the calibrated constant for the codelet that just
+                # ran; under a VirtualClock the sleep rides the event heap,
+                # so modeled compute is deterministic and shows up in the
+                # makespan / busy accounting like real work would.
+                cost = self.compute_model.get(self.evaluator.last_codelet, 0.0)
+                if cost > 0.0:
+                    self.clock.sleep(cost)
             dt = self.clock.ns() - t0
             with self._acct_lock:
                 self.busy_ns += dt

@@ -43,6 +43,14 @@ counts blob bytes / 32 bytes per tree child, like the rest of the runtime):
 ``starve_begin``     internal-I/O worker slot blocks on fetches: ``node``,
                      ``job``, ``declared`` (keys the job needs)
 ``starve_end``       the slot's fetches completed: ``node``, ``job``
+``span_begin``       causal span opened (opt-in: ``Cluster(spans=True)``):
+                     ``span`` (id), ``parent`` (enclosing span id or
+                     null), ``name`` ("job" | "stage" | "run" |
+                     "transfer"), ``wall_ns`` (monotonic wall clock) plus
+                     span-specific fields.  Not a fault kind — spans are
+                     annotations, like ``job_resubmit``
+``span_end``         the matching close: ``span``, ``wall_ns``, and an
+                     optional ``status``
 ===================  ======================================================
 
 Fault injection (``Cluster(faults=FaultSchedule()...)``) adds a second
@@ -320,12 +328,23 @@ def starvation_intervals(events: Iterable) -> list[dict]:
 
 
 def percentile(values: list, p: float) -> float:
-    """Nearest-rank percentile of ``values`` (0.0 on empty input)."""
+    """Nearest-rank percentile of ``values``.
+
+    Well-defined on every input: 0.0 on an empty population, the single
+    sample on a singleton, the minimum for ``p <= 0`` and the maximum for
+    ``p >= 100``.  The rank is computed with a small epsilon so float
+    round-up (e.g. ``0.55 * 20 == 11.000000000000002``) cannot bump a
+    percentile one rank too high."""
     if not values:
         return 0.0
     vals = sorted(values)
-    rank = max(1, math.ceil(p / 100.0 * len(vals)))
-    return float(vals[min(rank, len(vals)) - 1])
+    n = len(vals)
+    if p <= 0:
+        return float(vals[0])
+    if p >= 100:
+        return float(vals[-1])
+    rank = max(1, min(n, math.ceil(p * n / 100.0 - 1e-9)))
+    return float(vals[rank - 1])
 
 
 def tenant_report(events: Iterable) -> dict[str, dict]:
@@ -368,6 +387,8 @@ def tenant_report(events: Iterable) -> dict[str, dict]:
     starved: dict[str, float] = defaultdict(float)
     for iv in starvation_intervals(evs):
         starved[owner.get(iv["job"], "-")] += iv["end"] - iv["start"]
+    for ten in starved:
+        stats[ten]  # materialize starved-only tenants (partial traces)
     report: dict[str, dict] = {}
     for ten in sorted(stats):
         s = stats[ten]

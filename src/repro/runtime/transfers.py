@@ -113,6 +113,7 @@ class TransferPlan:
     src: str
     dst: str
     items: list = field(default_factory=list)  # (Handle, payload, size)
+    span: Optional[int] = None  # open telemetry span id (spans on only)
 
     @property
     def total_bytes(self) -> int:
@@ -248,7 +249,8 @@ class TransferManager:
 
     def __init__(self, network, nodes: dict, post_event: Callable,
                  account: Optional[Callable] = None, mode: str = "batched",
-                 clock: Optional[Clock] = None, trace=None, faults=None):
+                 clock: Optional[Clock] = None, trace=None, faults=None,
+                 metrics=None, spans=None):
         if mode not in ("batched", "per_handle"):
             raise ValueError(f"unknown transfer mode {mode!r}")
         self.network = network
@@ -257,6 +259,14 @@ class TransferManager:
         self.clock = clock if clock is not None else WallClock()
         self.trace = trace
         self.faults = faults  # FaultState shared with the scheduler, or None
+        self.metrics = metrics  # MetricsRegistry (None = metrics off)
+        self.spans = spans      # SpanEmitter (None = spans off)
+        # instrument-handle caches (label rendering off the hot path)
+        self._g_src: dict = {}
+        self._g_link: dict = {}
+        self._c_deliver: dict = {}
+        self._m_plans = (metrics.counter("transfer_plans_total", mode=mode)
+                         if metrics is not None else None)
         self._post = post_event
         self._account = account or (lambda n, b: None)
         self._workers: dict[tuple[str, str], _LinkWorker] = {}
@@ -288,10 +298,27 @@ class TransferManager:
         with self._backlog_lock:
             return dict(self._src_pending), dict(self._link_pending)
 
+    def _src_gauge(self, src_id: str):
+        g = self._g_src.get(src_id)
+        if g is None:
+            g = self._g_src[src_id] = self.metrics.gauge(
+                "src_backlog_bytes", src=src_id)
+        return g
+
+    def _link_gauge(self, src_id: str, dst_id: str):
+        key = (src_id, dst_id)
+        g = self._g_link.get(key)
+        if g is None:
+            g = self._g_link[key] = self.metrics.gauge(
+                "link_queue_depth", link=f"{src_id}->{dst_id}")
+        return g
+
     def _serialized(self, src_id: str, nbytes: int) -> None:
         with self._backlog_lock:
             left = self._src_pending.get(src_id, 0) - nbytes
             self._src_pending[src_id] = max(left, 0)
+        if self.metrics is not None:
+            self._src_gauge(src_id).set(max(left, 0))
 
     def pending(self) -> int:
         """Transfers submitted but not yet delivered (plans + per-handle
@@ -301,8 +328,11 @@ class TransferManager:
             return sum(self._link_pending.values()) + self._adhoc_pending
 
     # ---------------------------------------------------------------- submit
-    def submit(self, src_id: str, dst_id: str, items: list) -> None:
-        """Move ``items`` = [(handle, payload, size), ...] src → dst."""
+    def submit(self, src_id: str, dst_id: str, items: list,
+               span_parent: Optional[int] = None) -> None:
+        """Move ``items`` = [(handle, payload, size), ...] src → dst.
+        ``span_parent`` (spans on only) links the transfer span under the
+        requesting job's stage span."""
         if not items:
             return
         plan = TransferPlan(src_id, dst_id, list(items))
@@ -312,9 +342,14 @@ class TransferManager:
                 n=len(plan.items), nbytes=plan.total_bytes,
                 keys=[h.content_key().hex() for h, _, _ in plan.items],
                 mode=self.mode)
+        m = self.metrics
+        if m is not None:
+            self._m_plans.inc()
         if self.mode == "per_handle":
             # Seed behaviour: one thread, one latency charge, one NIC grab
             # and one scheduler event *per handle* — kept for A/B runs.
+            # (No transfer spans here: the ablation mode predates the plan
+            # object the span rides on.)
             self._account(len(plan.items), plan.total_bytes)
             with self._backlog_lock:
                 self._adhoc_pending += len(plan.items)
@@ -325,12 +360,20 @@ class TransferManager:
                         self._per_handle_xfer(s, d, hh, p, z),
                     name=f"fix-xfer1-{plan.src}-{plan.dst}"))
             return
+        if self.spans is not None:
+            plan.span = self.spans.begin(
+                "transfer", parent=span_parent, src=src_id, dst=dst_id,
+                n=len(plan.items), nbytes=plan.total_bytes)
         self._account(1, plan.total_bytes)
         key = (src_id, dst_id)
         with self._backlog_lock:
-            self._src_pending[src_id] = (
-                self._src_pending.get(src_id, 0) + plan.total_bytes)
-            self._link_pending[key] = self._link_pending.get(key, 0) + 1
+            pending = (self._src_pending.get(src_id, 0) + plan.total_bytes)
+            self._src_pending[src_id] = pending
+            depth = self._link_pending.get(key, 0) + 1
+            self._link_pending[key] = depth
+        if m is not None:
+            self._src_gauge(src_id).set(pending)
+            self._link_gauge(src_id, dst_id).set(depth)
         worker = self._workers.get(key)
         if worker is None:
             worker = self._workers[key] = _LinkWorker(self, src_id, dst_id)
@@ -344,9 +387,11 @@ class TransferManager:
         # scheduler's in-flight table must be reaped.  Fault paths replace
         # the blanket completion with typed transfer_failed posts.
         posts: list = [("transfer_done", plan.dst, plan.raws)]
+        status = "ok"
         try:
             dst = self.nodes.get(plan.dst)
             if dst is None or not dst.alive:
+                status = "dst_dead"
                 # Dead destination: the bytes were burned for nothing.  The
                 # unconditional transfer_done below reaps the scheduler's
                 # in-flight table; waiting jobs re-place via node failure.
@@ -370,6 +415,7 @@ class TransferManager:
                         reason=drop_reason, via="batched")
                 posts = [("transfer_failed", plan.dst, plan.raws,
                           drop_reason, plan.src)]
+                status = drop_reason
                 return
             corrupt_first = (self.faults is not None
                              and self.faults.take_corrupt(plan.src, plan.dst))
@@ -397,6 +443,7 @@ class TransferManager:
             if bad_raws:
                 posts = [("transfer_failed", plan.dst, tuple(bad_raws),
                           "corrupt", plan.src)]
+                status = "corrupt"
                 if ok_items:
                     posts.append(("transfer_done", plan.dst,
                                   tuple(h.raw for h, _ in ok_items)))
@@ -408,6 +455,16 @@ class TransferManager:
                     self._link_pending[key] = left
                 else:
                     self._link_pending.pop(key, None)
+            m = self.metrics
+            if m is not None:
+                self._link_gauge(plan.src, plan.dst).set(max(left, 0))
+                c = self._c_deliver.get(status)
+                if c is None:
+                    c = self._c_deliver[status] = m.counter(
+                        "transfer_delivers_total", status=status)
+                c.inc()
+            if self.spans is not None:
+                self.spans.end(plan.span, status=status)
             for p in posts:
                 self._post(p)
 

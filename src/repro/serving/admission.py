@@ -72,6 +72,11 @@ class TenantQueue:
     def __len__(self) -> int:
         return sum(len(t.queue) for t in self._tenants.values())
 
+    def tenants(self) -> list:
+        """Every tenant this queue has ever seen, sorted (stable for
+        metric labels and stats snapshots)."""
+        return sorted(self._tenants)
+
     def queued(self, tenant: str) -> int:
         t = self._tenants.get(tenant)
         return 0 if t is None else len(t.queue)

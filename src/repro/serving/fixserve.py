@@ -302,6 +302,32 @@ class FixServeEngine:
         return self.finished
 
     # ------------------------------------------------------------ report
+    def stats(self) -> dict:
+        """Live operational snapshot: the backend's unified stats plus
+        engine counters and per-tenant admission gauges.  Cheap enough to
+        poll (``repro.obs.top`` renders it); :meth:`report` is the
+        end-of-run SLO summary."""
+        adm = self.admission
+        return {
+            "backend": self.be.stats(),
+            "serving": {
+                "steps": self.steps,
+                "decode_steps": self.decode_steps,
+                "blocks_total": self.blocks_total,
+                "blocks_hit": self.blocks_hit,
+                "prefill_bytes_total": self.prefill_bytes_total,
+                "prefill_bytes_hit": self.prefill_bytes_hit,
+                "pending": self.pending(),
+                "active": sum(1 for r in self.active if r is not None),
+                "finished": len(self.finished),
+            },
+            "tenants": ({} if adm is None else {
+                t: {"queued": adm.queued(t),
+                    "inflight": adm.inflight(t),
+                    "admitted": adm.admitted(t)}
+                for t in adm.tenants()}),
+        }
+
     def report(self) -> dict:
         """Request-level SLOs + block-level memo accounting.  The
         trace-level per-tenant view comes from

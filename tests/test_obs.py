@@ -1,0 +1,180 @@
+"""Observability views: the Perfetto exporter round-trip and the
+``repro.obs.top`` renderer.
+
+The exporter contract pinned here: exporting the committed golden
+quickstart trace yields schema-valid Chrome ``trace_event`` JSON that is
+byte-stable across runs and covers every job and transfer event in the
+source trace (intervals for placed/run jobs and link serialization,
+instants for everything else)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from repro.obs import export_json, render_snapshot, to_trace_events  # noqa: E402
+from repro.obs.perfetto import export_file  # noqa: E402
+from repro.obs.top import main as top_main  # noqa: E402
+from repro.runtime import TraceRecorder, VirtualClock, Cluster  # noqa: E402
+from repro.runtime.trace import load_trace  # noqa: E402
+from workloads import FIXTURE  # noqa: E402
+
+import repro.fix as fix  # noqa: E402
+from repro.core.stdlib import add, fib  # noqa: E402
+
+pytestmark = pytest.mark.usefixtures("no_thread_leaks")
+
+
+class TestPerfettoExport:
+    def test_fixture_roundtrip_valid_and_stable(self, tmp_path):
+        events = load_trace(FIXTURE)
+        out1 = export_json(events)
+        out2 = export_json(load_trace(FIXTURE))
+        assert out1 == out2  # byte-stable across runs
+        doc = json.loads(out1)
+        assert set(doc) == {"displayTimeUnit", "traceEvents"}
+        for ev in doc["traceEvents"]:
+            assert ev["ph"] in ("X", "M", "i")
+            assert ev["pid"] == 1
+            assert isinstance(ev["tid"], int)
+            if ev["ph"] == "X":
+                assert ev["dur"] >= 1
+                assert isinstance(ev["ts"], int)
+
+    def test_fixture_covers_every_job_and_transfer(self):
+        events = load_trace(FIXTURE)
+        doc = json.loads(export_json(events))
+        tevs = doc["traceEvents"]
+        # every submitted job appears (as an instant or an interval slice)
+        jobs_out = {e["args"]["job"] for e in tevs
+                    if e["ph"] != "M" and "job" in e.get("args", {})}
+        jobs_in = {e["job"] for e in events if e["kind"] == "job_submit"}
+        assert jobs_in <= jobs_out
+        # every link serialization window becomes an xfer slice
+        n_links = sum(1 for e in events if e["kind"] == "link_acquire")
+        n_xfer = sum(1 for e in tevs if e.get("cat") == "xfer")
+        assert n_xfer == n_links
+        # every transfer delivery/stage request becomes an instant
+        for kind in ("transfer_deliver", "stage_request"):
+            n_in = sum(1 for e in events if e["kind"] == kind)
+            n_out = sum(1 for e in tevs if e.get("cat") == kind)
+            assert n_out == n_in
+        # lane metadata names every tid exactly once
+        tids = {e["tid"] for e in tevs if e["ph"] != "M"}
+        named = {e["tid"] for e in tevs if e["ph"] == "M"}
+        assert tids == named
+
+    def test_spans_exported_with_parents(self):
+        tr = TraceRecorder()
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, workers_per_node=1, clock=clk,
+                    trace=tr, spans=True)
+        try:
+            fix.on(c).submit(fib(6)).result(timeout=60)
+        finally:
+            c.shutdown()
+            clk.close()
+        doc = json.loads(export_json(tr.events))
+        spans = [e for e in doc["traceEvents"] if e.get("cat") == "span"]
+        assert spans
+        sids = {e["args"]["span"] for e in spans}
+        parents = {e["args"]["parent"] for e in spans
+                   if "parent" in e["args"]}
+        assert parents and parents <= sids
+
+    def test_export_file_and_cli(self, tmp_path):
+        out = tmp_path / "trace.json"
+        n = export_file(FIXTURE, str(out))
+        assert n == len(json.loads(out.read_text())["traceEvents"])
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.obs.perfetto", FIXTURE,
+             str(tmp_path / "cli.json")],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": str(Path(__file__).resolve().parent.parent
+                                   / "src"), "PATH": "/usr/bin:/bin"})
+        assert res.returncode == 0, res.stderr
+        assert (tmp_path / "cli.json").read_text() == out.read_text()
+
+
+class TestTopRenderer:
+    def _cluster_stats(self):
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, workers_per_node=1, clock=clk)
+        try:
+            be = fix.on(c)
+            be.submit(add(20, 22), tenant="acme").result(timeout=60)
+            return c.stats()
+        finally:
+            c.shutdown()
+            clk.close()
+
+    def test_render_cluster_snapshot(self):
+        text = render_snapshot(self._cluster_stats())
+        assert "backend=cluster" in text
+        assert "jobs:" in text and "submitted=" in text
+        assert "add" in text  # codelet table
+        assert "n0" in text and "n1" in text
+
+    def test_render_is_pure(self):
+        st = self._cluster_stats()
+        assert render_snapshot(st) == render_snapshot(st)
+
+    def test_render_tolerates_minimal_stats(self):
+        # the Backend.stats() default shape must render, not crash
+        text = render_snapshot({"backend": "none", "metrics": {},
+                                "codelets": {}})
+        assert "backend=none" in text
+
+    def test_render_serving_shape(self):
+        st = {"backend": {"backend": "local", "metrics": {}, "codelets": {}},
+              "serving": {"steps": 3, "decode_steps": 5, "blocks_total": 4,
+                          "blocks_hit": 2, "pending": 0, "active": 1,
+                          "finished": 2},
+              "tenants": {"a": {"queued": 0, "inflight": 1, "admitted": 2}}}
+        text = render_snapshot(st)
+        assert "== serving ==" in text
+        assert "prefix blocks: 2/4 hit (50%)" in text
+        assert "a" in text and "admitted" in text
+
+    def test_top_once_stats_file(self, tmp_path, capsys):
+        path = tmp_path / "stats.json"
+        path.write_text(json.dumps(self._cluster_stats()))
+        assert top_main(["--once", "--stats", str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "backend=cluster" in out
+
+    def test_top_once_demo(self, capsys):
+        assert top_main(["--once"]) == 0
+        assert "backend=cluster" in capsys.readouterr().out
+
+
+class TestServingStats:
+    def test_fixserve_stats_shape(self):
+        from repro.serving.admission import TenantQueue
+        from repro.serving.engine import Request
+        from repro.serving.fixserve import FixServeEngine
+        from repro.serving.model import make_weights
+        import numpy as np
+
+        weights = make_weights(seed=7, vocab=64, eos=0)
+        with fix.local() as be:
+            eng = FixServeEngine(be, weights, batch=2, block=8,
+                                 admission=TenantQueue())
+            reqs = [Request(rid=i,
+                            prompt=np.asarray(range(1, 17), np.int32),
+                            max_new=3, tenant=t)
+                    for i, t in enumerate(("a", "b"))]
+            eng.serve(reqs)
+            st = eng.stats()
+        assert st["backend"]["backend"] == "local"
+        assert st["serving"]["finished"] == 2
+        assert st["serving"]["decode_steps"] >= 1
+        assert set(st["tenants"]) == {"a", "b"}
+        for d in st["tenants"].values():
+            assert d["inflight"] == 0      # all released
+            assert d["admitted"] >= 1
+        # the nested shape renders through obs.top
+        assert "== serving ==" in render_snapshot(st)

@@ -1,0 +1,331 @@
+"""The PR-10 telemetry plane: registry determinism, unified stats across
+all three backends, causal spans, codelet profiles and the
+record → calibrate → replay seam, and the metric/trace lockstep
+invariant under seeded chaos.
+
+Two load-bearing contracts pinned here:
+
+* telemetry at defaults (metrics on, spans off) does not perturb a
+  ``VirtualClock`` schedule — the golden quickstart trace replays
+  byte-identically (the metrics plane never touches a clock);
+* every counter is incremented exactly where its trace event is
+  emitted, so under fault schedules full of retries and resubmits the
+  registry never double-counts: ``jobs_*`` metrics equal trace-derived
+  event counts and ``*_total`` transfer metrics equal the legacy
+  accounting fields.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import repro.fix as fix  # noqa: E402
+from repro.core.stdlib import add, fib, inc_chain  # noqa: E402
+from repro.runtime import (  # noqa: E402
+    Cluster,
+    CodeletProfile,
+    MetricsRegistry,
+    SpanEmitter,
+    TraceRecorder,
+    VirtualClock,
+)
+from repro.runtime.trace import percentile, replay_check, tenant_report  # noqa: E402
+from workloads import FIXTURE, run_chaos_case, run_quickstart  # noqa: E402
+
+pytestmark = pytest.mark.usefixtures("no_thread_leaks")
+
+
+# ------------------------------------------------------------- registry
+class TestRegistry:
+    def test_counter_gauge_histogram_roundtrip(self):
+        m = MetricsRegistry()
+        m.counter("jobs_finished").inc()
+        m.counter("jobs_finished", tenant="t0").inc(3)
+        m.gauge("queue_depth", link="n0->n1").set(7)
+        m.histogram("job_latency_s").observe(0.0004)
+        m.histogram("job_latency_s").observe(999.0)  # overflow bucket
+        snap = m.snapshot()
+        assert snap["counters"] == {"jobs_finished": 1,
+                                    "jobs_finished{tenant=t0}": 3}
+        assert snap["gauges"] == {"queue_depth{link=n0->n1}": 7}
+        h = snap["histograms"]["job_latency_s"]
+        assert h["count"] == 2
+        assert h["counts"][-1] == 1        # > last edge lands in overflow
+        assert sum(h["counts"]) == 2
+
+    def test_label_keys_sorted_and_cached(self):
+        m = MetricsRegistry()
+        a = m.counter("c", b="2", a="1")
+        b = m.counter("c", a="1", b="2")
+        assert a is b  # same instrument regardless of kwarg order
+        assert list(m.snapshot()["counters"]) == ["c{a=1,b=2}"]
+
+    def test_snapshot_byte_stable(self):
+        def build():
+            m = MetricsRegistry()
+            for t in ("b", "a"):
+                m.counter("jobs_submitted", tenant=t).inc(2)
+            m.histogram("job_latency_s").observe(0.01)
+            return json.dumps(m.snapshot(), sort_keys=True)
+        assert build() == build()
+
+
+# ------------------------------------------------------ percentile edges
+class TestPercentileEdges:
+    def test_empty_population(self):
+        assert percentile([], 50) == 0.0
+        assert percentile([], 0) == 0.0
+        assert percentile([], 100) == 0.0
+
+    def test_singleton(self):
+        for p in (0, 1, 50, 99, 100):
+            assert percentile([4.2], p) == 4.2
+
+    def test_extremes_clamp(self):
+        vals = [5.0, 1.0, 3.0]
+        assert percentile(vals, -10) == 1.0
+        assert percentile(vals, 0) == 1.0
+        assert percentile(vals, 100) == 5.0
+        assert percentile(vals, 250) == 5.0
+
+    def test_float_rank_no_bump(self):
+        # 0.55 * 20 == 11.000000000000002: must stay rank 11, not 12
+        vals = list(range(1, 21))
+        assert percentile(vals, 55) == 11
+
+    def test_tenant_report_empty_and_tagged(self):
+        assert tenant_report([]) == {}
+        evs = [{"seq": 0, "t": 0.0, "kind": "job_submit", "job": 1,
+                "tenant": "t0"},
+               {"seq": 1, "t": 0.5, "kind": "job_finish", "job": 1}]
+        rep = tenant_report(evs)
+        assert rep["t0"]["jobs"] == 1
+        assert rep["t0"]["finished"] == 1
+        # single-sample percentiles: the sample itself, p50 == p99
+        assert rep["t0"]["p50_latency_s"] == rep["t0"]["p99_latency_s"] == 0.5
+
+
+# ----------------------------------------------------- golden invariance
+class TestGoldenInvariance:
+    def test_quickstart_replay_identical_with_metrics_on(self):
+        # metrics default ON — this replay passing IS the zero-perturbation
+        # claim for the telemetry plane
+        diff = replay_check(lambda rec: run_quickstart(trace=rec), FIXTURE)
+        assert diff.identical, diff.explain()
+
+    def test_spans_are_pure_annotation(self):
+        """spans=True adds span_begin/span_end events but changes nothing
+        else: stripping them (and seq numbers) recovers the spans-off
+        stream exactly."""
+        def run(spans):
+            tr = TraceRecorder()
+            clk = VirtualClock()
+            c = Cluster(n_nodes=2, workers_per_node=1, clock=clk,
+                        trace=tr, spans=spans)
+            try:
+                be = fix.on(c)
+                futs = [be.submit(fib(6)), be.submit(add(20, 22))]
+                for f in futs:
+                    f.result(timeout=60)
+            finally:
+                c.shutdown()
+                clk.close()
+            return [e.to_dict() for e in tr.events]
+
+        plain, spanned = run(False), run(True)
+        assert not any(e["kind"].startswith("span_") for e in plain)
+        assert any(e["kind"] == "span_begin" for e in spanned)
+        assert any(e["kind"] == "span_end" for e in spanned)
+
+        def strip(evs):
+            return [{k: v for k, v in e.items() if k != "seq"}
+                    for e in evs if not e["kind"].startswith("span_")]
+        assert strip(spanned) == strip(plain)
+
+    def test_span_parent_links_resolve(self):
+        tr = TraceRecorder()
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, workers_per_node=1, clock=clk,
+                    trace=tr, spans=True)
+        try:
+            fix.on(c).submit(fib(6)).result(timeout=60)
+        finally:
+            c.shutdown()
+            clk.close()
+        begins = {e.fields["span"]: e.fields
+                  for e in tr.events if e.kind == "span_begin"}
+        ends = [e.fields["span"] for e in tr.events if e.kind == "span_end"]
+        assert begins
+        for sid, f in begins.items():
+            if f["parent"] is not None:
+                assert f["parent"] in begins  # every parent is a real span
+        assert set(ends) <= set(begins)       # ends close known spans
+        # at least one child job hangs off the root (fib recursion)
+        assert any(f["parent"] is not None for f in begins.values())
+
+
+# -------------------------------------------------------- unified stats
+class TestUnifiedStats:
+    def test_local_backend_stats(self):
+        with fix.local() as be:
+            assert be.run(add(40, 2))
+            st = be.stats()
+        assert st["backend"] == "local"
+        assert "metrics" in st
+        assert st["codelets"]["add"]["count"] >= 1
+        assert st["codelets"]["add"]["total_ns"] > 0
+
+    def test_cluster_backend_stats(self):
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, workers_per_node=1, clock=clk)
+        try:
+            be = fix.on(c)
+            be.submit(add(1, 2)).result(timeout=60)
+            be.submit(add(1, 2), tenant="acme").result(timeout=60)
+            st = be.stats()
+        finally:
+            c.shutdown()
+            clk.close()
+        assert st["backend"] == "cluster"
+        cnt = st["metrics"]["counters"]
+        assert cnt["jobs_submitted"] >= 1
+        # the second submit is a memo hit billed to the tenant label
+        assert cnt.get("jobs_memo_hit{tenant=acme}", 0) == 1
+        assert st["codelets"]["add"]["count"] >= 1
+        assert set(st["nodes"]) == {"client", "n0", "n1"}
+
+    def test_metrics_off_is_supported(self):
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, workers_per_node=1, clock=clk, metrics=False)
+        try:
+            fix.on(c).submit(add(1, 2)).result(timeout=60)
+            st = c.stats()
+        finally:
+            c.shutdown()
+            clk.close()
+        assert st["metrics"] == {}
+        assert st["transfers"] == 0 or st["transfers"] >= 0  # legacy intact
+
+    def test_remote_backend_stats(self):
+        with fix.remote(n_workers=1) as be:
+            assert be.run(add(40, 2), timeout=60)
+            st = be.stats()
+            prof = be.codelet_profile()
+        assert st["backend"] == "remote"
+        assert st["metrics"]["counters"]["jobs_submitted"] >= 1
+        assert st["metrics"]["counters"]["jobs_finished"] >= 1
+        # lockstep with the legacy accounting fields
+        assert st["metrics"]["counters"]["transfers_total"] == st["transfers"]
+        assert (st["metrics"]["counters"]["bytes_moved_total"]
+                == st["bytes_moved"])
+        # worker wall profile shipped back in the ran reply
+        assert st["codelets"]["add"]["count"] >= 1
+        assert prof.calibrate()["add"] > 0.0
+        assert "recovery" in st and "store" in st  # legacy keys intact
+
+    def test_tenant_labels_agree_with_tenant_report(self):
+        tr = TraceRecorder()
+        clk = VirtualClock()
+        c = Cluster(n_nodes=2, workers_per_node=1, clock=clk, trace=tr)
+        try:
+            be = fix.on(c)
+            be.submit(inc_chain(0, 3), tenant="t0").result(timeout=60)
+            be.submit(add(5, 5), tenant="t1").result(timeout=60)
+            st = c.stats()
+        finally:
+            c.shutdown()
+            clk.close()
+        rep = tenant_report(tr.events)
+        cnt = st["metrics"]["counters"]
+        for ten in ("t0", "t1"):
+            assert cnt[f"jobs_submitted{{tenant={ten}}}"] == rep[ten]["jobs"]
+            assert (cnt[f"jobs_finished{{tenant={ten}}}"]
+                    == rep[ten]["finished"])
+
+
+# ------------------------------------------------- calibration (item 3)
+class TestCalibration:
+    def test_remote_profile_calibrates_virtual_clock(self):
+        """The record → model → replay seam: wall timings from a real
+        fix.remote() run, folded into a CodeletProfile, change the
+        simulated makespan of a compute-heavy workload once installed
+        via Cluster(compute_model=...)."""
+        with fix.remote(n_workers=1) as be:
+            assert be.run(fib(10), timeout=120)
+            prof = be.codelet_profile()
+        assert len(prof) >= 1
+        model = prof.calibrate()
+        assert model["fib"] > 0.0
+
+        def makespan(compute_model):
+            clk = VirtualClock()
+            c = Cluster(n_nodes=2, workers_per_node=1, clock=clk,
+                        compute_model=compute_model)
+            try:
+                fix.on(c).submit(fib(10)).result(timeout=120)
+                return clk.now()
+            finally:
+                c.shutdown()
+                clk.close()
+
+        free = makespan(None)
+        charged = makespan(prof)  # CodeletProfile accepted directly
+        assert charged > free
+        # the charge is the modeled per-application cost, deterministically
+        assert makespan(prof) == charged
+
+    def test_profile_serialization_roundtrip(self, tmp_path):
+        p = CodeletProfile()
+        p.record("fib", 3_000_000, count=3)
+        p.update([("add", 2, 500_000)])
+        path = tmp_path / "prof.json"
+        p.save(str(path))
+        q = CodeletProfile.load(str(path))
+        assert q.to_dict() == p.to_dict()
+        assert q.calibrate() == {"add": 500_000 / 2 * 1e-9,
+                                 "fib": 3_000_000 / 3 * 1e-9}
+
+    def test_span_emitter_standalone(self):
+        tr = TraceRecorder()
+        sp = SpanEmitter(tr)
+        root = sp.begin("request", rid=1)
+        child = sp.begin("job", parent=root, job=7)
+        sp.end(child, status="ok")
+        sp.end(root)
+        sp.end(None)  # no-op by contract
+        kinds = [e.kind for e in tr.events]
+        assert kinds == ["span_begin", "span_begin", "span_end", "span_end"]
+        assert tr.events[1].fields["parent"] == root
+
+
+# ------------------------------------------------------ chaos lockstep
+class TestChaosLockstep:
+    @pytest.mark.parametrize("seed", [3, 11])
+    def test_no_double_counting_under_faults(self, seed):
+        """Metric/trace lockstep under seeded fault schedules: retries,
+        resubmits and recomputes must not double-count.  The registry's
+        jobs_* counters equal trace-derived event counts, and the
+        transfer counters equal the cluster's legacy accounting."""
+        tr = TraceRecorder()
+        res = run_chaos_case(seed, trace=tr)
+        assert res["violations"] == []
+        st = res["fault_stats"]
+        cnt = st["metrics"]["counters"]
+
+        def total(name):
+            return sum(v for k, v in cnt.items()
+                       if k == name or k.startswith(name + "{"))
+
+        kinds = {}
+        for e in tr.events:
+            kinds[e.kind] = kinds.get(e.kind, 0) + 1
+        assert total("jobs_submitted") == kinds.get("job_submit", 0)
+        assert total("jobs_finished") == kinds.get("job_finish", 0)
+        assert total("jobs_failed") == kinds.get("job_fail", 0)
+        assert total("jobs_cancelled") == kinds.get("job_cancel", 0)
+        assert total("jobs_memo_hit") == kinds.get("job_memo_hit", 0)
+        assert total("transfers_total") == st["transfers"]
+        assert total("bytes_moved_total") == st["bytes_moved"]

@@ -143,9 +143,9 @@ class TestPrefetch:
             dests = []
             orig_submit = c._xfer.submit
 
-            def recording_submit(src, dst, items):
+            def recording_submit(src, dst, items, **kw):
                 dests.append(dst)
-                return orig_submit(src, dst, items)
+                return orig_submit(src, dst, items, **kw)
 
             c._xfer.submit = recording_submit
             c.kill_node("n1")

@@ -198,18 +198,25 @@ def run_workload(spec: WorkloadSpec, *, placement: str = "locality",
                 outcomes.append(("ok", h.raw.hex()))
         makespan = clk.now() - t0
         util = c.utilization(makespan)
-        return {
-            "makespan": makespan,
-            "transfers": c.transfers,
-            "bytes_moved": c.bytes_moved,
-            "busy_frac": util["busy_frac"],
-            "starved_frac": util["starved_frac"],
-            "results": tuple(h.raw.hex() for h in results),
-            "outcomes": tuple(outcomes),
-        }
     finally:
         c.shutdown()
         clk.close()
+    # summary AFTER shutdown: teardown may still fail/cancel stragglers,
+    # and the stats snapshot must cover the same window as the trace.
+    # The codelet profile is wall-time measurement, not schedule output —
+    # drop it so double-run summaries stay comparable for determinism.
+    stats = c.stats()
+    stats.pop("codelets", None)
+    return {
+        "makespan": makespan,
+        "transfers": c.transfers,
+        "bytes_moved": c.bytes_moved,
+        "busy_frac": util["busy_frac"],
+        "starved_frac": util["starved_frac"],
+        "results": tuple(h.raw.hex() for h in results),
+        "outcomes": tuple(outcomes),
+        "stats": stats,
+    }
 
 
 # ------------------------------------------------------------ chaos cases
@@ -314,6 +321,7 @@ def run_chaos_case(seed: int, trace: TraceRecorder | None = None) -> dict:
         "mismatches": mismatches,
         "bad_failures": bad_failures,
         "violations": verify_invariants(tr.events),
+        "fault_stats": res["stats"],
     }
 
 
